@@ -1,0 +1,26 @@
+"""Shared benchmark helpers: timing + the CSV row contract."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+
+def time_call(fn: Callable, *args, repeats: int = 5, warmup: int = 2) -> float:
+    """Median wall time per call in microseconds (jit warmup excluded)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def emit(name: str, us_per_call: float, derived: str) -> str:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    print(row)
+    return row

@@ -1,0 +1,30 @@
+"""Fig. 6: energy per neuron update for IF / LIF / RMP via the in-memory
+instruction sequences, plus wall time of the bit-accurate sequence."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core import energy, isa, macro
+
+PAPER = {"if": 1.81, "lif": 2.67, "rmp": 1.68}
+
+
+def run() -> list[str]:
+    rows = []
+    rng = np.random.default_rng(0)
+    wq = rng.integers(-31, 32, (isa.MACRO_IN, isa.MACRO_OUT)).astype(np.int8)
+    for neuron in ("if", "lif", "rmp"):
+        bm = macro.BitMacro.from_weights(wq, threshold=50, leak=2)
+        us = time_call(lambda bm=bm, n=neuron: bm.neuron_update(0, n),
+                       repeats=3, warmup=1)
+        pj = energy.neuron_update_energy_pj(neuron)
+        rows.append(emit(
+            f"fig6_{neuron}_update", us,
+            f"energy={pj:.2f}pJ paper={PAPER[neuron]}pJ "
+            f"err={abs(pj-PAPER[neuron])/PAPER[neuron]*100:.1f}%"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

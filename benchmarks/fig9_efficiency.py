@@ -1,0 +1,50 @@
+"""Fig. 9a + Table I supply columns: power and energy-efficiency per
+instruction across operating points; wall time of the fused Pallas kernel for
+the equivalent work (TPU-target path, interpret mode on CPU)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core import energy
+from repro.core.isa import InstrCount
+from repro.kernels.fused_snn_step.ops import fused_snn_layer
+
+PAPER_POINTS = {  # vdd -> (freq MHz, power mW, TOPS/W)
+    "A(0.7V)": (66.67, 0.072, 0.91),
+    "D(0.85V)": (200.0, 0.201, 0.99),
+    "G(1.2V)": (500.0, 0.88, 0.57),
+}
+
+
+def run() -> list[str]:
+    rows = []
+    for pt in energy.OPERATING_POINTS:
+        freq_mhz, p_mw, topsw = PAPER_POINTS[pt.name]
+        rows.append(emit(
+            f"fig9_point_{pt.name}", 1e6 / pt.freq_hz,
+            f"freq={pt.freq_hz/1e6:.0f}MHz power={pt.power_w*1e3:.3f}mW "
+            f"AccW2V={energy.tops_per_watt(pt):.2f}TOPS/W paper={topsw}"))
+    # per-instruction efficiency at point D (Fig. 9a inset)
+    d = energy.POINT_D
+    for instr, topsw in energy.TOPS_W_D.items():
+        e = energy.instr_energy_j(instr, d)
+        rows.append(emit(f"fig9_instr_{instr}", 1e6 / d.freq_hz,
+                         f"TOPS/W={topsw} E/op={e*1e12:.3f}pJ"))
+    # the TPU-path equivalent: one fused timestep of a 128x128 layer
+    rng = np.random.default_rng(0)
+    spikes = jnp.asarray((rng.random((10, 8, 128)) < 0.15).astype(np.int8))
+    wq = jnp.asarray(rng.integers(-31, 32, (128, 128)).astype(np.int8))
+    us = time_call(lambda: fused_snn_layer(spikes, wq, threshold=60,
+                                           neuron="rmp", interpret=True))
+    events = int(np.asarray(spikes).sum())
+    cnt = InstrCount(acc_w2v=2 * events, spike_check=2 * 8 * 10, acc_v2v=2 * 8 * 10)
+    rows.append(emit("fig9_fused_kernel_10steps", us,
+                     f"macro_energy={energy.sequence_energy_j(cnt)*1e9:.2f}nJ "
+                     f"events={events}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""Roofline report: reads artifacts/dryrun/*.json (produced by
+repro.launch.dryrun) and prints/serialises the per-(arch x shape x mesh)
+roofline table for EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def load_cells(mesh: str = "single", tag: str = "") -> list[dict]:
+    cells = []
+    d = ART / mesh
+    if not d.exists():
+        return cells
+    for fp in sorted(d.glob("*.json")):
+        stem = fp.stem
+        if tag and not stem.endswith(f"__{tag}"):
+            continue
+        if not tag and stem.count("__") > 1:
+            continue
+        cells.append(json.loads(fp.read_text()))
+    return cells
+
+
+def fraction_of_roofline(c: dict) -> float:
+    """compute term / max(all terms): 1.0 == compute-bound at the roofline."""
+    t = c["roofline_terms_s"]
+    bound = max(t.values())
+    return (t["compute_s"] / bound) if bound else 0.0
+
+
+def run(mesh: str = "single") -> list[str]:
+    rows = []
+    for c in load_cells(mesh):
+        name = f"roofline_{c['arch']}_{c['shape']}"
+        if c.get("skipped"):
+            rows.append(emit(name, 0.0, f"SKIP: {c['skipped']}"))
+            continue
+        t = c["roofline_terms_s"]
+        rows.append(emit(
+            name, t["compute_s"] * 1e6,
+            f"dom={c['dominant'].replace('_s','')} "
+            f"comp={t['compute_s']:.2e}s mem={t['memory_s']:.2e}s "
+            f"coll={t['collective_s']:.2e}s frac={fraction_of_roofline(c):.3f} "
+            f"useful={c['useful_ratio']:.2f} "
+            f"peak={c['peak_bytes_per_device']/2**30:.1f}GiB fits={c['fits_16GiB']}"))
+    if not rows:
+        rows.append(emit("roofline_missing", 0.0,
+                         "run: python -m repro.launch.dryrun --all first"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,34 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: one module per paper figure/table plus the roofline
+report derived from the dry-run artifacts.
+
+    PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (fig6_neuron_energy, fig9_accuracy, fig9_efficiency,
+                            fig11_sparsity_edp, roofline, table1_comparison)
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    mods = [("fig6", fig6_neuron_energy), ("fig9_eff", fig9_efficiency),
+            ("fig9_acc", fig9_accuracy), ("fig11", fig11_sparsity_edp),
+            ("table1", table1_comparison), ("roofline", roofline)]
+    failures = 0
+    for name, mod in mods:
+        try:
+            mod.run()
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name}_FAILED,0,{e!r}")
+    print(f"# total {time.time()-t0:.0f}s, failures={failures}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

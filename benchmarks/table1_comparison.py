@@ -1,0 +1,44 @@
+"""Table I: this work's row reproduced from the calibrated model (area,
+supply/frequency/power points, performance/area, TOPS/W), with the paper's
+reported competitor rows for context."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import energy
+
+COMPETITORS = [
+    # name, tech, type, precision, TOPS/W (as reported in Table I)
+    ("VLSI15_6T", "28nm", "CIM CAM/logic", "-", None),
+    ("CICC17_time", "65nm", "SNN time-based", "3b/8b", 0.019),
+    ("ISSCC19_8T", "28nm", "CIM CNN/FC", "8b", 0.97),
+    ("VLSI20_ZPIM", "65nm", "CIM CNN", "16b", 0.31),
+    ("ASSCC20_async", "65nm", "SNN async", "1b/6b", 0.67),
+]
+
+
+def run() -> list[str]:
+    rows = []
+    rows.append(emit("table1_area", 0.0,
+                     f"area={energy.AREA_MM2}mm2 mem_eff={energy.MEM_AREA_EFFICIENCY*100:.1f}% "
+                     f"tech={energy.TECH_NM}nm bitcell=10T precision=6b/11b"))
+    for pt in energy.OPERATING_POINTS:
+        rows.append(emit(
+            f"table1_this_work_{pt.name}", 1e6 / pt.freq_hz,
+            f"V={pt.vdd} f={pt.freq_hz/1e6:.0f}MHz P={pt.power_w*1e3:.3f}mW "
+            f"GOPS/mm2={energy.gops_per_mm2(pt):.2f} "
+            f"TOPS/W={energy.tops_per_watt(pt):.2f}"))
+    ours = energy.tops_per_watt(energy.POINT_D)
+    for name, tech, typ, prec, topsw in COMPETITORS:
+        if topsw is None:
+            rows.append(emit(f"table1_{name}", 0.0, f"{tech} {typ} {prec} TOPS/W=n/a"))
+        else:
+            rows.append(emit(f"table1_{name}", 0.0,
+                             f"{tech} {typ} {prec} TOPS/W={topsw} "
+                             f"ours/theirs={ours/topsw:.2f}x"))
+    rows.append(emit("table1_flexible_neuron", 0.0,
+                     "this_work=IF+LIF+RMP via ISA; all competitors fixed"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

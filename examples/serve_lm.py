@@ -1,0 +1,12 @@
+"""Serve a small LM with batched requests through the continuous-batching
+engine (the paper is an inference macro, so serving is the end-to-end driver
+for the LM stack; the SNN driver is train_sentiment_snn.py).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch rwkv6-7b --requests 6
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -1,0 +1,18 @@
+"""repro: IMPULSE (fused-weight/membrane-potential CIM macro) as a JAX framework.
+
+Layers:
+  core/        -- the paper's contribution: quantization, neurons, macro ISA,
+                  bit-accurate silicon model, energy model, spiking layers.
+  kernels/     -- Pallas TPU kernels (fused SNN timestep, RWKV6 fused state).
+  models/      -- assigned LM architectures + paper SNNs.
+  data/        -- data pipelines.
+  optim/       -- optimizers.
+  checkpoint/  -- sharded async checkpointing.
+  train/       -- fault-tolerant training loop.
+  serve/       -- batched serving engine.
+  dist/        -- sharding rules, grad compression, pipeline parallelism.
+  configs/     -- architecture configs (one per assigned arch).
+  launch/      -- mesh / dryrun / train / serve entry points.
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,158 @@
+"""Sharded async checkpointing (no orbax): atomic, keep-N, elastic restore.
+
+Layout:  <dir>/step_<N>/
+            manifest.json            tree structure, shapes, dtypes
+            shard_<k>.npz            one file per host-local save group
+
+Properties required at pod scale (DESIGN.md §5):
+  * async  -- device->host transfer happens on the caller thread (cheap),
+    serialization+fsync on a background thread; training continues.
+  * atomic -- writes go to step_<N>.tmp, fsync'd, then os.rename'd; a crash
+    mid-save never corrupts the latest complete checkpoint.
+  * elastic -- the manifest stores LOGICAL (global) shapes; restore reshards
+    onto whatever mesh/sharding the restoring job passes (device_put with the
+    new sharding), so pod counts can change across restarts.
+  * keep-N -- old steps garbage-collected after a successful save.
+
+In multi-host deployment each host saves only addressable shards (the
+`local_slice` hook); this container is single-host so shard_0 holds all.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# numpy's npz format doesn't round-trip ml_dtypes; store them as bit views
+_VIEW_AS = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+            "float8_e5m2": np.uint8}
+
+
+def _to_storable(x: np.ndarray) -> np.ndarray:
+    view = _VIEW_AS.get(str(x.dtype))
+    return x.view(view) if view is not None else x
+
+
+def _from_storable(x: np.ndarray, dtype_str: str) -> np.ndarray:
+    if dtype_str in _VIEW_AS:
+        return x.view(getattr(ml_dtypes, dtype_str))
+    return x
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    keys = ["/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+            for path, _ in flat]
+    return keys, [leaf for _, leaf in flat], treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, tree: Any, blocking: bool = False) -> None:
+        self.wait()                                  # one in-flight save max
+        keys, leaves, _ = _flatten_with_paths(tree)
+        # device -> host on caller thread (consistent snapshot)
+        host_leaves = [np.asarray(x) for x in leaves]
+
+        def _write():
+            try:
+                tmp = self.dir / f"step_{step}.tmp"
+                final = self.dir / f"step_{step}"
+                if tmp.exists():
+                    shutil.rmtree(tmp)
+                tmp.mkdir(parents=True)
+                manifest = {
+                    "step": step,
+                    "keys": keys,
+                    "shapes": [list(x.shape) for x in host_leaves],
+                    "dtypes": [str(x.dtype) for x in host_leaves],
+                    "format": 1,
+                }
+                np.savez(tmp / "shard_0.npz",
+                         **{f"a{i}": _to_storable(x)
+                            for i, x in enumerate(host_leaves)})
+                with open(tmp / "manifest.json", "w") as f:
+                    json.dump(manifest, f)
+                    f.flush()
+                    os.fsync(f.fileno())
+                if final.exists():
+                    shutil.rmtree(final)
+                os.rename(tmp, final)
+                self._gc()
+            except BaseException as e:               # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+        if blocking:
+            self.wait()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self) -> None:
+        steps = sorted(self.all_steps())
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)
+
+    # -- restore ------------------------------------------------------------
+    def all_steps(self) -> list[int]:
+        out = []
+        for p in self.dir.glob("step_*"):
+            if p.is_dir() and not p.name.endswith(".tmp"):
+                try:
+                    out.append(int(p.name.split("_")[1]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: Optional[int] = None, *, like: Any = None,
+                shardings: Any = None) -> tuple[int, Any]:
+        """Load a checkpoint. `like` (a pytree of arrays or ShapeDtypeStructs)
+        provides the treedef; `shardings` (matching pytree of NamedSharding)
+        reshards onto the current mesh — the elastic-restart path."""
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        d = self.dir / f"step_{step}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        data = np.load(d / "shard_0.npz")
+        leaves = [_from_storable(data[f"a{i}"], manifest["dtypes"][i])
+                  for i in range(len(manifest["keys"]))]
+        if like is not None:
+            like_keys, like_leaves, treedef = _flatten_with_paths(like)
+            assert like_keys == manifest["keys"], "checkpoint/tree mismatch"
+            if shardings is not None:
+                _, shard_leaves, _ = _flatten_with_paths(shardings)
+                leaves = [jax.device_put(x.astype(l.dtype), s)
+                          for x, l, s in zip(leaves, like_leaves, shard_leaves)]
+            else:
+                leaves = [jax.device_put(x.astype(l.dtype))
+                          for x, l in zip(leaves, like_leaves)]
+            return step, jax.tree_util.tree_unflatten(treedef, leaves)
+        return step, leaves

@@ -1,0 +1,351 @@
+"""Config system: model / shape / parallelism / run configs and the registry.
+
+Every assigned architecture gets a ``configs/<id>.py`` that builds a
+:class:`ModelConfig` and registers it. Shapes are global (the four assigned
+input-shape cells). A :class:`RunConfig` binds (model, shape, mesh, sharding).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+# ---------------------------------------------------------------------------
+# Model config
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 0              # routed experts (0 = dense)
+    top_k: int = 1
+    n_shared_experts: int = 0
+    d_ff: int = 0                   # per-expert hidden dim
+    every: int = 1                  # MoE on layers where (idx % every == every-1)
+    first_k_dense: int = 0          # leading dense layers (deepseek style)
+    dense_d_ff: int = 0             # ffn dim of the dense layers interleaved w/ MoE
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek multi-head latent attention."""
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 0            # 0 = direct q projection (V2-Lite)
+    rope_head_dim: int = 64
+    nope_head_dim: int = 128
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba block (Jamba's SSM layers)."""
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 256
+
+
+@dataclass(frozen=True)
+class RWKVConfig:
+    head_size: int = 64             # rwkv6 head size; n_heads = d_model // head_size
+
+
+@dataclass(frozen=True)
+class SpikingConfig:
+    """IMPULSE integration: spiking FFN / paper SNN settings."""
+    neuron: str = "rmp"             # if | lif | rmp
+    timesteps: int = 10
+    threshold: float = 1.0
+    leak: float = 0.0625
+    w_bits: int = 6                 # paper: 6-bit signed weights
+    v_bits: int = 11                # paper: 11-bit signed membrane potential
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str                     # dense | moe | hybrid | ssm | audio | vlm | snn
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 128
+    # positional / norm
+    rope_theta: float = 500000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    # attention layout (hybrid archs)
+    attn_layer_period: int = 1      # attention on layers where idx % period == attn_layer_offset
+    attn_layer_offset: int = 0      # (period=1 -> all layers are attention)
+    ffn_type: str = "swiglu"        # swiglu (3 mats) | gelu (2 mats)
+    # sub-configs
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rwkv: Optional[RWKVConfig] = None
+    spiking: Optional[SpikingConfig] = None
+    # encoder-decoder (whisper)
+    is_encoder_decoder: bool = False
+    n_encoder_layers: int = 0
+    # modality frontend stubs
+    frontend: str = "none"          # none | audio_stub | vision_stub
+    vision_patch_frac: float = 0.25  # fraction of seq that is image patches (vlm)
+    # numerics
+    dtype: str = "bfloat16"
+    # capabilities
+    supports_long_context: bool = False   # sub-quadratic path exists (SSM/linear)
+    notes: str = ""
+
+    # -- derived ------------------------------------------------------------
+    def is_attention_layer(self, idx: int) -> bool:
+        return idx % self.attn_layer_period == self.attn_layer_offset
+
+    def is_moe_layer(self, idx: int) -> bool:
+        if self.moe is None or self.moe.n_experts == 0:
+            return False
+        if idx < self.moe.first_k_dense:
+            return False
+        return idx % self.moe.every == self.moe.every - 1
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        n = self.vocab_size * self.d_model                       # embed
+        if not self.tie_embeddings:
+            n += self.vocab_size * self.d_model                  # lm head
+        for i in range(self.n_layers):
+            n += self._block_params(i)
+        if self.is_encoder_decoder:
+            for _ in range(self.n_encoder_layers):
+                n += self._encoder_block_params()
+        return n
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: only routed top-k + shared)."""
+        n = self.vocab_size * self.d_model
+        if not self.tie_embeddings:
+            n += self.vocab_size * self.d_model
+        for i in range(self.n_layers):
+            n += self._block_params(i, active_only=True)
+        if self.is_encoder_decoder:
+            for _ in range(self.n_encoder_layers):
+                n += self._encoder_block_params()
+        return n
+
+    def _attn_params(self) -> int:
+        d = self.d_model
+        if self.mla is not None:
+            m = self.mla
+            qd = self.n_heads * (m.nope_head_dim + m.rope_head_dim)
+            n = d * qd if m.q_lora_rank == 0 else d * m.q_lora_rank + m.q_lora_rank * qd
+            n += d * (m.kv_lora_rank + m.rope_head_dim)          # kv down (+ shared rope key)
+            n += m.kv_lora_rank * self.n_heads * (m.nope_head_dim + m.v_head_dim)
+            n += self.n_heads * m.v_head_dim * d                 # o proj
+            return n
+        return d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+
+    def _ffn_params(self, d_ff: int) -> int:
+        mats = 3 if self.ffn_type == "swiglu" else 2             # swiglu | gelu
+        return mats * self.d_model * d_ff
+
+    def _ssm_params(self) -> int:
+        assert self.ssm is not None
+        s, d = self.ssm, self.d_model
+        d_in = s.expand * d
+        n = 2 * d * d_in                                          # in_proj (x, z)
+        n += d_in * s.d_conv                                      # conv1d
+        n += d_in * (s.dt_rank + 2 * s.d_state)                   # x -> (dt, B, C)
+        n += s.dt_rank * d_in                                     # dt proj
+        n += d_in * s.d_state + d_in                              # A_log, D
+        n += d_in * d                                             # out proj
+        return n
+
+    def _rwkv_params(self) -> int:
+        d = self.d_model
+        # time-mix: r,k,v,g,o projections + decay/first + lora token-shift (small)
+        n = 5 * d * d + 2 * d + 6 * d * 32 * 2
+        # channel-mix: k (d->ff), v (ff->d), receptance gate (d->d)
+        n += 2 * d * self.d_ff + d * d
+        return n
+
+    def _block_params(self, idx: int, active_only: bool = False) -> int:
+        n = 2 * self.d_model                                      # norms
+        if self.rwkv is not None:
+            return n + self._rwkv_params()
+        if self.is_attention_layer(idx):
+            n += self._attn_params()
+            if self.is_encoder_decoder:
+                n += 4 * self.d_model * self.d_model              # cross-attention
+        else:
+            n += self._ssm_params()
+        if self.is_moe_layer(idx):
+            m = self.moe
+            k = (m.top_k if active_only else m.n_experts) + m.n_shared_experts
+            n += k * self._ffn_params(m.d_ff)
+            n += self.d_model * m.n_experts                       # router
+        else:
+            d_ff = self.d_ff
+            if self.moe is not None and self.moe.dense_d_ff:
+                d_ff = self.moe.dense_d_ff
+            n += self._ffn_params(d_ff)
+        return n
+
+    def _encoder_block_params(self) -> int:
+        d = self.d_model
+        # MHA + (decoder adds cross-attn, counted in block for enc-dec decoders)
+        return 2 * d + 4 * d * d + self._ffn_params(self.d_ff)
+
+
+# ---------------------------------------------------------------------------
+# Shapes (the assigned input-shape cells)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                       # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Parallelism / run config
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ParallelConfig:
+    """How logical axes map onto the mesh, plus memory policies."""
+    fsdp: bool = True               # shard weights over the data axis, gather on use
+    seq_parallel: bool = True       # shard boundary activations' seq over model axis
+    expert_parallel: bool = True    # shard experts over model axis
+    remat: str = "block"            # none | block | full
+    microbatches: int = 1           # gradient accumulation splits
+    grad_compress: bool = False     # int8 + error feedback on cross-data reduction
+    vocab_chunking: int = 0         # compute logits/loss in N seq chunks (0=off)
+    scan_layers: bool = True        # lax.scan over homogeneous layer stacks
+    unroll_time_scans: bool = False  # unroll chunked rwkv/mamba time scans
+                                     # (dry-run cost accounting; see dryrun.py)
+    attn_q_chunk: int = 0           # >0: flash-style blocked attention with
+    attn_kv_block: int = 1024       #   this q-chunk size (§Perf hillclimb)
+    moe_constraints: bool = False   # EP sharding constraints inside MoE dispatch
+    moe_gather_dispatch: bool = False  # gather-only MoE dispatch (§Perf)
+    state_constraints: bool = False  # shard SSM scan tensors (batch x model)
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    model: ModelConfig
+    shape: ShapeConfig
+    parallel: ParallelConfig = field(default_factory=ParallelConfig)
+    optimizer: str = "adamw"        # sgd | adam | adamw | adafactor
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    seed: int = 0
+
+    def replace(self, **kw) -> "RunConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, ModelConfig] = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    if cfg.arch_id in _REGISTRY:
+        raise ValueError(f"duplicate arch id {cfg.arch_id}")
+    _REGISTRY[cfg.arch_id] = cfg
+    return cfg
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    _ensure_loaded()
+    if arch_id not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[arch_id]
+
+
+def list_archs() -> list[str]:
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+_LOADED = False
+
+ASSIGNED_ARCHS = [
+    "rwkv6-7b", "llama3-8b", "starcoder2-15b", "llama3.2-1b", "phi3-medium-14b",
+    "whisper-large-v3", "jamba-v0.1-52b", "llama4-maverick-400b-a17b",
+    "deepseek-v2-lite-16b", "llava-next-mistral-7b",
+]
+
+
+def _ensure_loaded() -> None:
+    """Import every config module once so registration side-effects run."""
+    global _LOADED
+    if _LOADED:
+        return
+    _LOADED = True
+    from repro.configs import (  # noqa: F401
+        rwkv6_7b, llama3_8b, starcoder2_15b, llama3_2_1b, phi3_medium_14b,
+        whisper_large_v3, jamba_v0_1_52b, llama4_maverick_400b_a17b,
+        deepseek_v2_lite_16b, llava_next_mistral_7b, impulse_snn,
+    )
+
+
+def reduced_config(cfg: ModelConfig) -> ModelConfig:
+    """Shrink a config to smoke-test size, preserving the family structure
+    (one full super-block period: the interleave pattern survives)."""
+    import math
+    period = cfg.attn_layer_period
+    if cfg.moe is not None and cfg.moe.n_experts:
+        period = math.lcm(period, cfg.moe.every)
+    first_dense = cfg.moe.first_k_dense if cfg.moe is not None else 0
+    kw: dict = dict(
+        n_layers=max(period, 2) + first_dense,
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2) if cfg.n_kv_heads < cfg.n_heads else 4,
+        head_dim=32,
+        d_ff=256,
+        vocab_size=512,
+    )
+    if cfg.moe is not None:
+        kw["moe"] = dataclasses.replace(
+            cfg.moe,
+            n_experts=min(cfg.moe.n_experts, 4),
+            top_k=min(cfg.moe.top_k, 2),
+            d_ff=64 if cfg.moe.d_ff else 0,
+            dense_d_ff=256 if cfg.moe.dense_d_ff else 0,
+        )
+    if cfg.mla is not None:
+        kw["mla"] = MLAConfig(kv_lora_rank=32, q_lora_rank=0,
+                              rope_head_dim=16, nope_head_dim=32, v_head_dim=32)
+        kw["head_dim"] = 32
+    if cfg.ssm is not None:
+        kw["ssm"] = SSMConfig(d_state=8, d_conv=4, expand=2, dt_rank=16)
+    if cfg.rwkv is not None:
+        kw["rwkv"] = RWKVConfig(head_size=32)
+        kw["n_heads"] = 128 // 32
+    if cfg.is_encoder_decoder:
+        kw["n_encoder_layers"] = 2
+    return dataclasses.replace(cfg, arch_id=cfg.arch_id + "-smoke", **kw)

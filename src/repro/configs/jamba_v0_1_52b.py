@@ -1,0 +1,30 @@
+"""Jamba v0.1 52B — hybrid Mamba+attention (1:7 interleave), MoE 16e top-2.
+[arXiv:2403.19887; hf]
+
+The SSM state of the 28/32 Mamba layers is the membrane-potential analogue;
+the fused-state structure (IMPULSE's contribution) applies directly to the
+selective-scan update. long_500k runs (hybrid, sub-quadratic in the Mamba
+layers; the 4 attention layers use a sharded KV cache).
+"""
+from repro.configs.base import ModelConfig, MoEConfig, SSMConfig, register
+
+CONFIG = register(ModelConfig(
+    arch_id="jamba-v0.1-52b",
+    family="hybrid",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=65536,
+    # attention on 1 of every 8 layers (offset 4), mamba elsewhere — 1:7
+    attn_layer_period=8,
+    attn_layer_offset=4,
+    ssm=SSMConfig(d_state=16, d_conv=4, expand=2, dt_rank=256),
+    # MoE every other layer, 16 experts top-2 (expert ffn = d_ff)
+    moe=MoEConfig(n_experts=16, top_k=2, n_shared_experts=0, d_ff=14336,
+                  every=2, dense_d_ff=14336),
+    supports_long_context=True,
+    notes="hybrid; long_500k runs",
+))

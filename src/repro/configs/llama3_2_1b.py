@@ -1,0 +1,17 @@
+"""Llama-3.2 1B — small llama3, tied embeddings. [hf:meta-llama/Llama-3.2-1B]"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    arch_id="llama3.2-1b",
+    family="dense",
+    n_layers=16,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=128256,
+    rope_theta=500000.0,
+    tie_embeddings=True,
+    notes="long_500k skipped: pure full attention",
+))

@@ -1,0 +1,16 @@
+"""Llama-3 8B — dense GQA decoder, 128k vocab. [arXiv:2407.21783]"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    arch_id="llama3-8b",
+    family="dense",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=128256,
+    rope_theta=500000.0,
+    notes="long_500k skipped: pure full attention",
+))

@@ -1,0 +1,27 @@
+"""Llama-4 Maverick 400B-A17B — MoE 128 routed experts, top-1, shared expert.
+[hf:meta-llama/Llama-4-Maverick-17B-128E]
+
+Config-literal note: the assignment line gives "48L d5120 40H kv8 d_ff=8192
+vocab=202048, MoE 128e top-1". Taking MoE on *all* 48 layers yields ~776B
+params, contradicting the 400B-A17B name; the published HF config interleaves
+MoE every other layer (interleave_moe_layer_step=2) with dense-layer
+d_ff=16384 and one shared expert, which reproduces ~400B total / ~17B active.
+We implement the published interleaved layout (param_count() ≈ 4.0e11).
+"""
+from repro.configs.base import ModelConfig, MoEConfig, register
+
+CONFIG = register(ModelConfig(
+    arch_id="llama4-maverick-400b-a17b",
+    family="moe",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,                  # dense (non-MoE) layers
+    vocab_size=202048,
+    rope_theta=500000.0,
+    moe=MoEConfig(n_experts=128, top_k=1, n_shared_experts=1, d_ff=8192,
+                  every=2, dense_d_ff=16384),
+    notes="top-1 routing = event-driven expert sparsity; long_500k skipped (attention)",
+))

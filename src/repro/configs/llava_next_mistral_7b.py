@@ -1,0 +1,26 @@
+"""LLaVA-NeXT (1.6) Mistral-7B — VLM, anyres tiling.
+[hf:llava-hf/llava-v1.6-mistral-7b-hf]
+
+Backbone = Mistral-7B (32L, d=4096, GQA kv=8, d_ff=14336, vocab=32000).
+Per the assignment the vision frontend (CLIP + anyres tiling + projector) is a
+STUB: ``input_specs()`` provides precomputed patch embeddings of shape
+(batch, n_patches, d_model) with n_patches = vision_patch_frac * seq_len; the
+model concatenates them ahead of the text tokens.
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    arch_id="llava-next-mistral-7b",
+    family="vlm",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=32000,
+    rope_theta=1000000.0,
+    frontend="vision_stub",
+    vision_patch_frac=0.25,
+    notes="vision frontend stubbed; long_500k skipped: full attention",
+))

@@ -1,0 +1,23 @@
+"""RWKV6 (Finch) 7B — attention-free, data-dependent decay. [arXiv:2404.05892; hf]
+
+The wkv recurrent state is the direct analogue of IMPULSE's membrane potential:
+a per-channel accumulator updated in place with a (here: learned, data-dependent)
+decay — exactly a LIF leak. The fused-state Pallas kernel (kernels/wkv6) keeps it
+VMEM-resident across the sequence scan.
+"""
+from repro.configs.base import ModelConfig, RWKVConfig, register
+
+CONFIG = register(ModelConfig(
+    arch_id="rwkv6-7b",
+    family="ssm",
+    n_layers=32,
+    d_model=4096,
+    n_heads=64,                # d_model / head_size
+    n_kv_heads=64,
+    head_dim=64,               # rwkv6 head_size
+    d_ff=14336,
+    vocab_size=65536,
+    rwkv=RWKVConfig(head_size=64),
+    supports_long_context=True,
+    notes="attn-free; long_500k runs (O(1) state per token)",
+))

@@ -1,0 +1,32 @@
+"""Whisper large-v3 — encoder-decoder audio backbone. [arXiv:2212.04356]
+
+Per the assignment, only the transformer BACKBONE is modeled; the conv/mel
+frontend is a STUB — ``input_specs()`` supplies precomputed frame embeddings
+of shape (batch, seq_len, d_model).
+
+Shape semantics for enc-dec (documented in EXPERIMENTS.md):
+  train_4k    — encoder over seq_len frames + teacher-forced decoder over seq_len tokens
+  prefill_32k — encoder over seq_len frames + decoder prefill over seq_len//8 tokens
+  decode_32k  — one decoder token: self-cache = seq_len, cross-cache = seq_len frames
+  long_500k   — SKIP (full attention)
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    arch_id="whisper-large-v3",
+    family="audio",
+    n_layers=32,               # decoder layers
+    n_encoder_layers=32,
+    d_model=1280,
+    n_heads=20,
+    n_kv_heads=20,             # MHA
+    head_dim=64,
+    d_ff=5120,
+    vocab_size=51866,
+    is_encoder_decoder=True,
+    frontend="audio_stub",
+    ffn_type="gelu",
+    tie_embeddings=True,
+    rope_theta=0.0,            # sinusoidal absolute positions, no rope
+    notes="enc-dec; frontend stubbed; long_500k skipped: full attention",
+))

@@ -1,0 +1,11 @@
+"""IMPULSE core: the paper's contribution as a composable JAX library.
+
+  quant    -- 6-bit weight / 11-bit membrane fixed point (+ STE QAT)
+  neuron   -- IF / LIF / RMP dynamics with surrogate gradients
+  isa      -- the four in-memory instructions, word-level semantics
+  macro    -- bit-accurate silicon model (columns, BLFA, carry modes)
+  mapping  -- layer -> multi-macro tiling
+  energy   -- calibrated instruction-level energy / EDP model
+  snn      -- trainable spiking networks (IMDB sentiment, MNIST LeNet5-mod)
+"""
+from repro.core import energy, isa, macro, mapping, neuron, quant, snn  # noqa: F401

@@ -1,0 +1,78 @@
+"""Layer -> multi-macro tiling (Fig. 3b) and the distributed-macro geometry.
+
+A single macro serves fan-in <= 128 and 12 output neurons. Larger layers tile
+onto a (row_tiles x col_tiles) macro grid; partial sums along the fan-in split
+are reduced with AccV2V instructions (the paper's "distributed multi-macro
+architecture"). Conv layers map via im2col with the paper's fan-in rule
+(k*k*c_in <= 128 per macro row block, e.g. 3*3*14 = 126).
+
+The same tile constants seed the Pallas BlockSpecs (kernels/fused_snn_step):
+the TPU analogue pads 128x12 to the MXU-aligned 128x128 lane tile.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.isa import MACRO_IN, MACRO_OUT
+
+
+@dataclass(frozen=True)
+class FCTiling:
+    n_in: int
+    n_out: int
+    row_tiles: int          # fan-in splits (partial-sum groups)
+    col_tiles: int          # output-neuron splits
+    @property
+    def n_macros(self) -> int:
+        return self.row_tiles * self.col_tiles
+
+
+def fc_tiling(n_in: int, n_out: int) -> FCTiling:
+    return FCTiling(n_in, n_out,
+                    row_tiles=math.ceil(n_in / MACRO_IN),
+                    col_tiles=math.ceil(n_out / MACRO_OUT))
+
+
+@dataclass(frozen=True)
+class ConvTiling:
+    fan_in: int             # k*k*c_in
+    n_out_ch: int
+    out_positions: int      # H_out * W_out (each position re-uses the macro grid)
+    fc: FCTiling
+
+    @property
+    def n_macros(self) -> int:
+        return self.fc.n_macros
+
+
+def conv_tiling(kernel: int, c_in: int, c_out: int, out_hw: tuple[int, int]) -> ConvTiling:
+    fan_in = kernel * kernel * c_in
+    return ConvTiling(fan_in=fan_in, n_out_ch=c_out,
+                      out_positions=out_hw[0] * out_hw[1],
+                      fc=fc_tiling(fan_in, c_out))
+
+
+def tile_weights(w: np.ndarray) -> np.ndarray:
+    """(n_in, n_out) int weights -> (row_tiles, col_tiles, 128, 12), zero padded."""
+    n_in, n_out = w.shape
+    t = fc_tiling(n_in, n_out)
+    out = np.zeros((t.row_tiles, t.col_tiles, MACRO_IN, MACRO_OUT), dtype=w.dtype)
+    for r in range(t.row_tiles):
+        for c in range(t.col_tiles):
+            blk = w[r * MACRO_IN:(r + 1) * MACRO_IN, c * MACRO_OUT:(c + 1) * MACRO_OUT]
+            out[r, c, :blk.shape[0], :blk.shape[1]] = blk
+    return out
+
+
+def untile_outputs(v: np.ndarray, n_out: int) -> np.ndarray:
+    """(col_tiles, 12) -> (n_out,) dropping padding."""
+    return v.reshape(-1)[:n_out]
+
+
+# TPU-side tile constants: the macro's 128-row fan-in aligns exactly with the
+# MXU's 128 lanes; output neurons pad 12 -> 128 sublanes per BlockSpec tile.
+TPU_LANE = 128
+TPU_SUBLANE_F32 = 8

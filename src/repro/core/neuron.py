@@ -1,0 +1,93 @@
+"""Neuron models (IF / LIF / RMP) with surrogate-gradient spikes.
+
+Float domain is used for surrogate-gradient training (DIET-SNN style [3]);
+the integer domain (macro-exact) lives in isa.py/macro.py. Both implement the
+same three dynamics the macro supports through its instruction sequences:
+
+  IF  : v += i;                 s = v >= th;  v = where(s, v_reset, v)
+  LIF : v += i; v -= leak;      s = v >= th;  v = where(s, v_reset, v)
+  RMP : v += i;                 s = v >= th;  v = v - th * s        (soft reset)
+
+The macro's leak is *subtractive* (AccV2V with a negative leak row), so that is
+the default; multiplicative leak (DIET-SNN training convention) is provided for
+training parity studies.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+NEURON_TYPES = ("if", "lif", "rmp")
+
+
+# ---------------------------------------------------------------------------
+# Surrogate-gradient spike
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def spike(v: jax.Array, threshold: jax.Array, width: float = 1.0) -> jax.Array:
+    """Heaviside spike with triangular surrogate gradient of half-width ``width``."""
+    return (v >= threshold).astype(v.dtype)
+
+
+def _spike_fwd(v, threshold, width):
+    return spike(v, threshold, width), (v, threshold)
+
+
+def _spike_bwd(width, res, g):
+    v, threshold = res
+    x = (v - threshold) / width
+    surr = jnp.maximum(0.0, 1.0 - jnp.abs(x)) / width       # triangle, area 1
+    gv = g * surr
+    gth = -gv
+    # reduce the threshold cotangent over broadcast axes down to its shape
+    th_shape = jnp.shape(threshold)
+    extra = gth.ndim - len(th_shape)
+    if extra > 0:
+        gth = jnp.sum(gth, axis=tuple(range(extra)))
+    for ax, n in enumerate(th_shape):
+        if n == 1 and gth.shape[ax] != 1:
+            gth = jnp.sum(gth, axis=ax, keepdims=True)
+    return gv, gth.reshape(th_shape).astype(jnp.result_type(threshold))
+
+
+spike.defvjp(_spike_fwd, _spike_bwd)
+
+
+class NeuronState(NamedTuple):
+    v: jax.Array          # membrane potential
+
+
+def init_state(shape, dtype=jnp.float32) -> NeuronState:
+    return NeuronState(v=jnp.zeros(shape, dtype))
+
+
+def neuron_step(state: NeuronState, current: jax.Array, *, neuron: str,
+                threshold, leak=0.0, v_reset=0.0, leak_mode: str = "subtractive",
+                surrogate_width: float = 1.0) -> tuple[NeuronState, jax.Array]:
+    """One timestep of membrane dynamics. Returns (new_state, spikes)."""
+    if neuron not in NEURON_TYPES:
+        raise ValueError(f"unknown neuron {neuron!r}")
+    v = state.v + current
+    if neuron == "lif":
+        if leak_mode == "subtractive":
+            v = v - leak
+        elif leak_mode == "multiplicative":
+            v = v * (1.0 - leak)
+        else:
+            raise ValueError(f"unknown leak_mode {leak_mode!r}")
+    s = spike(v, threshold, surrogate_width)
+    if neuron == "rmp":
+        v = v - threshold * s                                # soft reset
+    else:                                                    # if / lif: hard reset
+        v = jnp.where(s > 0, jnp.asarray(v_reset, v.dtype), v)
+    return NeuronState(v=v), s
+
+
+def accumulate_only_step(state: NeuronState, current: jax.Array) -> NeuronState:
+    """Output-layer variant: integrate, never fire (paper's sentiment readout:
+    sign of the final V_MEM is the prediction, Fig. 10)."""
+    return NeuronState(v=state.v + current)

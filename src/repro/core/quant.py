@@ -1,0 +1,79 @@
+"""Fixed-point quantization matching the IMPULSE macro's number formats.
+
+The macro stores:
+  * weights  W_MEM : 6-bit signed two's complement  -> integer range [-32, 31]
+    (we use the symmetric range [-31, 31] for QAT so that -w is representable)
+  * membrane V_MEM : 11-bit signed two's complement -> integer range [-1024, 1023]
+    (12 physical columns; one bit slot is sacrificed so Wsign reads correctly
+    through the shared bitlines -- see macro.py)
+
+W and V share one fixed-point grid: V accumulates raw W integers, so a single
+per-layer scale converts between float and macro domains. Thresholds, leaks and
+reset values are quantized on the same grid.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+W_BITS = 6
+V_BITS = 11
+W_MAX = 2 ** (W_BITS - 1) - 1          # 31
+W_MIN = -W_MAX                          # symmetric QAT range
+V_MAX = 2 ** (V_BITS - 1) - 1          # 1023
+V_MIN = -(2 ** (V_BITS - 1))           # -1024
+
+
+def w_scale(w: jax.Array) -> jax.Array:
+    """Per-tensor symmetric scale so that max|w| maps to W_MAX."""
+    return jnp.maximum(jnp.max(jnp.abs(w)), 1e-8) / W_MAX
+
+
+def quantize_w(w: jax.Array, scale: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """float weights -> (int weights in [-31,31] as int8, scale)."""
+    scale = w_scale(w) if scale is None else scale
+    wq = jnp.clip(jnp.round(w / scale), W_MIN, W_MAX).astype(jnp.int8)
+    return wq, scale
+
+
+def dequantize_w(wq: jax.Array, scale: jax.Array) -> jax.Array:
+    return wq.astype(jnp.float32) * scale
+
+
+@jax.custom_vjp
+def fake_quant_w(w: jax.Array) -> jax.Array:
+    """Quantize-dequantize with straight-through estimator (QAT)."""
+    wq, scale = quantize_w(w)
+    return dequantize_w(wq, scale)
+
+
+def _fq_fwd(w):
+    return fake_quant_w(w), None
+
+
+def _fq_bwd(_, g):
+    return (g,)                         # STE: pass gradient through
+
+
+fake_quant_w.defvjp(_fq_fwd, _fq_bwd)
+
+
+def clamp_v(v: jax.Array, mode: str = "saturate") -> jax.Array:
+    """Constrain membrane potential to the 11-bit signed range.
+
+    ``saturate`` clips (the deployment-safe mode); ``wrap`` reproduces raw
+    two's-complement rollover of the 12-column ripple adder when the guard
+    bit is violated (silicon behaviour without saturation logic).
+    """
+    if mode == "saturate":
+        return jnp.clip(v, V_MIN, V_MAX)
+    if mode == "wrap":
+        # two's-complement wrap into [-1024, 1023]
+        span = 2 ** V_BITS
+        return ((v - V_MIN) % span) + V_MIN
+    raise ValueError(f"unknown clamp mode {mode!r}")
+
+
+def quantize_const(x: float, scale: jax.Array, lo: int = V_MIN, hi: int = V_MAX) -> jax.Array:
+    """Quantize a scalar (threshold / leak / reset) onto the shared grid."""
+    return jnp.clip(jnp.round(x / scale), lo, hi).astype(jnp.int32)

@@ -1,0 +1,3 @@
+from repro.data.loader import ShardedLoader, lm_batch_fn
+from repro.data.synthetic import (lm_token_batch, make_sentiment_vocab,
+                                  mnist_like_batch, sentiment_batch)

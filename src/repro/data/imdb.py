@@ -1,0 +1,51 @@
+"""Real-IMDB loader hook: if the aclImdb dump + GloVe vectors exist on disk
+(env REPRO_IMDB_DIR / REPRO_GLOVE_PATH), build (B, n_words, 100) batches from
+them; otherwise callers fall back to data.synthetic (the offline container
+default — see DESIGN.md §8.2)."""
+from __future__ import annotations
+
+import os
+from pathlib import Path
+
+import numpy as np
+
+IMDB_DIR = os.environ.get("REPRO_IMDB_DIR", "/data/aclImdb")
+GLOVE_PATH = os.environ.get("REPRO_GLOVE_PATH", "/data/glove.6B.100d.txt")
+
+
+def available() -> bool:
+    return Path(IMDB_DIR).exists() and Path(GLOVE_PATH).exists()
+
+
+def load_glove() -> dict[str, np.ndarray]:
+    vecs = {}
+    with open(GLOVE_PATH, encoding="utf-8") as f:
+        for line in f:
+            parts = line.rstrip().split(" ")
+            vecs[parts[0]] = np.asarray(parts[1:], np.float32)
+    return vecs
+
+
+def load_reviews(split: str = "train", limit: int | None = None):
+    out = []
+    for label, sub in ((1.0, "pos"), (0.0, "neg")):
+        d = Path(IMDB_DIR) / split / sub
+        for i, p in enumerate(sorted(d.glob("*.txt"))):
+            if limit and i >= limit // 2:
+                break
+            out.append((p.read_text(encoding="utf-8", errors="ignore"), label))
+    return out
+
+
+def vectorize(reviews, glove, n_words: int = 64):
+    xs, ys = [], []
+    for text, label in reviews:
+        toks = [t.strip(".,!?<>/\"'()").lower() for t in text.split()]
+        vs = [glove[t] for t in toks if t in glove][:n_words]
+        if not vs:
+            continue
+        arr = np.zeros((n_words, 100), np.float32)
+        arr[:len(vs)] = np.stack(vs)
+        xs.append(arr)
+        ys.append(label)
+    return np.stack(xs), np.asarray(ys, np.float32)

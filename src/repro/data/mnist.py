@@ -1,0 +1,32 @@
+"""Real-MNIST loader hook (idx files under REPRO_MNIST_DIR); falls back to
+data.synthetic.mnist_like_batch when absent."""
+from __future__ import annotations
+
+import gzip
+import os
+import struct
+from pathlib import Path
+
+import numpy as np
+
+MNIST_DIR = os.environ.get("REPRO_MNIST_DIR", "/data/mnist")
+
+
+def available() -> bool:
+    return (Path(MNIST_DIR) / "train-images-idx3-ubyte.gz").exists()
+
+
+def _read_idx(path: Path) -> np.ndarray:
+    with gzip.open(path, "rb") as f:
+        magic, = struct.unpack(">I", f.read(4))
+        ndim = magic & 0xFF
+        dims = struct.unpack(">" + "I" * ndim, f.read(4 * ndim))
+        return np.frombuffer(f.read(), np.uint8).reshape(dims)
+
+
+def load(split: str = "train"):
+    pre = "train" if split == "train" else "t10k"
+    imgs = _read_idx(Path(MNIST_DIR) / f"{pre}-images-idx3-ubyte.gz")
+    labels = _read_idx(Path(MNIST_DIR) / f"{pre}-labels-idx1-ubyte.gz")
+    x = imgs.astype(np.float32)[..., None] / 255.0
+    return x, labels.astype(np.int32)

@@ -1,0 +1,53 @@
+"""jit'd public wrapper for the fused SNN timestep kernel (padding, dispatch,
+and the pure-JAX fallback used on non-TPU backends / inside dry-runs)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_snn_step.kernel import fused_snn_pallas
+from repro.kernels.fused_snn_step.ref import fused_snn_layer_ref
+
+LANE = 128
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@partial(jax.jit, static_argnames=("neuron", "clamp_mode", "block_b", "block_n",
+                                   "use_pallas", "interpret"))
+def fused_snn_layer(spikes: jax.Array, wq: jax.Array, *, threshold: int,
+                    leak: int = 0, reset: int = 0, neuron: str = "rmp",
+                    clamp_mode: str = "saturate", block_b: int = 8,
+                    block_n: int = 128, use_pallas: bool = True,
+                    interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Run a full (T, B, N_in) spike raster through one spiking FC layer.
+
+    Returns (out_spikes (T, B, N_out) int8, v_final (B, N_out) int32).
+    ``use_pallas=False`` selects the pure-jnp reference path (identical
+    semantics; used when lowering for meshes/backends without Pallas).
+    """
+    if not use_pallas:
+        return fused_snn_layer_ref(
+            spikes.astype(jnp.int8), wq, neuron=neuron, threshold=threshold,
+            leak=leak, reset=reset, clamp_mode=clamp_mode)
+
+    T, B, N_in = spikes.shape
+    N_out = wq.shape[1]
+    s = _pad_to(spikes.astype(jnp.int8), 2, LANE)
+    s = _pad_to(s, 1, block_b)
+    w = _pad_to(_pad_to(wq, 0, LANE), 1, block_n)
+    params = jnp.array([threshold, leak, reset], jnp.int32)
+    out, v = fused_snn_pallas(s, w, params, neuron=neuron,
+                              clamp_mode=clamp_mode, block_b=block_b,
+                              block_n=block_n, interpret=interpret)
+    return out[:, :B, :N_out], v[:B, :N_out]

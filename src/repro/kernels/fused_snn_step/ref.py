@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the fused SNN timestep kernel.
+
+Semantics (integer domain, == isa.layer_timestep_int scanned over T):
+  for t in range(T):
+      v      = clamp11(v + spikes[t] @ W)
+      if lif: v = clamp11(v - leak)
+      fired  = v >= threshold
+      if rmp: v = clamp11(where(fired, v - threshold, v))
+      else:   v = where(fired, reset, v)
+      out[t] = fired
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.isa import layer_timestep_int
+
+
+def fused_snn_layer_ref(spikes: jax.Array, wq: jax.Array, *, neuron: str,
+                        threshold: int, leak: int = 0, reset: int = 0,
+                        clamp_mode: str = "saturate"
+                        ) -> tuple[jax.Array, jax.Array]:
+    """spikes: (T, B, N_in) int8/bool; wq: (N_in, N_out) int8.
+    Returns (out_spikes (T, B, N_out) int8, v_final (B, N_out) int32)."""
+    T, B, _ = spikes.shape
+    v0 = jnp.zeros((B, wq.shape[1]), jnp.int32)
+
+    def step(v, s_t):
+        v, fired = layer_timestep_int(
+            v, wq, s_t.astype(jnp.int32), neuron=neuron,
+            threshold=jnp.int32(threshold), leak=jnp.int32(leak),
+            reset=jnp.int32(reset), clamp_mode=clamp_mode)
+        return v, fired.astype(jnp.int8)
+
+    v_final, out = jax.lax.scan(step, v0, spikes)
+    return out, v_final

@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: chunked RWKV6 recurrence with VMEM-resident state.
+
+The (K, V) wkv state -- the "membrane potential" of the linear-attention
+family -- stays in a VMEM scratch across the whole sequence (grid steps along
+T revisit the same core sequentially), exactly the IMPULSE fused-array
+structure: HBM traffic for the state is O(K*V) per head instead of
+O(T*K*V). Each chunk does three MXU matmuls: (C,K)x(K,V) inter-chunk,
+(C,K)x(K,C) intra-chunk decay attention, (C,C)x(C,V) value gather; K=V=64
+pairs two heads per 128-lane tile when C is a multiple of 8.
+
+Grid: (B*H, T // C). dimension_semantics = ("parallel", "arbitrary"): the T
+axis must run sequentially (state carry), head-batch may be parallel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sout_ref,
+                 s_scratch, *, chunk: int):
+    c = pl.program_id(1)
+    n_chunks = pl.num_programs(1)
+
+    @pl.when(c == 0)
+    def _init():
+        s_scratch[...] = s0_ref[0].astype(jnp.float32)
+
+    rr = r_ref[0].astype(jnp.float32)          # (C, K)
+    kk = k_ref[0].astype(jnp.float32)
+    vv = v_ref[0].astype(jnp.float32)          # (C, V)
+    ww = w_ref[0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)           # (K,)
+
+    C = chunk
+    lw = jnp.log(ww)
+    L = jnp.cumsum(lw, axis=0)
+    Lx = L - lw
+    r_d = rr * jnp.exp(Lx)
+    k_d = kk * jnp.exp(-L)
+
+    s = s_scratch[...]
+    y_inter = jax.lax.dot_general(r_d, s, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    a = jax.lax.dot_general(r_d, k_d, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    bonus = jnp.sum(rr * u[None, :] * kk, axis=-1)           # (C,)
+    a = jnp.where(ii > jj, a, 0.0) + jnp.where(ii == jj, bonus[:, None], 0.0)
+    y = y_inter + jax.lax.dot_general(a, vv, (((1,), (0,)), ((), ())),
+                                      preferred_element_type=jnp.float32)
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    ltot = L[C - 1]                                          # (K,)
+    k2 = kk * jnp.exp(ltot[None, :] - L)
+    s_new = jnp.exp(ltot)[:, None] * s + jax.lax.dot_general(
+        k2, vv, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    s_scratch[...] = s_new
+
+    @pl.when(c == n_chunks - 1)
+    def _fin():
+        sout_ref[0] = s_new.astype(sout_ref.dtype)
+
+
+def wkv6_pallas(r, k, v, w, u, s0, *, chunk: int = 64,
+                interpret: bool = False):
+    """r,k,w: (BH, T, K); v: (BH, T, V); u: (BH, K); s0: (BH, K, V).
+    T % chunk == 0. Returns (y (BH, T, V) f32, s_out (BH, K, V) f32)."""
+    BH, T, K = r.shape
+    V = v.shape[-1]
+    grid = (BH, T // chunk)
+    kern = functools.partial(_wkv6_kernel, chunk=chunk)
+    y, s_out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, K), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, K), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, V), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, K), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, K), lambda b, c: (b, 0)),
+            pl.BlockSpec((1, K, V), lambda b, c: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, V), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, K, V), lambda b, c: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, T, V), jnp.float32),
+            jax.ShapeDtypeStruct((BH, K, V), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((K, V), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")) if not interpret else None,
+        interpret=interpret,
+    )(r, k, v, w, u, s0)
+    return y, s_out

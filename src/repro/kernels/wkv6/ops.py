@@ -1,0 +1,63 @@
+"""jit'd public wrapper for the wkv6 fused-state kernel.
+
+Accepts model-layout tensors (B, T, H, K/V), handles T padding (padding steps
+use w=1, k=r=0 so the state is untouched and outputs are dropped), and routes
+to the Pallas kernel or the chunked pure-jnp path (identical math; used when
+lowering for non-TPU backends and in the multi-pod dry-run)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.wkv6.kernel import wkv6_pallas
+from repro.kernels.wkv6.ref import wkv6_chunked, wkv6_sequential
+
+
+@partial(jax.jit, static_argnames=("chunk", "use_pallas", "interpret", "unroll"))
+def wkv6(r, k, v, w, u, s0=None, *, chunk: int = 64, use_pallas: bool = False,
+         interpret: bool = False, unroll: bool = False):
+    """r,k,w: (B, T, H, K); v: (B, T, H, V); u: (H, K);
+    s0: optional (B, H, K, V) initial state (serving continuation).
+    Returns (y (B, T, H, V) f32, s_out (B, H, K, V) f32)."""
+    B, T, H, K = r.shape
+    V = v.shape[-1]
+    pad = (-T) % chunk
+
+    def to_bh(x):
+        return jnp.moveaxis(x, 2, 1).reshape(B * H, T, x.shape[-1])
+
+    rb, kb, vb, wb = map(to_bh, (r, k, v, w))
+    if pad:
+        zeros = lambda x, d: jnp.zeros((B * H, pad, d), x.dtype)
+        rb = jnp.concatenate([rb, zeros(rb, K)], axis=1)
+        kb = jnp.concatenate([kb, zeros(kb, K)], axis=1)
+        vb = jnp.concatenate([vb, zeros(vb, V)], axis=1)
+        wb = jnp.concatenate([wb, jnp.ones((B * H, pad, K), wb.dtype)], axis=1)
+    ub = jnp.broadcast_to(u[None], (B, H, K)).reshape(B * H, K)
+    sb = (jnp.zeros((B * H, K, V), jnp.float32) if s0 is None
+          else s0.reshape(B * H, K, V).astype(jnp.float32))
+
+    if use_pallas:
+        y, s_out = wkv6_pallas(rb.astype(jnp.float32), kb.astype(jnp.float32),
+                               vb.astype(jnp.float32), wb.astype(jnp.float32),
+                               ub.astype(jnp.float32), sb, chunk=chunk,
+                               interpret=interpret)
+    else:
+        y, s_out = wkv6_chunked(rb, kb, vb, wb, ub, sb, chunk=chunk,
+                                unroll=unroll)
+
+    y = y[:, :T].reshape(B, H, T, V)
+    y = jnp.moveaxis(y, 1, 2)                                # (B, T, H, V)
+    return y, s_out.reshape(B, H, K, V)
+
+
+def wkv6_decode_step(r, k, v, w, u, s):
+    """Single-token decode: r,k,w (B, H, K); v (B, H, V); s (B, H, K, V).
+    Returns (y (B, H, V), s'). This is the serving-path state update — one
+    'AccW2V + leak' on the wkv membrane."""
+    kv = k[..., :, None] * v[..., None, :]
+    y = jnp.einsum("bhk,bhkv->bhv", r, s + u[None, :, :, None] * kv)
+    s = w[..., :, None] * s + kv
+    return y, s

@@ -1,0 +1,89 @@
+"""Pure-jnp oracles for the RWKV6 (wkv) recurrence.
+
+Sequential semantics per head (state S: (K, V), decay w_t in (0,1), bonus u):
+    y_t = r_t @ (S + diag(u) k_t v_t^T)        # read with bonus on current token
+    S   = diag(w_t) S + k_t v_t^T              # decay-then-accumulate update
+
+This is IMPULSE's membrane update with a learned, data-dependent leak: S is
+the membrane potential, w_t the leak, k v^T the synaptic accumulate.
+
+Two references:
+  * wkv6_sequential -- lax.scan over T, the ground-truth oracle;
+  * wkv6_chunked    -- MXU-friendly chunked-parallel form (the algorithm the
+    Pallas kernel implements); mathematically identical, float-reordered.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_sequential(r, k, v, w, u, s0=None):
+    """All of r,k,w: (BH, T, K); v: (BH, T, V); u: (BH, K).
+    Returns (y (BH, T, V), s_final (BH, K, V))."""
+    BH, T, K = r.shape
+    V = v.shape[-1]
+    s = jnp.zeros((BH, K, V), jnp.float32) if s0 is None else s0.astype(jnp.float32)
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = k_t[..., :, None] * v_t[..., None, :]           # (BH, K, V)
+        y = jnp.einsum("bk,bkv->bv", r_t, s + u[..., :, None] * kv)
+        s = w_t[..., :, None] * s + kv
+        return s, y
+
+    xs = (jnp.moveaxis(r, 1, 0), jnp.moveaxis(k, 1, 0),
+          jnp.moveaxis(v, 1, 0), jnp.moveaxis(w, 1, 0))
+    s, ys = jax.lax.scan(step, s, xs)
+    return jnp.moveaxis(ys, 0, 1), s
+
+
+@partial(jax.jit, static_argnames=("chunk", "unroll"))
+def wkv6_chunked(r, k, v, w, u, s0=None, chunk: int = 64, unroll: bool = False):
+    """Chunked-parallel form. Same signature/returns as wkv6_sequential.
+    T must be a multiple of ``chunk`` (ops.py pads). ``unroll`` unrolls the
+    chunk loop (dry-run cost accounting — XLA cost analysis counts while-loop
+    bodies once, so rolled loops understate FLOPs)."""
+    BH, T, K = r.shape
+    V = v.shape[-1]
+    assert T % chunk == 0, (T, chunk)
+    C = chunk
+    f32 = jnp.float32
+    r, k, v, w = (x.astype(f32) for x in (r, k, v, w))
+    u = u.astype(f32)
+    s = jnp.zeros((BH, K, V), f32) if s0 is None else s0.astype(f32)
+
+    rc = r.reshape(BH, T // C, C, K)
+    kc = k.reshape(BH, T // C, C, K)
+    vc = v.reshape(BH, T // C, C, V)
+    wc = w.reshape(BH, T // C, C, K)
+
+    ii = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    lower = ii > jj                                          # strictly causal
+    diag = ii == jj
+
+    def per_chunk(s, inp):
+        rr, kk, vv, ww = inp                                  # (BH, C, *)
+        lw = jnp.log(ww)                                      # (BH, C, K), <= 0
+        L = jnp.cumsum(lw, axis=1)                            # inclusive
+        Lx = L - lw                                           # exclusive
+        r_d = rr * jnp.exp(Lx)                                # decayed receptance
+        k_d = kk * jnp.exp(-L)                                # growth-compensated key
+        y_inter = jnp.einsum("bck,bkv->bcv", r_d, s)
+        A = jnp.einsum("bik,bjk->bij", r_d, k_d)
+        bonus = jnp.einsum("bck,bck->bc", rr * u[:, None, :], kk)
+        A = jnp.where(lower[None], A, 0.0) + jnp.where(diag[None], bonus[:, :, None], 0.0)
+        y = y_inter + jnp.einsum("bij,bjv->biv", A, vv)
+        Ltot = L[:, -1, :]                                    # (BH, K)
+        k2 = kk * jnp.exp(Ltot[:, None, :] - L)
+        s = jnp.exp(Ltot)[..., None] * s + jnp.einsum("bck,bcv->bkv", k2, vv)
+        return s, y
+
+    xs = (jnp.moveaxis(rc, 1, 0), jnp.moveaxis(kc, 1, 0),
+          jnp.moveaxis(vc, 1, 0), jnp.moveaxis(wc, 1, 0))
+    s, ys = jax.lax.scan(per_chunk, s, xs, unroll=(T // C) if unroll else 1)
+    y = jnp.moveaxis(ys, 0, 1).reshape(BH, T, V)
+    return y, s

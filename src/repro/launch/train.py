@@ -1,0 +1,76 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
+        --steps 50 --batch 8 --seq 256 --d-model 128 --reduced
+
+On this CPU container you train REDUCED configs (the full configs are
+dry-run-only); on a TPU pod the same entry point drives the full mesh — the
+only difference is make_production_mesh vs the host mesh and --reduced.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import (ParallelConfig, RunConfig, ShapeConfig,
+                                get_config, reduced_config)
+from repro.data import ShardedLoader, lm_batch_fn
+from repro.train import LoopConfig, init_train_state, make_train_step, train_loop
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--grad-compress", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced_config(cfg)
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    parallel = ParallelConfig(remat="block", fsdp=False, seq_parallel=False,
+                              microbatches=args.microbatches,
+                              grad_compress=args.grad_compress)
+    run = RunConfig(model=cfg, shape=shape, parallel=parallel,
+                    optimizer=args.optimizer, learning_rate=args.lr,
+                    warmup_steps=max(args.steps // 10, 1), seed=args.seed)
+
+    state, opt = init_train_state(jax.random.PRNGKey(args.seed), run,
+                                  total_steps=args.steps)
+    step_fn = jax.jit(make_train_step(run, opt), donate_argnums=(0,))
+    loader = ShardedLoader(
+        lambda s, sid, n: _to_batch(lm_batch_fn(cfg.vocab_size, args.batch,
+                                                args.seq, args.seed)(s, sid, n)),
+        num_shards=1)
+    loop_cfg = LoopConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
+                          ckpt_dir=args.ckpt_dir, log_every=5)
+    result = train_loop(step_fn, state, loader, loop_cfg,
+                        on_metrics=lambda m: print(
+                            f"step {m['step']:.0f} loss {m['loss']:.4f} "
+                            f"gnorm {m['grad_norm']:.3f} {m['sec_per_step']:.2f}s"))
+    print(f"done: {len(result.metrics_history)} logs, "
+          f"resumed_from={result.resumed_from}, "
+          f"stragglers={result.straggler_steps}")
+    return result
+
+
+def _to_batch(d):
+    return {k: jnp.asarray(v) for k, v in d.items()}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Input specifications per (architecture x shape): real arrays for smoke
+tests, ShapeDtypeStructs for the dry-run (same code path, no allocation).
+
+Shape semantics (documented in EXPERIMENTS.md):
+  train    -> loss_fn batch  {tokens, targets [, frames | patches]}
+  prefill  -> prefill batch  {tokens [, frames | patches]}
+  decode   -> decode_step    (tokens (B,1), cache with len=seq_len)
+
+Modality stubs per the assignment: whisper gets precomputed frame embeddings
+(B, S, d_model); llava gets patch embeddings for vision_patch_frac of the
+sequence. Encoder-decoder: prefill runs the encoder over seq_len frames plus a
+seq_len//8-token decoder prefill; decode attends a seq_len self-cache and a
+min(seq_len, 4096)-frame cross cache.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import lm
+
+
+def train_batch_spec(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    spec: dict = {}
+    if cfg.is_encoder_decoder:
+        spec["frames"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+        spec["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        spec["targets"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        return spec
+    if cfg.frontend == "vision_stub":
+        n_patch = int(S * cfg.vision_patch_frac)
+        spec["patches"] = jax.ShapeDtypeStruct((B, n_patch, cfg.d_model), jnp.bfloat16)
+        spec["tokens"] = jax.ShapeDtypeStruct((B, S - n_patch), jnp.int32)
+        spec["targets"] = jax.ShapeDtypeStruct((B, S - n_patch), jnp.int32)
+        return spec
+    spec["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    spec["targets"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    return spec
+
+
+def prefill_batch_spec(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.is_encoder_decoder:
+        return {"frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16),
+                "tokens": jax.ShapeDtypeStruct((B, max(S // 8, 1)), jnp.int32)}
+    if cfg.frontend == "vision_stub":
+        n_patch = int(S * cfg.vision_patch_frac)
+        return {"patches": jax.ShapeDtypeStruct((B, n_patch, cfg.d_model), jnp.bfloat16),
+                "tokens": jax.ShapeDtypeStruct((B, S - n_patch), jnp.int32)}
+    return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+
+
+def decode_spec(cfg: ModelConfig, shape: ShapeConfig) -> tuple[Any, dict]:
+    """(tokens spec, cache spec). Cache is built with jax.eval_shape so no
+    memory is allocated."""
+    B, S = shape.global_batch, shape.seq_len
+    enc_len = min(S, 4096) if cfg.is_encoder_decoder else 0
+    cache = jax.eval_shape(lambda: lm.init_cache(cfg, B, S, enc_len=enc_len))
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    return tokens, cache
+
+
+def materialize(spec, seed: int = 0):
+    """Turn a spec pytree into concrete arrays (smoke tests only)."""
+    rng = np.random.default_rng(seed)
+
+    def gen(s):
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            return jnp.asarray(rng.integers(0, 64, s.shape), s.dtype)
+        return jnp.asarray(rng.standard_normal(s.shape) * 0.02, s.dtype)
+
+    return jax.tree_util.tree_map(gen, spec)

@@ -1,0 +1,423 @@
+"""Shared layer library: norms, RoPE, FFNs, GQA/MLA attention, MoE.
+
+All layers are pure functions over explicit param pytrees. Parameters carry
+*logical axis* names via dist.sharding.logical_axes metadata (set at init by
+the `with_axes` helpers) so the sharding-rules engine can place them on the
+mesh without the layers knowing about meshes.
+
+Numerics: params/activations bf16 by default; norms, softmax, router and
+logits accumulate in fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig
+
+Param = dict  # {"value": array} plus logical axes registered in dist.sharding
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.bfloat16):
+    fan_in = shape[in_axis]
+    return (jax.random.normal(key, shape, jnp.float32) / np.sqrt(fan_in)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w + b
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., T, H, D); positions: (..., T) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                              # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs    # (..., T, D/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d_model: int) -> jax.Array:
+    pos = np.arange(seq)[:, None]
+    i = np.arange(d_model // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * i / d_model)
+    return jnp.asarray(np.concatenate([np.sin(ang), np.cos(ang)], axis=-1),
+                       jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# FFN
+# ---------------------------------------------------------------------------
+
+def init_ffn(key, d_model: int, d_ff: int, ffn_type: str, dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 3)
+    if ffn_type == "swiglu":
+        return {"gate": dense_init(ks[0], (d_model, d_ff), dtype=dtype),
+                "up": dense_init(ks[1], (d_model, d_ff), dtype=dtype),
+                "down": dense_init(ks[2], (d_ff, d_model), dtype=dtype)}
+    return {"up": dense_init(ks[0], (d_model, d_ff), dtype=dtype),
+            "down": dense_init(ks[1], (d_ff, d_model), dtype=dtype)}
+
+
+def ffn(x: jax.Array, p: dict, ffn_type: str) -> jax.Array:
+    if ffn_type == "swiglu":
+        h = jax.nn.silu(x @ p["gate"]) * (x @ p["up"])
+    else:
+        h = jax.nn.gelu(x @ p["up"])
+    return h @ p["down"]
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA; optional cross-attention; decode with KV cache)
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False, dtype=jnp.bfloat16) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    nh, nkv = cfg.n_heads, (cfg.n_heads if cross else cfg.n_kv_heads)
+    ks = jax.random.split(key, 4)
+    return {"wq": dense_init(ks[0], (d, nh * hd), dtype=dtype),
+            "wk": dense_init(ks[1], (d, nkv * hd), dtype=dtype),
+            "wv": dense_init(ks[2], (d, nkv * hd), dtype=dtype),
+            "wo": dense_init(ks[3], (nh * hd, d), dtype=dtype)}
+
+
+def _sdpa(q, k, v, *, causal: bool, q_pos=None, kv_len=None):
+    """q: (B, T, H, D); k, v: (B, S, KV, D). GQA by head repetition.
+    fp32 softmax. ``kv_len`` masks a pre-allocated cache to its valid length;
+    ``q_pos`` gives absolute positions of queries for causal masking."""
+    B, T, H, D = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    rep = H // KV
+    qf = q.astype(jnp.float32) / np.sqrt(D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qf = qf.reshape(B, T, KV, rep, D)
+    logits = jnp.einsum("btkrd,bskd->bkrts", qf, kf)          # (B, KV, rep, T, S)
+    mask = None
+    if causal:
+        qp = q_pos if q_pos is not None else jnp.arange(T)[None]
+        sp = jnp.arange(S)[None]
+        mask = qp[:, :, None] >= sp[:, None, :]               # (B, T, S)
+    if kv_len is not None:
+        valid = jnp.arange(S)[None] < kv_len[:, None] if kv_len.ndim else jnp.arange(S)[None] < kv_len
+        valid = jnp.broadcast_to(valid[:, None, :], (B, T, S))
+        mask = valid if mask is None else (mask & valid)
+    if mask is not None:
+        logits = jnp.where(mask[:, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkrts,bskd->btkrd", probs, vf)
+    return out.reshape(B, T, H, v.shape[-1]).astype(q.dtype)  # v head dim may != q's (MLA)
+
+
+def blocked_attention(q, k, v, *, causal: bool, q_chunk: int,
+                      kv_block: int, unroll: bool = False) -> jax.Array:
+    """Flash-style two-level blocked attention (pure JAX, TPU-friendly):
+    a static python loop over q chunks, a lax.scan over kv blocks carrying the
+    running (max, denominator, accumulator). Working set per step is
+    O(q_chunk x kv_block) instead of O(T x S), and causal q chunks skip
+    entirely-future kv blocks at trace time — a true ~2x FLOP saving.
+    Positions are assumed to be arange(T) (train/prefill self-attention).
+    """
+    B, T, H, D = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    rep = H // KV
+    q_chunk = min(q_chunk, T)
+    kv_block = min(kv_block, S)
+    assert T % q_chunk == 0 and S % kv_block == 0, (T, q_chunk, S, kv_block)
+    qf = (q.astype(jnp.float32) / np.sqrt(D)).reshape(B, T, KV, rep, D)
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+
+    outs = []
+    for ci in range(T // q_chunk):
+        qs = ci * q_chunk
+        qc = qf[:, qs:qs + q_chunk]                         # (B,QC,KV,rep,D)
+        n_blocks = S // kv_block
+        if causal:                                           # static causal skip
+            n_blocks = min(n_blocks, (qs + q_chunk + kv_block - 1) // kv_block)
+        kb = kf[:, :n_blocks * kv_block].reshape(B, n_blocks, kv_block, KV, D)
+        vb = vf[:, :n_blocks * kv_block].reshape(B, n_blocks, kv_block, KV, D)
+        qpos = qs + jnp.arange(q_chunk)
+
+        def body(carry, inp):
+            m, l, acc = carry
+            bi, k_blk, v_blk = inp                           # (), (B,KB,KV,D)x2
+            s = jnp.einsum("bqkrd,bskd->bkrqs", qc, k_blk)   # (B,KV,rep,QC,KB)
+            if causal:
+                kpos = bi * kv_block + jnp.arange(kv_block)
+                mask = qpos[:, None] >= kpos[None, :]
+                s = jnp.where(mask[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkrqs,bskd->bkrqd", p, v_blk)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, rep, q_chunk), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, KV, rep, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, KV, rep, q_chunk, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            body, (m0, l0, a0),
+            (jnp.arange(n_blocks), jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0)),
+            unroll=n_blocks if unroll else 1)
+        o = acc / jnp.maximum(l[..., None], 1e-30)           # (B,KV,rep,QC,D)
+        outs.append(jnp.moveaxis(o, 3, 1).reshape(B, q_chunk, H, D))
+    return jnp.concatenate(outs, axis=1).astype(q.dtype)
+
+
+def attention(x: jax.Array, p: dict, cfg: ModelConfig, positions: jax.Array,
+              *, causal: bool = True, kv_x: Optional[jax.Array] = None,
+              use_rope: bool = True, q_chunk: int = 0, kv_block: int = 1024,
+              unroll: bool = False) -> jax.Array:
+    """Full (train/prefill) attention. kv_x -> cross attention source.
+    q_chunk > 0 selects the flash-style blocked path."""
+    B, T, d = x.shape
+    hd = cfg.head_dim
+    src = x if kv_x is None else kv_x
+    S = src.shape[1]
+    q = (x @ p["wq"]).reshape(B, T, -1, hd)
+    k = (src @ p["wk"]).reshape(B, S, -1, hd)
+    v = (src @ p["wv"]).reshape(B, S, -1, hd)
+    if use_rope and cfg.rope_theta > 0 and kv_x is None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if q_chunk and T > 1:
+        out = blocked_attention(q, k, v, causal=causal and kv_x is None,
+                                q_chunk=q_chunk, kv_block=kv_block,
+                                unroll=unroll)
+    else:
+        out = _sdpa(q, k, v, causal=causal and kv_x is None, q_pos=positions)
+    return out.reshape(B, T, -1) @ p["wo"]
+
+
+def attention_decode(x: jax.Array, p: dict, cfg: ModelConfig, cache: dict,
+                     pos: jax.Array, *, use_rope: bool = True,
+                     cross_kv: Optional[tuple] = None) -> tuple[jax.Array, dict]:
+    """One-token decode against a pre-allocated cache.
+    x: (B, 1, d); cache: {"k": (B, S_max, KV, D), "v": ...}; pos: (B,) int32.
+    cross_kv: optional fixed (k, v) for encoder-decoder cross attention."""
+    B, T, d = x.shape
+    hd = cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, T, -1, hd)
+    if cross_kv is not None:
+        k, v = cross_kv
+        out = _sdpa(q, k, v, causal=False)
+        return out.reshape(B, T, -1) @ p["wo"], cache
+    k_new = (x @ p["wk"]).reshape(B, T, -1, hd)
+    v_new = (x @ p["wv"]).reshape(B, T, -1, hd)
+    if use_rope and cfg.rope_theta > 0:
+        q = apply_rope(q, pos[:, None], cfg.rope_theta)
+        k_new = apply_rope(k_new, pos[:, None], cfg.rope_theta)
+    # write at position pos (same for all batch lanes in the dry-run driver)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), pos[0], axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), pos[0], axis=1)
+    out = _sdpa(q, k_cache, v_cache, causal=False, kv_len=pos + 1)
+    return out.reshape(B, T, -1) @ p["wo"], {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek multi-head latent attention) — compressed KV cache
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    m = cfg.mla
+    d, nh = cfg.d_model, cfg.n_heads
+    qd = nh * (m.nope_head_dim + m.rope_head_dim)
+    ks = jax.random.split(key, 5)
+    return {
+        "wq": dense_init(ks[0], (d, qd), dtype=dtype),
+        "w_dkv": dense_init(ks[1], (d, m.kv_lora_rank + m.rope_head_dim), dtype=dtype),
+        "w_uk": dense_init(ks[2], (m.kv_lora_rank, nh * m.nope_head_dim), dtype=dtype),
+        "w_uv": dense_init(ks[3], (m.kv_lora_rank, nh * m.v_head_dim), dtype=dtype),
+        "wo": dense_init(ks[4], (nh * m.v_head_dim, d), dtype=dtype),
+    }
+
+
+def mla_attention(x: jax.Array, p: dict, cfg: ModelConfig, positions: jax.Array,
+                  latent_cache: Optional[jax.Array] = None,
+                  pos: Optional[jax.Array] = None):
+    """MLA with the latent (kv_lora + rope_k) cache. Train/prefill when
+    latent_cache is None; decode (T==1) updates and attends to the cache.
+    Returns (out, new_latent) where new_latent is the (B, S, r+rd) cache."""
+    m: MLAConfig = cfg.mla
+    B, T, d = x.shape
+    nh = cfg.n_heads
+    q = (x @ p["wq"]).reshape(B, T, nh, m.nope_head_dim + m.rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    latent_new = x @ p["w_dkv"]                               # (B, T, r + rd)
+    c_kv, k_rope_flat = jnp.split(latent_new, [m.kv_lora_rank], axis=-1)
+    k_rope_new = apply_rope(k_rope_flat[:, :, None, :], positions, cfg.rope_theta)
+
+    if latent_cache is None:
+        latent_all = jnp.concatenate(
+            [c_kv, k_rope_new[:, :, 0]], axis=-1)             # rotated rope part
+        kv_len, causal = None, True
+        q_pos = positions
+    else:
+        upd = jnp.concatenate([c_kv, k_rope_new[:, :, 0]], axis=-1)
+        latent_all = jax.lax.dynamic_update_slice_in_dim(
+            latent_cache, upd.astype(latent_cache.dtype), pos[0], axis=1)
+        kv_len, causal = pos + 1, False
+        q_pos = positions
+
+    c_all, kr_all = jnp.split(latent_all, [m.kv_lora_rank], axis=-1)
+    S = c_all.shape[1]
+    k_nope = (c_all @ p["w_uk"]).reshape(B, S, nh, m.nope_head_dim)
+    v = (c_all @ p["w_uv"]).reshape(B, S, nh, m.v_head_dim)
+    k_rope = jnp.broadcast_to(kr_all[:, :, None, :], (B, S, nh, m.rope_head_dim))
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate([k_nope, k_rope], axis=-1)
+    out = _sdpa(q_full, k_full, v, causal=causal, q_pos=q_pos, kv_len=kv_len)
+    out = out.reshape(B, T, nh * m.v_head_dim) @ p["wo"]
+    return out, latent_all
+
+
+# ---------------------------------------------------------------------------
+# MoE — sort-based (event-driven) dispatch: FLOPs scale with ACTIVE experts,
+# the LM-scale analogue of IMPULSE's spike-count-proportional energy.
+# ---------------------------------------------------------------------------
+
+def init_moe(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    m: MoEConfig = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {"router": dense_init(ks[0], (d, m.n_experts), dtype=jnp.float32),
+         "experts": {
+             "gate": dense_init(ks[1], (m.n_experts, d, m.d_ff), dtype=dtype),
+             "up": dense_init(ks[2], (m.n_experts, d, m.d_ff), dtype=dtype),
+             "down": dense_init(ks[3], (m.n_experts, m.d_ff, d), dtype=dtype)}}
+    if m.n_shared_experts:
+        p["shared"] = init_ffn(jax.random.fold_in(key, 7), d,
+                               m.d_ff * m.n_shared_experts, "swiglu", dtype)
+    return p
+
+
+def moe_ffn(x: jax.Array, p: dict, cfg: ModelConfig,
+            capacity_factor: float = 1.25, groups: int | None = None,
+            constraints: bool = False, gather_dispatch: bool = False
+            ) -> tuple[jax.Array, jax.Array]:
+    """Token-choice top-k routing with capacity; sort-based bucketing so the
+    expert matmuls are (G, E, C, d) batched GEMMs whose FLOPs scale with the
+    ACTIVE experts only — the LM-scale analogue of IMPULSE's event-driven
+    (spike-count-proportional) execution.
+
+    Routing groups: tokens are routed within groups of the flattened token
+    axis (default: one group per batch row for T>1, a single group for
+    decode). Sorting/bucketing then stays group-local, which under the mesh
+    (batch sharded on `data`, experts on `model`) lowers to the expected EP
+    all-to-all-style redistribution rather than a global sort.
+
+    Returns (out, load_balance_aux_loss).
+    """
+    m: MoEConfig = cfg.moe
+    B, T, d = x.shape
+    N = B * T
+    k = m.top_k
+    G = groups if groups else (B if T > 1 else 1)
+    n = N // G
+    xg = x.reshape(G, n, d)
+    logits = jnp.einsum("gnd,de->gne", xg.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                   # (G, n, E)
+    gate_vals, eidx = jax.lax.top_k(probs, k)                 # (G, n, k)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9, None)
+
+    # Switch-style load-balance aux: mean(prob per expert) * mean(assignment)
+    assign = jnp.zeros_like(probs).at[
+        jnp.arange(G)[:, None, None],
+        jnp.arange(n)[None, :, None], eidx].add(1.0) / k
+    lb_loss = m.n_experts * jnp.mean(jnp.mean(probs, axis=1) * jnp.mean(assign, axis=1))
+
+    cap = max(int(np.ceil(n * k / m.n_experts * capacity_factor)), 4)
+    flat_e = eidx.reshape(G, n * k)
+    order = jnp.argsort(flat_e, axis=-1)                      # group-local sort
+    e_sorted = jnp.take_along_axis(flat_e, order, axis=-1)
+    tok_sorted = order // k
+    gate_sorted = jnp.take_along_axis(gate_vals.reshape(G, n * k), order, axis=-1)
+    # position-in-expert via bucket starts (vectorized over groups)
+    starts = jnp.sum(e_sorted[:, :, None] < jnp.arange(m.n_experts)[None, None, :],
+                     axis=1).astype(jnp.int32)                # (G, E)
+    slot = jnp.arange(n * k, dtype=jnp.int32)[None] \
+        - jnp.take_along_axis(starts, e_sorted, axis=-1)
+    keep = slot < cap
+    # overflow routes to a trash slot so it can't clobber a real token
+    dest = jnp.where(keep, e_sorted * cap + slot, m.n_experts * cap)
+
+    gi = jnp.arange(G)[:, None]
+    if gather_dispatch:
+        # Gather-only dispatch (§Perf): the ONLY scatter is the scalar-payload
+        # slot->token map — XLA lowers wide-payload scatters with indices
+        # broadcast across the feature dim (a 48 GiB u32 all-gather on the
+        # deepseek baseline); gathers don't have that pathology.
+        slot_tok = jnp.zeros((G, m.n_experts * cap + 1), jnp.int32
+                             ).at[gi, dest].set(tok_sorted)[:, :-1]
+        slot_valid = jnp.zeros((G, m.n_experts * cap + 1), bool
+                               ).at[gi, dest].set(keep)[:, :-1]
+        buckets = jnp.take_along_axis(xg, slot_tok[..., None], axis=1)
+        buckets = jnp.where(slot_valid[..., None], buckets, 0)
+    else:
+        gathered = jnp.where(keep[..., None], xg[gi, tok_sorted], 0)
+        buckets = jnp.zeros((G, m.n_experts * cap + 1, d), xg.dtype
+                            ).at[gi, dest].set(gathered)[:, :-1]
+    be = buckets.reshape(G, m.n_experts, cap, d)
+    if constraints:
+        # EP: pin the bucket tensors to (batch-groups x experts) so the
+        # dispatch lowers to a data->model redistribution instead of a
+        # replicating all-gather (§Perf hillclimb; no-op outside a mesh)
+        from repro.dist.sharding import constrain
+        be = constrain(be, ("batch", "experts", None, None))
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", be, p["experts"]["gate"])) \
+        * jnp.einsum("gecd,edf->gecf", be, p["experts"]["up"])
+    if constraints:
+        from repro.dist.sharding import constrain
+        h = constrain(h, ("batch", "experts", None, None))
+    ye = jnp.einsum("gecf,efd->gecd", h, p["experts"]["down"]).reshape(G, m.n_experts * cap, d)
+
+    safe_dest = jnp.minimum(dest, m.n_experts * cap - 1)      # trash masked below
+    if gather_dispatch:
+        # combine by gathers: token t's k contributions sit at inv_order[t,k]
+        contrib = jnp.take_along_axis(ye, safe_dest[..., None], axis=1) \
+            * (gate_sorted * keep)[..., None].astype(ye.dtype)
+        inv_order = jnp.argsort(order, axis=-1)               # (G, n*k)
+        per_tok = jnp.take_along_axis(contrib, inv_order[..., None], axis=1)
+        out = per_tok.reshape(G, n, k, d).sum(axis=2)
+    else:
+        contrib = ye[gi, safe_dest] * (gate_sorted * keep)[..., None].astype(ye.dtype)
+        out = jnp.zeros((G, n, d), xg.dtype).at[gi, tok_sorted].add(contrib)
+    out = out.reshape(B, T, d)
+    if "shared" in p:
+        out = out + ffn(x, p["shared"], "swiglu")
+    return out, lb_loss.astype(jnp.float32)

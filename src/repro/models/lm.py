@@ -1,0 +1,507 @@
+"""Full language models for every assigned architecture family.
+
+One functional API over all families (dense / moe / hybrid / ssm / audio / vlm):
+
+  init_params(key, cfg)                         -> params pytree
+  loss_fn(params, batch, cfg, parallel)         -> (loss, aux)      [train]
+  prefill(params, batch, cfg)                   -> (logits_last, cache)
+  decode_step(params, tokens, cache, cfg)       -> (logits, cache)  [serve]
+  init_cache(cfg, batch, max_len)               -> cache pytree
+
+Layer stacks are scanned over *super-blocks* (the LCM of the attention/MoE
+interleave periods) so heterogeneous archs (Jamba 1:7 Mamba:attn with MoE
+every 2; Llama-4 dense/MoE alternation) still compile to a single compact
+scan. Remat is applied per super-block.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.dist.sharding import constrain
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import rwkv as R
+from repro.models.spiking_ffn import init_spiking_ffn, spiking_ffn
+
+
+# ---------------------------------------------------------------------------
+# structure helpers
+# ---------------------------------------------------------------------------
+
+def super_period(cfg: ModelConfig) -> int:
+    p = cfg.attn_layer_period
+    if cfg.moe is not None and cfg.moe.n_experts:
+        p = math.lcm(p, cfg.moe.every)
+    return p
+
+
+def n_prelude(cfg: ModelConfig) -> int:
+    """Leading layers handled outside the scan (deepseek's first dense layer)."""
+    if cfg.moe is not None and cfg.moe.first_k_dense:
+        return cfg.moe.first_k_dense
+    return 0
+
+
+def n_super(cfg: ModelConfig) -> int:
+    body = cfg.n_layers - n_prelude(cfg)
+    sp = super_period(cfg)
+    assert body % sp == 0, (cfg.arch_id, body, sp)
+    return body // sp
+
+
+def layer_kind(cfg: ModelConfig, idx: int) -> tuple[str, str]:
+    """(mixer, ffn) kinds for global layer index idx."""
+    if cfg.rwkv is not None:
+        return "rwkv", "none"
+    mixer = "attn" if cfg.is_attention_layer(idx) else "ssm"
+    if cfg.spiking is not None:
+        f = "spiking"
+    elif cfg.is_moe_layer(idx):
+        f = "moe"
+    else:
+        f = "dense"
+    return mixer, f
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg: ModelConfig, idx: int, dtype) -> dict:
+    mixer, f = layer_kind(cfg, idx)
+    ks = jax.random.split(key, 4)
+    p: dict = {"norm1": jnp.ones((cfg.d_model,), dtype)}
+    if mixer == "rwkv":
+        p["rwkv"] = R.init_rwkv_block(ks[0], cfg, dtype)
+        p["norm2"] = jnp.ones((cfg.d_model,), dtype)
+        return p
+    if mixer == "attn":
+        p["attn"] = (L.init_mla(ks[0], cfg, dtype) if cfg.mla is not None
+                     else L.init_attention(ks[0], cfg, dtype=dtype))
+        if cfg.is_encoder_decoder:
+            p["cross"] = L.init_attention(ks[3], cfg, cross=True, dtype=dtype)
+            p["norm_cross"] = jnp.ones((cfg.d_model,), dtype)
+    else:
+        p["ssm"] = M.init_mamba_block(ks[0], cfg, dtype)
+    p["norm2"] = jnp.ones((cfg.d_model,), dtype)
+    if f == "moe":
+        p["moe"] = L.init_moe(ks[1], cfg, dtype)
+    elif f == "spiking":
+        p["ffn"] = init_spiking_ffn(ks[1], cfg.d_model, cfg.d_ff, dtype)
+    else:
+        d_ff = cfg.d_ff
+        if cfg.moe is not None and cfg.moe.dense_d_ff:
+            d_ff = cfg.moe.dense_d_ff
+        p["ffn"] = L.init_ffn(ks[1], cfg.d_model, d_ff, cfg.ffn_type, dtype)
+    return p
+
+
+def _init_encoder_block(key, cfg: ModelConfig, dtype) -> dict:
+    ks = jax.random.split(key, 2)
+    return {"norm1": jnp.ones((cfg.d_model,), dtype),
+            "attn": L.init_attention(ks[0], cfg, cross=True, dtype=dtype),  # MHA
+            "norm2": jnp.ones((cfg.d_model,), dtype),
+            "ffn": L.init_ffn(ks[1], cfg.d_model, cfg.d_ff, cfg.ffn_type, dtype)}
+
+
+def init_params(key: jax.Array, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    params: dict = {
+        "embed": (jax.random.normal(ks[0], (cfg.vocab_size, d), jnp.float32)
+                  * 0.02).astype(dtype),
+        "final_norm": jnp.ones((d,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(ks[1], (d, cfg.vocab_size), dtype=dtype)
+    # prelude layers (python-level, heterogeneous head of the stack)
+    pre = [
+        _init_block(jax.random.fold_in(ks[2], i), cfg, i, dtype)
+        for i in range(n_prelude(cfg))
+    ]
+    if pre:
+        params["prelude"] = pre
+    # scanned body: stack n_super super-blocks
+    sp = super_period(cfg)
+    off = n_prelude(cfg)
+
+    def one_super(k):
+        return {f"pos{j}": _init_block(jax.random.fold_in(k, j), cfg, off + j, dtype)
+                for j in range(sp)}
+
+    supers = [one_super(jax.random.fold_in(ks[3], s)) for s in range(n_super(cfg))]
+    params["blocks"] = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *supers)
+    if cfg.is_encoder_decoder:
+        encs = [_init_encoder_block(jax.random.fold_in(ks[4], i), cfg, dtype)
+                for i in range(cfg.n_encoder_layers)]
+        params["encoder"] = {
+            "blocks": jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *encs),
+            "final_norm": jnp.ones((d,), dtype),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# block application (shared by train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+def _norm(x, w, cfg: ModelConfig):
+    return L.rms_norm(x, w, cfg.norm_eps)
+
+
+def _apply_block(x, p, cfg: ModelConfig, idx: int, positions, *,
+                 cache: Optional[dict], pos=None, enc_out=None,
+                 parallel: Optional[ParallelConfig] = None):
+    """One layer. Returns (x, new_cache_entry, aux_scalar)."""
+    mixer, f = layer_kind(cfg, idx)
+    aux = jnp.zeros((), jnp.float32)
+    decode = cache is not None and x.shape[1] == 1 and pos is not None
+
+    if mixer == "rwkv":
+        if decode:
+            st = {"shift": cache["shift_tm"], "wkv": cache["wkv"]}
+            h, st = R.time_mix_decode(_norm(x, p["norm1"], cfg), p["rwkv"]["tm"], cfg, st)
+            x = x + h.astype(x.dtype)
+            h, shift_cm = R.channel_mix(_norm(x, p["norm2"], cfg), p["rwkv"]["cm"],
+                                        cache["shift_cm"])
+            x = x + h.astype(x.dtype)
+            new_cache = {"shift_tm": st["shift"], "wkv": st["wkv"],
+                         "shift_cm": shift_cm}
+        else:
+            st_in = cache
+            h, st = R.time_mix(_norm(x, p["norm1"], cfg), p["rwkv"]["tm"], cfg,
+                               None if st_in is None else
+                               {"shift": st_in["shift_tm"], "wkv": st_in["wkv"]},
+                               unroll=(parallel.unroll_time_scans
+                                       if parallel else False))
+            x = x + h.astype(x.dtype)
+            h, shift_cm = R.channel_mix(_norm(x, p["norm2"], cfg), p["rwkv"]["cm"],
+                                        None if st_in is None else st_in["shift_cm"])
+            x = x + h.astype(x.dtype)
+            new_cache = {"shift_tm": st["shift"], "wkv": st["wkv"],
+                         "shift_cm": shift_cm}
+        return x, new_cache, aux
+
+    # --- mixer ---
+    h_in = _norm(x, p["norm1"], cfg)
+    if mixer == "attn":
+        if cfg.mla is not None:
+            if decode:
+                h, latent_new = L.mla_attention(h_in, p["attn"], cfg, positions,
+                                                latent_cache=cache["latent"],
+                                                pos=pos)
+                new_cache = {"latent": latent_new}
+            else:
+                h, latent_all = L.mla_attention(h_in, p["attn"], cfg, positions)
+                if cache is not None:                   # prefill: fill cache
+                    lc = jax.lax.dynamic_update_slice_in_dim(
+                        cache["latent"], latent_all.astype(cache["latent"].dtype),
+                        0, axis=1)
+                    new_cache = {"latent": lc}
+                else:
+                    new_cache = None
+        elif decode:
+            h, kv = L.attention_decode(h_in, p["attn"], cfg,
+                                       {"k": cache["k"], "v": cache["v"]}, pos)
+            new_cache = kv
+        else:
+            h = L.attention(h_in, p["attn"], cfg, positions,
+                            q_chunk=(parallel.attn_q_chunk if parallel else 0),
+                            kv_block=(parallel.attn_kv_block if parallel else 1024),
+                            unroll=(parallel.unroll_time_scans if parallel else False))
+            if cache is not None:                       # prefill: fill cache
+                hd = cfg.head_dim
+                B, T, _ = h_in.shape
+                k = (h_in @ p["attn"]["wk"]).reshape(B, T, -1, hd)
+                v = (h_in @ p["attn"]["wv"]).reshape(B, T, -1, hd)
+                if cfg.rope_theta > 0:
+                    k = L.apply_rope(k, positions, cfg.rope_theta)
+                kc = jax.lax.dynamic_update_slice_in_dim(
+                    cache["k"], k.astype(cache["k"].dtype), 0, axis=1)
+                vc = jax.lax.dynamic_update_slice_in_dim(
+                    cache["v"], v.astype(cache["v"].dtype), 0, axis=1)
+                new_cache = {"k": kc, "v": vc}
+            else:
+                new_cache = None
+        x = x + h.astype(x.dtype)
+        if cfg.is_encoder_decoder and enc_out is not None:
+            h = L.attention(_norm(x, p["norm_cross"], cfg), p["cross"], cfg,
+                            positions, causal=False, kv_x=enc_out)
+            x = x + h.astype(x.dtype)
+    else:  # ssm (mamba)
+        st = cache if cache is None else {"conv": cache["conv"], "ssm": cache["ssm"]}
+        if decode:
+            h, st = M.mamba_decode(h_in, p["ssm"], cfg, st)
+        else:
+            h, st = M.mamba_forward(h_in, p["ssm"], cfg, st,
+                                    unroll=(parallel.unroll_time_scans
+                                            if parallel else False),
+                                    constraints=(parallel.state_constraints
+                                                 if parallel else False))
+        new_cache = st
+        x = x + h.astype(x.dtype)
+
+    # --- ffn ---
+    h_in = _norm(x, p["norm2"], cfg)
+    if f == "moe":
+        h, lb = L.moe_ffn(h_in, p["moe"], cfg,
+                          constraints=(parallel.moe_constraints
+                                       if parallel else False),
+                          gather_dispatch=(parallel.moe_gather_dispatch
+                                           if parallel else False))
+        aux = aux + lb
+    elif f == "spiking":
+        h, rate = spiking_ffn(h_in, p["ffn"], cfg)
+        aux = aux + rate
+    else:
+        d_ff_type = cfg.ffn_type
+        h = L.ffn(h_in, p["ffn"], d_ff_type)
+    x = x + h.astype(x.dtype)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# stack runners
+# ---------------------------------------------------------------------------
+
+def _run_stack(params, x, cfg: ModelConfig, positions, *, cache=None, pos=None,
+               enc_out=None, parallel: Optional[ParallelConfig] = None):
+    """Prelude layers + scanned super-blocks. Returns (x, new_cache, aux)."""
+    parallel = parallel or ParallelConfig()
+    aux_total = jnp.zeros((), jnp.float32)
+    new_pre = []
+    for i, p in enumerate(params.get("prelude", [])):
+        c = None if cache is None else cache["prelude"][i]
+        x, c_new, aux = _apply_block(x, p, cfg, i, positions, cache=c, pos=pos,
+                                     enc_out=enc_out, parallel=parallel)
+        new_pre.append(c_new)
+        aux_total = aux_total + aux
+
+    sp = super_period(cfg)
+    off = n_prelude(cfg)
+
+    def super_fn(carry, inp):
+        x, aux_acc = carry
+        p_s, c_s = inp
+        # boundary activations: batch over DP axes, seq over the model axis
+        # (Megatron-style sequence parallelism; no-op without active rules)
+        x = constrain(x, ("batch", "seq", None))
+        c_new = {} if c_s is not None else None
+        for j in range(sp):
+            c = None if c_s is None else c_s[f"pos{j}"]
+            x, c_j, aux = _apply_block(x, p_s[f"pos{j}"], cfg, off + j, positions,
+                                       cache=c, pos=pos, enc_out=enc_out,
+                                       parallel=parallel)
+            if c_new is not None:
+                c_new[f"pos{j}"] = c_j
+            aux_acc = aux_acc + aux
+        return (x, aux_acc), c_new
+
+    fn = super_fn
+    if parallel.remat != "none":
+        fn = jax.checkpoint(super_fn, prevent_cse=False)
+
+    cache_blocks = None if cache is None else cache["blocks"]
+    if parallel.scan_layers:
+        (x, aux_total), new_blocks = jax.lax.scan(
+            fn, (x, aux_total), (params["blocks"], cache_blocks))
+    else:
+        ns = n_super(cfg)
+        new_list = []
+        for s in range(ns):
+            p_s = jax.tree_util.tree_map(lambda a: a[s], params["blocks"])
+            c_s = (None if cache_blocks is None else
+                   jax.tree_util.tree_map(lambda a: a[s], cache_blocks))
+            (x, aux_total), c_new = fn((x, aux_total), (p_s, c_s))
+            new_list.append(c_new)
+        new_blocks = (None if cache_blocks is None else
+                      jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *new_list))
+
+    new_cache = None
+    if cache is not None:
+        new_cache = dict(cache)
+        new_cache["blocks"] = new_blocks
+        if new_pre:
+            new_cache["prelude"] = new_pre
+    return x, new_cache, aux_total
+
+
+def _run_encoder(params, frames, cfg: ModelConfig,
+                 parallel: Optional[ParallelConfig] = None):
+    """Whisper-style encoder over stub frame embeddings (B, S, d)."""
+    parallel = parallel or ParallelConfig()
+    x = frames + L.sinusoidal_positions(frames.shape[1], cfg.d_model
+                                        ).astype(frames.dtype)[None]
+
+    def enc_fn(x, p):
+        h = L.attention(_norm(x, p["norm1"], cfg), p["attn"], cfg,
+                        jnp.arange(x.shape[1])[None], causal=False,
+                        use_rope=False,
+                        q_chunk=parallel.attn_q_chunk,
+                        kv_block=parallel.attn_kv_block,
+                        unroll=parallel.unroll_time_scans)
+        x = x + h
+        x = x + L.ffn(_norm(x, p["norm2"], cfg), p["ffn"], cfg.ffn_type)
+        return x, None
+
+    fn = enc_fn
+    if parallel.remat != "none":
+        fn = jax.checkpoint(enc_fn, prevent_cse=False)
+    x, _ = jax.lax.scan(fn, x, params["encoder"]["blocks"])
+    return _norm(x, params["encoder"]["final_norm"], cfg)
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params, batch: dict, cfg: ModelConfig):
+    """tokens (+ modality stubs) -> (x, positions, enc_out)."""
+    emb = params["embed"]
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        x = jnp.take(emb, batch["tokens"], axis=0)
+        x = x + L.sinusoidal_positions(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+        positions = jnp.arange(x.shape[1])[None]
+        return x, positions, batch["frames"]                  # frames: encoder input
+    if cfg.frontend == "vision_stub" and "patches" in batch:
+        tok = jnp.take(emb, batch["tokens"], axis=0)
+        x = jnp.concatenate([batch["patches"].astype(tok.dtype), tok], axis=1)
+    else:
+        x = jnp.take(emb, batch["tokens"], axis=0)
+    positions = jnp.arange(x.shape[1])[None]
+    return x, positions, enc_out
+
+
+def _logits(params, x, cfg: ModelConfig):
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    return (x.astype(jnp.float32) @ head.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+def loss_fn(params, batch: dict, cfg: ModelConfig,
+            parallel: Optional[ParallelConfig] = None):
+    """Causal-LM (or enc-dec) cross entropy. batch: tokens/targets (+frames/
+    patches). Returns (loss, aux)."""
+    parallel = parallel or ParallelConfig()
+    x, positions, enc_src = _embed_inputs(params, batch, cfg)
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = _run_encoder(params, enc_src, cfg, parallel)
+    x, _, aux = _run_stack(params, x, cfg, positions, enc_out=enc_out,
+                           parallel=parallel)
+    x = _norm(x, params["final_norm"], cfg)
+    targets = batch["targets"]
+    if cfg.frontend == "vision_stub" and "patches" in batch:
+        x = x[:, batch["patches"].shape[1]:]                  # text positions only
+    n_chunks = max(parallel.vocab_chunking, 1)
+    B, T, _ = x.shape
+    assert T % n_chunks == 0
+
+    def ce(xc, tc):
+        lg = _logits(params, xc, cfg)
+        lg = constrain(lg, ("batch", None, "vocab"))
+        lp = jax.nn.log_softmax(lg, axis=-1)
+        return -jnp.take_along_axis(lp, tc[..., None], axis=-1)[..., 0]
+
+    if n_chunks == 1:
+        losses = ce(x, targets)
+    else:
+        # python loop (not lax.map): each chunk is rematerialized in the
+        # backward pass so only one (B, T/n, vocab) logits buffer is ever
+        # live, and XLA cost analysis sees every chunk (while-loop bodies
+        # are counted once — see dryrun.py).
+        ck = jax.checkpoint(ce, prevent_cse=False)
+        step = T // n_chunks
+        losses = jnp.concatenate(
+            [ck(x[:, i * step:(i + 1) * step], targets[:, i * step:(i + 1) * step])
+             for i in range(n_chunks)], axis=1)
+    loss = losses.mean() + 0.01 * aux
+    return loss, {"ce": losses.mean(), "aux": aux}
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+               enc_len: int = 0) -> dict:
+    """Pre-allocated serving cache for every layer kind."""
+    def entry(idx: int):
+        mixer, _ = layer_kind(cfg, idx)
+        if mixer == "rwkv":
+            H, K = cfg.n_heads, cfg.rwkv.head_size
+            return {"shift_tm": jnp.zeros((batch, cfg.d_model), dtype),
+                    "shift_cm": jnp.zeros((batch, cfg.d_model), dtype),
+                    "wkv": jnp.zeros((batch, H, K, K), jnp.float32)}
+        if mixer == "ssm":
+            s = cfg.ssm
+            d_in = s.expand * cfg.d_model
+            return {"conv": jnp.zeros((batch, s.d_conv - 1, d_in), dtype),
+                    "ssm": jnp.zeros((batch, d_in, s.d_state), jnp.float32)}
+        if cfg.mla is not None:
+            m = cfg.mla
+            return {"latent": jnp.zeros(
+                (batch, max_len, m.kv_lora_rank + m.rope_head_dim), dtype)}
+        return {"k": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+                "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype)}
+
+    sp = super_period(cfg)
+    off = n_prelude(cfg)
+    supers = [{f"pos{j}": entry(off + j) for j in range(sp)}] * n_super(cfg)
+    cache = {"blocks": jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *supers),
+             "len": jnp.zeros((batch,), jnp.int32)}
+    if n_prelude(cfg):
+        cache["prelude"] = [entry(i) for i in range(n_prelude(cfg))]
+    if cfg.is_encoder_decoder:
+        cache["enc_out"] = jnp.zeros((batch, enc_len, cfg.d_model), dtype)
+    return cache
+
+
+def prefill(params, batch: dict, cfg: ModelConfig, max_len: int,
+            parallel: Optional[ParallelConfig] = None):
+    """Process the prompt; return (last-token logits, populated cache)."""
+    parallel = parallel or ParallelConfig()
+    x, positions, enc_src = _embed_inputs(params, batch, cfg)
+    enc_out = None
+    cache = init_cache(cfg, x.shape[0], max_len,
+                       enc_len=(enc_src.shape[1] if cfg.is_encoder_decoder else 0))
+    if cfg.is_encoder_decoder:
+        enc_out = _run_encoder(params, enc_src, cfg, parallel)
+        cache["enc_out"] = enc_out
+    x, cache, _ = _run_stack(params, x, cfg, positions, cache=cache,
+                             enc_out=enc_out, parallel=parallel)
+    x = _norm(x, params["final_norm"], cfg)
+    logits = _logits(params, x[:, -1:], cfg)[:, 0]
+    cache["len"] = jnp.full((x.shape[0],), x.shape[1], jnp.int32)
+    return logits, cache
+
+
+def decode_step(params, tokens: jax.Array, cache: dict, cfg: ModelConfig,
+                parallel: Optional[ParallelConfig] = None):
+    """One serving step: tokens (B, 1) -> (logits (B, vocab), cache')."""
+    parallel = parallel or ParallelConfig()
+    pos = cache["len"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.is_encoder_decoder:
+        d = cfg.d_model
+        i = jnp.arange(d // 2, dtype=jnp.float32)
+        ang = pos[:, None].astype(jnp.float32) / jnp.power(10000.0, 2 * i / d)
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+        x = x + pe[:, None].astype(x.dtype)
+    enc_out = cache.get("enc_out")
+    positions = pos[:, None]
+    x, cache, _ = _run_stack(params, x, cfg, positions, cache=cache, pos=pos,
+                             enc_out=enc_out, parallel=parallel)
+    x = _norm(x, params["final_norm"], cfg)
+    logits = _logits(params, x, cfg)[:, 0]
+    cache = dict(cache)
+    cache["len"] = pos + 1
+    return logits, cache

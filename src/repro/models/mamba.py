@@ -1,0 +1,165 @@
+"""Mamba (selective SSM) block for the Jamba hybrid architecture.
+
+The SSM hidden state h (d_inner x d_state per token stream) is another
+membrane-potential analogue: h_t = a_t * h_{t-1} + b_t with data-dependent
+decay a_t = exp(dt_t * A). Train/prefill uses a chunked associative scan
+(compile-friendly, bounded working set); decode is the O(1) state update.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+
+def init_mamba_block(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    ks = jax.random.split(key, 8)
+    a_init = np.tile(np.arange(1, s.d_state + 1, dtype=np.float32), (d_in, 1))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * d_in), dtype=dtype),
+        "conv_w": dense_init(ks[1], (s.d_conv, d_in), dtype=dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "x_proj": dense_init(ks[2], (d_in, s.dt_rank + 2 * s.d_state), dtype=dtype),
+        "dt_proj": dense_init(ks[3], (s.dt_rank, d_in), dtype=dtype),
+        "dt_bias": jnp.asarray(np.log(np.expm1(np.full(d_in, 0.01))), jnp.float32),
+        "a_log": jnp.asarray(np.log(a_init), jnp.float32),    # (d_in, N)
+        "d_skip": jnp.ones((d_in,), jnp.float32),
+        "out_proj": dense_init(ks[4], (d_in, d), dtype=dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 conv_state: Optional[jax.Array] = None):
+    """Depthwise causal conv over time. x: (B, T, d_in); w: (d_conv, d_in).
+    conv_state: (B, d_conv-1, d_in) carry-in. Returns (y, new_state)."""
+    d_conv = w.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((x.shape[0], d_conv - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(d_conv)) + b
+    return y, xp[:, -(d_conv - 1):]
+
+
+def _ssm_chunked(a_log_dt, bx, c, h0, chunk: int, unroll: bool = False,
+                 remat_chunks: bool = False):
+    """Selective scan. a_log_dt (=dt*A, the log-decay), bx (=dt*B*x): both
+    (B, T, d_in, N); c: (B, T, N). h0: (B, d_in, N). Chunked: scan over T/chunk
+    with an associative scan inside each chunk. Returns (y (B,T,d_in), h_T).
+
+    remat_chunks: checkpoint each chunk body — the backward pass then saves
+    only the (B, d_in, N) chunk-boundary states instead of the full
+    (B, T, d_in, N) associative-scan residuals (a TB-scale saving at pod
+    batch sizes; §Perf jamba hillclimb)."""
+    B, T, d_in, N = bx.shape
+    assert T % chunk == 0, (T, chunk)
+    nch = T // chunk
+    a_c = a_log_dt.reshape(B, nch, chunk, d_in, N)
+    b_c = bx.reshape(B, nch, chunk, d_in, N)
+    c_c = c.reshape(B, nch, chunk, N)
+
+    def combine(p, q):
+        (la1, b1), (la2, b2) = p, q
+        return la1 + la2, jnp.exp(la2) * b1 + b2
+
+    def per_chunk(h, inp):
+        la, b, cc = inp                                        # (B, chunk, d_in, N), ..., (B, chunk, N)
+        la_cum, b_scan = jax.lax.associative_scan(combine, (la, b), axis=1)
+        h_all = b_scan + jnp.exp(la_cum) * h[:, None]          # include carry-in
+        y = jnp.einsum("btdn,btn->btd", h_all, cc)
+        return h_all[:, -1], y
+
+    fn = jax.checkpoint(per_chunk, prevent_cse=False) if remat_chunks else per_chunk
+    xs = (jnp.moveaxis(a_c, 1, 0), jnp.moveaxis(b_c, 1, 0), jnp.moveaxis(c_c, 1, 0))
+    h, ys = jax.lax.scan(fn, h0, xs, unroll=nch if unroll else 1)
+    return jnp.moveaxis(ys, 0, 1).reshape(B, T, d_in), h
+
+
+def mamba_forward(x: jax.Array, p: dict, cfg: ModelConfig,
+                  state: Optional[dict] = None, chunk: int = 128,
+                  unroll: bool = False, constraints: bool = False):
+    """x: (B, T, d). state: {"conv": (B, d_conv-1, d_in), "ssm": (B, d_in, N)}.
+    Returns (out, new_state). ``constraints`` pins the (B,T,d_in,N) scan
+    tensors to (batch x model) — without it GSPMD replicates them (§Perf)."""
+    s = cfg.ssm
+    B, T, d = x.shape
+    d_in = s.expand * d
+    xz = x @ p["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)
+    conv_state = None if state is None else state["conv"]
+    xs, conv_new = _causal_conv(xs, p["conv_w"], p["conv_b"], conv_state)
+    xs = jax.nn.silu(xs)
+
+    proj = xs @ p["x_proj"]
+    dt_r, b_mat, c_mat = jnp.split(proj, [s.dt_rank, s.dt_rank + s.d_state], axis=-1)
+    dt = jax.nn.softplus((dt_r @ p["dt_proj"]).astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])                                   # (d_in, N)
+    la = dt[..., None] * a                                     # log decay (B,T,d_in,N)
+    bx = dt[..., None] * b_mat[:, :, None, :].astype(jnp.float32) \
+        * xs[..., None].astype(jnp.float32)
+
+    h0 = (jnp.zeros((B, d_in, s.d_state), jnp.float32)
+          if state is None else state["ssm"])
+    if constraints:
+        from repro.dist.sharding import constrain
+        la = constrain(la, ("batch", None, "ffn", None))
+        bx = constrain(bx, ("batch", None, "ffn", None))
+    if unroll:
+        # dry-run accounting mode (never executed): the cost-equivalent
+        # log-space cumsum form h_t = e^{L_t} (h0 + sum_{s<=t} e^{-L_s} b_s)
+        # — identical O(T d N) op mix, no while loop, compiles in seconds.
+        # (Numerically unstable; the executed path below is the chunked scan.)
+        L = jnp.cumsum(la, axis=1)
+        hs = jnp.exp(L) * (jnp.cumsum(jnp.exp(-L) * bx, axis=1) + h0[:, None])
+        y = jnp.einsum("btdn,btn->btd", hs, c_mat.astype(jnp.float32))
+        h = hs[:, -1]
+    else:
+        pad = (-T) % chunk
+        if pad:
+            la = jnp.pad(la, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            bx = jnp.pad(bx, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            c_pad = jnp.pad(c_mat.astype(jnp.float32), ((0, 0), (0, pad), (0, 0)))
+        else:
+            c_pad = c_mat.astype(jnp.float32)
+        y, h = _ssm_chunked(la, bx, c_pad, h0, chunk,
+                            remat_chunks=constraints)
+    y = y[:, :T] + xs.astype(jnp.float32) * p["d_skip"]
+    out = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["out_proj"]
+    return out, {"conv": conv_new, "ssm": h}
+
+
+def mamba_decode(x: jax.Array, p: dict, cfg: ModelConfig, state: dict):
+    """One-token decode. x: (B, 1, d). O(1) state update."""
+    s = cfg.ssm
+    B = x.shape[0]
+    xz = x[:, 0] @ p["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)
+    conv = state["conv"]
+    window = jnp.concatenate([conv.astype(xs.dtype), xs[:, None]], axis=1)
+    xc = jnp.einsum("bcd,cd->bd", window, p["conv_w"]) + p["conv_b"]
+    xc = jax.nn.silu(xc)
+    proj = xc @ p["x_proj"]
+    dt_r, b_mat, c_mat = jnp.split(proj, [s.dt_rank, s.dt_rank + s.d_state], axis=-1)
+    dt = jax.nn.softplus((dt_r @ p["dt_proj"]).astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dt[..., None] * a)                         # (B, d_in, N)
+    bx = dt[..., None] * b_mat[:, None, :].astype(jnp.float32) * xc[..., None].astype(jnp.float32)
+    h = decay * state["ssm"] + bx
+    y = jnp.einsum("bdn,bn->bd", h, c_mat.astype(jnp.float32)) \
+        + xc.astype(jnp.float32) * p["d_skip"]
+    out = (y.astype(x.dtype) * jax.nn.silu(z))[:, None] @ p["out_proj"]
+    return out, {"conv": window[:, 1:], "ssm": h}
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> dict:
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    return {"conv": jnp.zeros((batch, s.d_conv - 1, d_in), dtype),
+            "ssm": jnp.zeros((batch, d_in, s.d_state), jnp.float32)}

@@ -1,0 +1,152 @@
+"""RWKV6 (Finch) blocks — attention-free, data-dependent decay.
+
+The wkv state is the direct LM-scale analogue of the IMPULSE membrane
+potential (decay == learned leak); the recurrence runs through
+kernels/wkv6 (fused VMEM-resident-state Pallas kernel on TPU, chunked
+pure-jnp when lowering elsewhere).
+
+Block = time-mix (ddlerp token shift -> r,k,v,g,w -> wkv6 -> groupnorm*silu(g)
+-> out proj) + channel-mix (token shift -> relu^2 FFN with receptance gate).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.kernels.wkv6.ops import wkv6, wkv6_decode_step
+from repro.models.layers import dense_init
+
+LORA_R = 32
+N_MIX = 5  # r, k, v, g, w
+
+
+def init_rwkv_block(key, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    H, K = cfg.n_heads, cfg.rwkv.head_size
+    ks = jax.random.split(key, 16)
+    return {
+        "tm": {  # time mix
+            "mu": jnp.zeros((N_MIX, d), dtype),
+            "ddlerp_w1": dense_init(ks[0], (d, N_MIX * LORA_R), dtype=dtype),
+            "ddlerp_w2": dense_init(ks[1], (N_MIX, LORA_R, d), dtype=dtype),
+            "decay_base": jnp.asarray(
+                np.log(np.exp(-np.linspace(0.2, 5.0, d)) * 0 + 1.0)
+                - np.linspace(0.0, 3.0, d), jnp.float32),      # w0 (fp32)
+            "decay_w1": dense_init(ks[2], (d, LORA_R * 2), dtype=dtype),
+            "decay_w2": dense_init(ks[3], (LORA_R * 2, d), dtype=dtype),
+            "bonus": (jax.random.normal(ks[4], (H, K), jnp.float32) * 0.3),
+            "wr": dense_init(ks[5], (d, d), dtype=dtype),
+            "wk": dense_init(ks[6], (d, d), dtype=dtype),
+            "wv": dense_init(ks[7], (d, d), dtype=dtype),
+            "wg": dense_init(ks[8], (d, d), dtype=dtype),
+            "wo": dense_init(ks[9], (d, d), dtype=dtype),
+            "gn_scale": jnp.ones((d,), dtype),
+        },
+        "cm": {  # channel mix
+            "mu_k": jnp.zeros((d,), dtype),
+            "mu_r": jnp.zeros((d,), dtype),
+            "wk": dense_init(ks[10], (d, ff), dtype=dtype),
+            "wv": dense_init(ks[11], (ff, d), dtype=dtype),
+            "wr": dense_init(ks[12], (d, d), dtype=dtype),
+        },
+    }
+
+
+def _token_shift(x: jax.Array, last: Optional[jax.Array]) -> jax.Array:
+    """x: (B, T, d) -> previous-token tensor; `last` is the carry from the
+    preceding segment ((B, d)) or None for zeros."""
+    prev = jnp.roll(x, 1, axis=1)
+    first = jnp.zeros_like(x[:, 0]) if last is None else last.astype(x.dtype)
+    return prev.at[:, 0].set(first)
+
+
+def _group_norm(y: jax.Array, scale: jax.Array, n_heads: int, eps=1e-5) -> jax.Array:
+    B, T, d = y.shape
+    yh = y.reshape(B, T, n_heads, d // n_heads).astype(jnp.float32)
+    mu = yh.mean(-1, keepdims=True)
+    var = yh.var(-1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + eps)
+    return (yh.reshape(B, T, d) * scale).astype(y.dtype)
+
+
+def time_mix(x: jax.Array, p: dict, cfg: ModelConfig,
+             state: Optional[dict] = None, use_pallas: bool = False,
+             unroll: bool = False):
+    """x: (B, T, d). state: {"shift": (B, d), "wkv": (B, H, K, K)} or None.
+    Returns (out, new_state)."""
+    B, T, d = x.shape
+    H, K = cfg.n_heads, cfg.rwkv.head_size
+    prev = _token_shift(x, None if state is None else state["shift"])
+    xx = prev - x
+    # data-dependent lerp (ddlerp)
+    base = x + xx * p["mu"][0]
+    a = jnp.tanh(base @ p["ddlerp_w1"]).reshape(B, T, N_MIX, LORA_R)
+    mix = jnp.einsum("btnr,nrd->btnd", a, p["ddlerp_w2"]) + p["mu"][None, None]
+    xs = x[:, :, None, :] + xx[:, :, None, :] * mix           # (B, T, 5, d)
+    xr, xk, xv, xg, xw = (xs[:, :, i] for i in range(N_MIX))
+
+    r = (xr @ p["wr"]).reshape(B, T, H, K)
+    k = (xk @ p["wk"]).reshape(B, T, H, K)
+    v = (xv @ p["wv"]).reshape(B, T, H, K)
+    g = jax.nn.silu(xg @ p["wg"])
+    # data-dependent decay in (0, 1)
+    dlora = jnp.tanh(xw @ p["decay_w1"]) @ p["decay_w2"]
+    w = jnp.exp(-jnp.exp(jnp.clip(p["decay_base"] + dlora.astype(jnp.float32),
+                                  -8.0, 1.0))).reshape(B, T, H, K)
+
+    s0 = None if state is None else state["wkv"]
+    y, s_new = wkv6(r, k, v, w, p["bonus"], s0=s0, use_pallas=use_pallas,
+                    unroll=unroll)
+    y = y.reshape(B, T, d)
+    out = (_group_norm(y, p["gn_scale"], H) * g) @ p["wo"]
+    new_state = {"shift": x[:, -1], "wkv": s_new}
+    return out, new_state
+
+
+def time_mix_decode(x: jax.Array, p: dict, cfg: ModelConfig, state: dict):
+    """Single-token decode. x: (B, 1, d). Mirrors time_mix with T==1 via the
+    O(1) wkv state update (the fused-membrane serving path)."""
+    B, _, d = x.shape
+    H, K = cfg.n_heads, cfg.rwkv.head_size
+    prev = state["shift"][:, None].astype(x.dtype)
+    xx = prev - x
+    base = x + xx * p["mu"][0]
+    a = jnp.tanh(base @ p["ddlerp_w1"]).reshape(B, 1, N_MIX, LORA_R)
+    mix = jnp.einsum("btnr,nrd->btnd", a, p["ddlerp_w2"]) + p["mu"][None, None]
+    xs = x[:, :, None, :] + xx[:, :, None, :] * mix
+    xr, xk, xv, xg, xw = (xs[:, 0, i] for i in range(N_MIX))  # (B, d)
+
+    r = (xr @ p["wr"]).reshape(B, H, K)
+    k = (xk @ p["wk"]).reshape(B, H, K)
+    v = (xv @ p["wv"]).reshape(B, H, K)
+    g = jax.nn.silu(xg @ p["wg"])
+    dlora = jnp.tanh(xw @ p["decay_w1"]) @ p["decay_w2"]
+    w = jnp.exp(-jnp.exp(jnp.clip(p["decay_base"] + dlora.astype(jnp.float32),
+                                  -8.0, 1.0))).reshape(B, H, K)
+    y, s_new = wkv6_decode_step(r.astype(jnp.float32), k.astype(jnp.float32),
+                                v.astype(jnp.float32), w, p["bonus"],
+                                state["wkv"])
+    y = y.reshape(B, 1, d).astype(x.dtype)
+    out = (_group_norm(y, p["gn_scale"], H) * g[:, None]) @ p["wo"]
+    return out, {"shift": x[:, -1], "wkv": s_new}
+
+
+def channel_mix(x: jax.Array, p: dict, state: Optional[jax.Array] = None):
+    """ReLU^2 channel mix with receptance gate. state: (B, d) last token."""
+    prev = _token_shift(x, state)
+    xk = x + (prev - x) * p["mu_k"]
+    xr = x + (prev - x) * p["mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    r = jax.nn.sigmoid(xr @ p["wr"])
+    return r * (k @ p["wv"]), x[:, -1]
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    H, K = cfg.n_heads, cfg.rwkv.head_size
+    return {"shift_tm": jnp.zeros((batch, cfg.d_model), dtype),
+            "shift_cm": jnp.zeros((batch, cfg.d_model), dtype),
+            "wkv": jnp.zeros((batch, H, K, K), jnp.float32)}

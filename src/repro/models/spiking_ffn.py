@@ -1,0 +1,45 @@
+"""SpikingFFN: IMPULSE's spiking layer as a drop-in transformer FFN.
+
+Beyond-paper integration: the FFN hidden layer runs cfg.spiking.timesteps of
+IF/LIF/RMP dynamics (rate coding) with 6-bit fake-quantized weights; energy
+for the layer is then governed by the spike-count instruction model
+(core.energy), giving the LM stack the same sparsity -> energy lever the
+macro gives SNNs. Gradients flow via the surrogate spike.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.neuron import NeuronState, neuron_step
+from repro.core.quant import fake_quant_w
+from repro.models.layers import dense_init
+
+
+def init_spiking_ffn(key, d_model: int, d_ff: int, dtype=jnp.bfloat16) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {"up": dense_init(k1, (d_model, d_ff), dtype=dtype),
+            "down": dense_init(k2, (d_ff, d_model), dtype=dtype)}
+
+
+def spiking_ffn(x: jax.Array, p: dict, cfg: ModelConfig) -> tuple[jax.Array, jax.Array]:
+    """x: (B, T, d). Returns (out, mean_spike_rate). Rate-coded: the hidden
+    spiking population integrates the same current for `timesteps` steps; the
+    normalized spike count is the activation."""
+    sp = cfg.spiking
+    w_up = fake_quant_w(p["up"].astype(jnp.float32)).astype(x.dtype)
+    current = (x @ w_up).astype(jnp.float32)
+
+    def step(carry, _):
+        st, count = carry
+        st, s = neuron_step(st, current, neuron=sp.neuron,
+                            threshold=sp.threshold, leak=sp.leak)
+        return (st, count + s), s.mean()
+
+    st0 = NeuronState(jnp.zeros_like(current))
+    (st, count), rates = jax.lax.scan(
+        step, (st0, jnp.zeros_like(current)), None, length=sp.timesteps)
+    h = (count / sp.timesteps).astype(x.dtype)
+    w_down = fake_quant_w(p["down"].astype(jnp.float32)).astype(x.dtype)
+    return h @ w_down, rates.mean()

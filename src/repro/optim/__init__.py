@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (Optimizer, adafactor, adam, adamw,
+                                    apply_updates, clip_by_global_norm,
+                                    global_norm, make_optimizer, sgd)
+from repro.optim.schedule import cosine_warmup

@@ -1,0 +1,163 @@
+"""Optimizers built from scratch (no optax): SGD(+momentum), Adam, AdamW,
+Adafactor (factored second moment — required to fit the 400B llama4-maverick
+optimizer state in 16 GiB/chip; see DESIGN.md §5).
+
+API mirrors the (init, update) pair convention:
+    opt = make_optimizer("adamw", lr=..., weight_decay=...)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., tuple[Any, Any]]   # (grads, state, params) -> (updates, state)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(
+        lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+# ---------------------------------------------------------------------------
+
+def sgd(lr: float | Callable, momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"mu": jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, jnp.float32), params),
+            "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lr_t = lr(step) if callable(lr) else lr
+        mu = jax.tree_util.tree_map(
+            lambda m, g: momentum * m + g.astype(jnp.float32), state["mu"], grads)
+        updates = jax.tree_util.tree_map(lambda m: -lr_t * m, mu)
+        return updates, {"mu": mu, "step": step}
+
+    return Optimizer(init, update)
+
+
+def _adam_core(lr, b1, b2, eps, weight_decay):
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"m": jax.tree_util.tree_map(z, params),
+                "v": jax.tree_util.tree_map(z, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lr_t = lr(step) if callable(lr) else lr
+        m = jax.tree_util.tree_map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+            state["m"], grads)
+        v = jax.tree_util.tree_map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(m_, v_, p):
+            u = -lr_t * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay and p is not None and p.ndim >= 2:
+                u = u - lr_t * weight_decay * p.astype(jnp.float32)
+            return u
+
+        if params is None:
+            updates = jax.tree_util.tree_map(lambda m_, v_: upd(m_, v_, None), m, v)
+        else:
+            updates = jax.tree_util.tree_map(upd, m, v, params)
+        return updates, {"m": m, "v": v, "step": step}
+
+    return Optimizer(init, update)
+
+
+def adam(lr, b1=0.9, b2=0.999, eps=1e-8) -> Optimizer:
+    return _adam_core(lr, b1, b2, eps, weight_decay=0.0)
+
+
+def adamw(lr, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1) -> Optimizer:
+    return _adam_core(lr, b1, b2, eps, weight_decay=weight_decay)
+
+
+def adafactor(lr, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0) -> Optimizer:
+    """Factored second moment: for a (r, c) matrix keep row/col statistics
+    (r + c floats instead of r*c). >=2D params are factored over the last two
+    dims; smaller params keep a full accumulator."""
+
+    def init(params):
+        def z(p):
+            if p.ndim >= 2:
+                return {"row": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "col": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"full": jnp.zeros_like(p, jnp.float32)}
+        return {"v": jax.tree_util.tree_map(z, params,
+                                            is_leaf=lambda x: hasattr(x, "ndim")),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lr_t = lr(step) if callable(lr) else lr
+        beta = 1.0 - step.astype(jnp.float32) ** (-decay)
+
+        def upd(g, v):
+            gf = g.astype(jnp.float32)
+            g2 = jnp.square(gf) + eps
+            if "full" in v:
+                v_new = {"full": beta * v["full"] + (1 - beta) * g2}
+                u = gf * jax.lax.rsqrt(v_new["full"] + eps)
+            else:
+                row = beta * v["row"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                col = beta * v["col"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                v_new = {"row": row, "col": col}
+                r_factor = jax.lax.rsqrt(
+                    row / jnp.maximum(jnp.mean(row, axis=-1, keepdims=True), eps) + eps)
+                c_factor = jax.lax.rsqrt(col + eps)
+                u = gf * r_factor[..., None] * c_factor[..., None, :]
+            # update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return -lr_t * u, v_new
+
+        flat_g, tdef = jax.tree_util.tree_flatten(grads)
+        flat_v = tdef.flatten_up_to(state["v"])
+        out = [upd(g, v) for g, v in zip(flat_g, flat_v)]
+        updates = tdef.unflatten([u for u, _ in out])
+        v_state = tdef.unflatten([v for _, v in out])
+        return updates, {"v": v_state, "step": step}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, lr, weight_decay: float = 0.1) -> Optimizer:
+    if name == "sgd":
+        return sgd(lr)
+    if name == "adam":
+        return adam(lr)
+    if name == "adamw":
+        return adamw(lr, weight_decay=weight_decay)
+    if name == "adafactor":
+        return adafactor(lr)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,124 @@
+"""Batched serving engine: slot-based continuous batching over a fixed-size
+decode batch with pre-allocated caches.
+
+Real-system behaviours kept:
+  * fixed B decode slots; finished/empty slots are refilled from the request
+    queue by prefilling into per-slot cache lanes;
+  * one jit'd decode_step for the whole batch every tick (padded slots decode
+    garbage that is masked out — standard continuous-batching trade);
+  * per-slot stop conditions (max tokens / eos).
+
+serve_step (= lm.decode_step under jit) is exactly what the dry-run lowers
+for the decode_* shapes.
+"""
+from __future__ import annotations
+
+import queue
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.models import lm
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # (T,) int32
+    max_new_tokens: int = 16
+    eos_id: int = -1                # -1: run to max_new_tokens
+    out_tokens: list = field(default_factory=list)
+
+
+@dataclass
+class _Slot:
+    req: Optional[Request] = None
+    remaining: int = 0
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: ModelConfig, *, batch_slots: int = 4,
+                 max_len: int = 256, parallel: Optional[ParallelConfig] = None):
+        self.params = params
+        self.cfg = cfg
+        self.B = batch_slots
+        self.max_len = max_len
+        self.parallel = parallel or ParallelConfig(remat="none")
+        self.slots = [_Slot() for _ in range(batch_slots)]
+        self.queue: "queue.Queue[Request]" = queue.Queue()
+        self.finished: list[Request] = []
+        self.cache = lm.init_cache(cfg, batch_slots, max_len)
+        self.last_tokens = jnp.zeros((batch_slots, 1), jnp.int32)
+
+        self._decode = jax.jit(
+            lambda p, t, c: lm.decode_step(p, t, c, cfg, self.parallel))
+        self._prefill_cache = {}    # per prompt length bucket
+
+    # -- request intake ------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.put(req)
+
+    def _prefill_fn(self, plen: int):
+        if plen not in self._prefill_cache:
+            self._prefill_cache[plen] = jax.jit(
+                lambda p, b: lm.prefill(p, b, self.cfg, self.max_len,
+                                        self.parallel))
+        return self._prefill_cache[plen]
+
+    def _admit(self) -> None:
+        for i, slot in enumerate(self.slots):
+            if slot.req is not None or self.queue.empty():
+                continue
+            req = self.queue.get()
+            plen = len(req.prompt)
+            logits, cache1 = self._prefill_fn(plen)(
+                self.params, {"tokens": jnp.asarray(req.prompt[None], jnp.int32)})
+            # copy the single-lane cache into slot lane i
+            def put(lane, full):
+                if lane.ndim == 0 or full.ndim == 0:
+                    return full
+                # batch dim position differs per leaf: blocks have leading L
+                for ax in range(full.ndim):
+                    if full.shape[ax] == self.B and lane.shape[ax] == 1:
+                        idx = [slice(None)] * full.ndim
+                        idx[ax] = slice(i, i + 1)
+                        return full.at[tuple(idx)].set(lane.astype(full.dtype))
+                return full
+            self.cache = jax.tree_util.tree_map(put, cache1, self.cache)
+            tok = int(jnp.argmax(logits[0]))
+            req.out_tokens.append(tok)
+            self.last_tokens = self.last_tokens.at[i, 0].set(tok)
+            slot.req = req
+            slot.remaining = req.max_new_tokens - 1
+
+    # -- decode tick ----------------------------------------------------------
+    def step(self) -> int:
+        """One engine tick: admit + batched decode. Returns #active slots."""
+        self._admit()
+        active = [s.req is not None for s in self.slots]
+        if not any(active):
+            return 0
+        logits, self.cache = self._decode(self.params, self.last_tokens, self.cache)
+        next_tokens = np.asarray(jnp.argmax(logits, axis=-1))
+        for i, slot in enumerate(self.slots):
+            if slot.req is None:
+                continue
+            tok = int(next_tokens[i])
+            slot.req.out_tokens.append(tok)
+            slot.remaining -= 1
+            self.last_tokens = self.last_tokens.at[i, 0].set(tok)
+            if slot.remaining <= 0 or tok == slot.req.eos_id:
+                self.finished.append(slot.req)
+                self.slots[i] = _Slot()
+        return sum(1 for s in self.slots if s.req is not None)
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> list[Request]:
+        for _ in range(max_ticks):
+            n = self.step()
+            if n == 0 and self.queue.empty():
+                break
+        return self.finished

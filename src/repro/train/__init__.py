@@ -1,0 +1,2 @@
+from repro.train.loop import LoopConfig, LoopResult, train_loop
+from repro.train.train_state import TrainState, init_train_state, make_train_step

@@ -1,0 +1,78 @@
+"""Train state + the jit-able train step builder (microbatching, grad
+clipping, optional int8 gradient compression)."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ParallelConfig, RunConfig
+from repro.models import lm
+from repro.optim import apply_updates, clip_by_global_norm, make_optimizer
+from repro.optim.schedule import cosine_warmup
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jax.Array
+
+
+def init_train_state(key, run: RunConfig, total_steps: int = 10_000,
+                     dtype=jnp.bfloat16) -> tuple[TrainState, Any]:
+    params = lm.init_params(key, run.model, dtype=dtype)
+    opt = _make_opt(run, total_steps)
+    return TrainState(params, opt.init(params), jnp.zeros((), jnp.int32)), opt
+
+
+def _make_opt(run: RunConfig, total_steps: int):
+    lr = cosine_warmup(run.learning_rate, run.warmup_steps, total_steps)
+    return make_optimizer(run.optimizer, lr, run.weight_decay)
+
+
+def make_train_step(run: RunConfig, opt, loss_fn: Callable | None = None,
+                    max_grad_norm: float = 1.0) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics). Microbatching
+    splits the batch on the leading axis and accumulates grads in fp32
+    (sequential lax.scan — the standard grad-accumulation memory trade)."""
+    cfg, parallel = run.model, run.parallel
+    loss_fn = loss_fn or (lambda p, b: lm.loss_fn(p, b, cfg, parallel))
+
+    def grads_of(params, batch):
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return loss, aux, grads
+
+    def train_step(state: TrainState, batch: dict):
+        mb = parallel.microbatches
+        if mb > 1:
+            def split(x):
+                return x.reshape((mb, x.shape[0] // mb) + x.shape[1:])
+            batches = jax.tree_util.tree_map(split, batch)
+
+            def acc_fn(acc, mbatch):
+                loss, aux, grads = grads_of(state.params, mbatch)
+                acc_loss, acc_grads = acc
+                acc_grads = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32) / mb, acc_grads, grads)
+                return (acc_loss + loss / mb, acc_grads), None
+
+            zero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (loss, grads), _ = jax.lax.scan(acc_fn, (jnp.zeros(()), zero), batches)
+            aux = {}
+        else:
+            loss, aux, grads = grads_of(state.params, batch)
+
+        if parallel.grad_compress:
+            from repro.dist.compress import fake_compress
+            grads = fake_compress(grads)
+
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        updates, opt_state = opt.update(grads, state.opt_state, state.params)
+        params = apply_updates(state.params, updates)
+        metrics = {"loss": loss, "grad_norm": gnorm, "step": state.step + 1}
+        return TrainState(params, opt_state, state.step + 1), metrics
+
+    return train_step

@@ -1,0 +1,74 @@
+"""Config-system invariants (hypothesis property tests + registry checks)."""
+import dataclasses
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import (ASSIGNED_ARCHS, SHAPES, get_config, list_archs,
+                                reduced_config)
+from repro.models.lm import layer_kind, n_prelude, n_super, super_period
+
+
+def test_all_assigned_archs_registered():
+    assert set(ASSIGNED_ARCHS) <= set(list_archs())
+    assert len(ASSIGNED_ARCHS) == 10
+
+
+def test_shapes_are_the_assignment():
+    assert set(SHAPES) == {"train_4k", "prefill_32k", "decode_32k", "long_500k"}
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["long_500k"].seq_len == 524288
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_structural_invariants(arch):
+    cfg = get_config(arch)
+    assert cfg.n_heads % cfg.n_kv_heads == 0
+    assert (cfg.n_layers - n_prelude(cfg)) % super_period(cfg) == 0
+    assert n_super(cfg) * super_period(cfg) + n_prelude(cfg) == cfg.n_layers
+    # every layer classifies
+    for i in range(cfg.n_layers):
+        mixer, f = layer_kind(cfg, i)
+        assert mixer in ("attn", "ssm", "rwkv")
+        assert f in ("dense", "moe", "spiking", "none")
+    # reduced config preserves the family interleave
+    r = reduced_config(cfg)
+    kinds_full = [layer_kind(cfg, n_prelude(cfg) + j)[0]
+                  for j in range(super_period(cfg))]
+    kinds_red = [layer_kind(r, n_prelude(r) + j)[0]
+                 for j in range(super_period(r))]
+    assert kinds_full == kinds_red
+
+
+@pytest.mark.parametrize("arch,total_b,active_b", [
+    ("llama3-8b", 8.0, 8.0),
+    ("jamba-v0.1-52b", 51.6, 12.1),
+    ("llama4-maverick-400b-a17b", 400.7, 17.2),
+    ("deepseek-v2-lite-16b", 15.7, 2.7),
+])
+def test_param_counts_match_published(arch, total_b, active_b):
+    cfg = get_config(arch)
+    assert cfg.param_count() / 1e9 == pytest.approx(total_b, rel=0.02)
+    assert cfg.active_param_count() / 1e9 == pytest.approx(active_b, rel=0.03)
+
+
+def test_jamba_interleave_is_1_to_7():
+    cfg = get_config("jamba-v0.1-52b")
+    kinds = [layer_kind(cfg, i)[0] for i in range(cfg.n_layers)]
+    assert kinds.count("attn") == 4 and kinds.count("ssm") == 28
+
+
+def test_long_context_flags():
+    for a in ASSIGNED_ARCHS:
+        cfg = get_config(a)
+        assert cfg.supports_long_context == (a in ("rwkv6-7b", "jamba-v0.1-52b"))
+
+
+@given(st.sampled_from(ASSIGNED_ARCHS), st.integers(0, 200))
+@settings(max_examples=40, deadline=None)
+def test_moe_layer_never_in_prelude(arch, idx):
+    cfg = get_config(arch)
+    if idx >= cfg.n_layers:
+        return
+    if cfg.moe is not None and idx < cfg.moe.first_k_dense:
+        assert not cfg.is_moe_layer(idx)

@@ -1,0 +1,116 @@
+"""The silicon-chain tests: bit-accurate macro == word-level ISA == vectorized
+reference, plus layout and comparator properties."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import isa, macro
+from repro.core.quant import V_MAX, V_MIN
+
+
+def test_physical_layout():
+    assert macro.physical_layout_check()
+
+
+@given(st.integers(min_value=-32, max_value=31))
+@settings(max_examples=64, deadline=None)
+def test_w_encoding_roundtrip(w):
+    assert macro.decode_w(macro.encode_w(w)) == w
+
+
+@given(st.integers(min_value=V_MIN, max_value=V_MAX))
+@settings(max_examples=64, deadline=None)
+def test_v_encoding_roundtrip(v):
+    bits = macro.encode_v(v)
+    assert bits[macro.GUARD] == 0
+    assert macro.decode_v(bits) == v
+
+
+@given(st.integers(min_value=V_MIN, max_value=V_MAX),
+       st.integers(min_value=-31, max_value=31))
+@settings(max_examples=200, deadline=None)
+def test_blfa_w_plus_v_add(v, w):
+    """Bit-serial W+V add (CS mode, sign extension via Wsign broadcast)
+    == integer add mod 2^11."""
+    a = macro.encode_v(v)
+    wbits = macro.encode_w(w)
+    b = np.zeros(12, np.uint8)
+    b[:5] = wbits[:5]
+    b[5] = wbits[5]
+    b[6:] = wbits[5]
+    s, _, _ = macro.blfa_unit_add(a, b, guard_mode="CS")
+    expect = ((v + w) - V_MIN) % 2048 + V_MIN
+    assert macro.decode_v(s) == expect
+
+
+@given(st.integers(min_value=V_MIN, max_value=V_MAX),
+       st.integers(min_value=V_MIN, max_value=V_MAX))
+@settings(max_examples=200, deadline=None)
+def test_blfa_v_plus_v_add(v, u):
+    """Bit-serial V+V add (CF mode through the guard column) == int add."""
+    s, _, _ = macro.blfa_unit_add(macro.encode_v(v), macro.encode_v(u), guard_mode="CF")
+    expect = ((v + u) - V_MIN) % 2048 + V_MIN
+    assert macro.decode_v(s) == expect
+
+
+@given(st.integers(min_value=V_MIN // 2, max_value=V_MAX // 2),
+       st.integers(min_value=0, max_value=V_MAX // 2))
+@settings(max_examples=200, deadline=None)
+def test_comparator(v, th):
+    """SpikeCheck's adder-as-comparator == (v >= th) in the no-overflow regime."""
+    _, _, sign = macro.blfa_unit_add(macro.encode_v(v), macro.encode_v(-th), guard_mode="CF")
+    assert (sign == 0) == (v >= th)
+
+
+# ---------------------------------------------------------------------------
+# Full instruction-level equivalence: BitMacro vs word-level ISA
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("neuron", ["if", "lif", "rmp"])
+def test_bitmacro_matches_isa_timesteps(neuron):
+    rng = np.random.default_rng(0)
+    wq = rng.integers(-31, 32, size=(isa.MACRO_IN, isa.MACRO_OUT)).astype(np.int8)
+    th, leak = 40, 3
+    bm = macro.BitMacro.from_weights(wq, threshold=th, leak=leak)
+    st_ = isa.make_state(wq, threshold=th, leak=leak, clamp_mode="wrap")
+
+    total = isa.InstrCount()
+    for t in range(4):
+        spikes_in = rng.random(isa.MACRO_IN) < 0.15          # ~85% sparsity
+        out_bits = bm.timestep(0, spikes_in, neuron)
+        st_, out_isa, cnt = isa.timestep(st_, 0, spikes_in, neuron)
+        total += cnt
+        np.testing.assert_array_equal(out_bits, np.asarray(out_isa))
+        np.testing.assert_array_equal(bm.read_v(0), np.asarray(st_.vmem[0]))
+    assert bm.counts == total                                # same cycle count
+
+
+def test_isa_matches_vectorized_reference():
+    """Word-level instruction program == the jit-able batched reference."""
+    rng = np.random.default_rng(1)
+    wq = rng.integers(-20, 21, size=(isa.MACRO_IN, isa.MACRO_OUT)).astype(np.int8)
+    th, leak = 60, 2
+    for neuron in ("if", "lif", "rmp"):
+        st_ = isa.make_state(wq, threshold=th, leak=leak)
+        v_ref = jnp.zeros((isa.MACRO_OUT,), jnp.int32)
+        for t in range(5):
+            spikes_in = (rng.random(isa.MACRO_IN) < 0.2).astype(np.int8)
+            st_, s_isa, _ = isa.timestep(st_, 0, spikes_in, neuron)
+            v_ref, s_ref = isa.layer_timestep_int(
+                v_ref, jnp.asarray(wq), jnp.asarray(spikes_in), neuron=neuron,
+                threshold=jnp.int32(th), leak=jnp.int32(leak), reset=jnp.int32(0))
+            np.testing.assert_array_equal(np.asarray(st_.vmem[0]), np.asarray(v_ref))
+            np.testing.assert_array_equal(np.asarray(s_isa).astype(np.int32),
+                                          np.asarray(s_ref))
+
+
+def test_sparsity_drives_instruction_count():
+    """The event-driven property: AccW2V cycles == 2 * (#input spikes)."""
+    rng = np.random.default_rng(2)
+    wq = rng.integers(-31, 32, size=(isa.MACRO_IN, isa.MACRO_OUT)).astype(np.int8)
+    st_ = isa.make_state(wq, threshold=1000)
+    spikes_in = rng.random(isa.MACRO_IN) < 0.3
+    _, _, cnt = isa.timestep(st_, 0, spikes_in, "rmp")
+    assert cnt.acc_w2v == 2 * int(spikes_in.sum())
+    assert cnt.spike_check == 2 and cnt.acc_v2v == 2

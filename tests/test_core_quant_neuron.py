@@ -1,0 +1,104 @@
+"""Unit + property tests: quantization grid and neuron dynamics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant
+from repro.core.neuron import NeuronState, init_state, neuron_step, spike
+
+
+# ---------------------------------------------------------------------------
+# quant
+# ---------------------------------------------------------------------------
+
+def test_quantize_roundtrip_range():
+    w = jnp.linspace(-2.0, 2.0, 101)
+    wq, scale = quant.quantize_w(w)
+    assert wq.dtype == jnp.int8
+    assert int(wq.max()) == quant.W_MAX and int(wq.min()) == quant.W_MIN
+    err = jnp.abs(quant.dequantize_w(wq, scale) - w)
+    assert float(err.max()) <= float(scale) / 2 + 1e-6
+
+
+@given(st.integers(min_value=quant.W_MIN, max_value=quant.W_MAX))
+@settings(max_examples=30, deadline=None)
+def test_quant_int_identity(k):
+    """Integers already on the grid survive quantization exactly."""
+    w = jnp.array([float(k), float(quant.W_MAX)])  # pin the scale
+    wq, _ = quant.quantize_w(w)
+    assert int(wq[0]) == k
+
+
+def test_fake_quant_ste_gradient():
+    w = jnp.array([0.3, -0.7, 1.2])
+    g = jax.grad(lambda w: jnp.sum(quant.fake_quant_w(w) * jnp.array([1.0, 2.0, 3.0])))(w)
+    np.testing.assert_allclose(np.asarray(g), [1.0, 2.0, 3.0])  # straight-through
+
+
+@given(st.integers(min_value=-5000, max_value=5000))
+@settings(max_examples=50, deadline=None)
+def test_clamp_modes(v):
+    sat = int(quant.clamp_v(jnp.int32(v), "saturate"))
+    wrap = int(quant.clamp_v(jnp.int32(v), "wrap"))
+    assert quant.V_MIN <= sat <= quant.V_MAX
+    assert quant.V_MIN <= wrap <= quant.V_MAX
+    assert (wrap - v) % 2048 == 0                     # two's complement rollover
+    if quant.V_MIN <= v <= quant.V_MAX:
+        assert sat == v == wrap
+
+
+# ---------------------------------------------------------------------------
+# neurons
+# ---------------------------------------------------------------------------
+
+def _run(neuron, currents, th=1.0, leak=0.25, **kw):
+    st_ = init_state(())
+    vs, ss = [], []
+    for c in currents:
+        st_, s = neuron_step(st_, jnp.float32(c), neuron=neuron, threshold=th,
+                             leak=leak, **kw)
+        vs.append(float(st_.v)); ss.append(float(s))
+    return vs, ss
+
+
+def test_if_dynamics():
+    vs, ss = _run("if", [0.4, 0.4, 0.4])
+    assert ss == [0.0, 0.0, 1.0]
+    assert vs[:2] == [pytest.approx(0.4), pytest.approx(0.8)]
+    assert vs[2] == 0.0                               # hard reset
+
+
+def test_lif_subtractive_leak():
+    vs, ss = _run("lif", [0.5, 0.0], th=10.0, leak=0.25)
+    assert vs[0] == pytest.approx(0.25)               # 0.5 - leak
+    assert vs[1] == pytest.approx(0.0)                # 0.25 - 0.25
+
+
+def test_rmp_soft_reset():
+    vs, ss = _run("rmp", [1.7], th=1.0)
+    assert ss == [1.0]
+    assert vs[0] == pytest.approx(0.7)                # v - th, residual kept
+
+
+def test_rmp_never_fires_below_threshold_property():
+    @given(st.lists(st.floats(-0.2, 0.0999), min_size=1, max_size=10))
+    @settings(max_examples=25, deadline=None)
+    def inner(cs):
+        _, ss = _run("rmp", cs, th=1.0)
+        assert all(s == 0.0 for s in ss)
+    inner()
+
+
+def test_surrogate_gradient_triangle():
+    g = jax.grad(lambda v: spike(v, 1.0, 1.0))(jnp.float32(0.9))
+    assert float(g) == pytest.approx(0.9)             # 1 - |0.9-1| = 0.9
+    g0 = jax.grad(lambda v: spike(v, 1.0, 1.0))(jnp.float32(3.0))
+    assert float(g0) == 0.0
+
+
+def test_threshold_gradient_flows():
+    th = jnp.float32(1.0)
+    g = jax.grad(lambda t: jnp.sum(spike(jnp.array([0.9, 1.05]), t, 1.0)))(th)
+    assert np.isfinite(float(g)) and float(g) != 0.0

@@ -1,0 +1,146 @@
+"""Per-kernel validation: shape/dtype sweeps against the pure-jnp oracles,
+all Pallas kernels in interpret mode (CPU container; TPU is the target)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.fused_snn_step.ops import fused_snn_layer
+from repro.kernels.fused_snn_step.ref import fused_snn_layer_ref
+from repro.kernels.wkv6.ops import wkv6, wkv6_decode_step
+from repro.kernels.wkv6.ref import wkv6_chunked, wkv6_sequential
+
+
+# ---------------------------------------------------------------------------
+# fused_snn_step
+# ---------------------------------------------------------------------------
+
+SNN_SHAPES = [
+    # T, B, N_in, N_out  (macro-ish, ragged, large)
+    (10, 4, 100, 12),
+    (10, 4, 128, 128),
+    (7, 3, 130, 20),
+    (4, 16, 256, 140),
+]
+
+
+@pytest.mark.parametrize("neuron", ["if", "lif", "rmp"])
+@pytest.mark.parametrize("shape", SNN_SHAPES)
+def test_fused_snn_kernel_matches_ref(neuron, shape):
+    T, B, Nin, Nout = shape
+    rng = np.random.default_rng(hash((neuron, shape)) % 2**32)
+    spikes = jnp.asarray((rng.random((T, B, Nin)) < 0.2).astype(np.int8))
+    wq = jnp.asarray(rng.integers(-31, 32, (Nin, Nout)).astype(np.int8))
+    kw = dict(threshold=60, leak=2, reset=0, neuron=neuron)
+    out_k, v_k = fused_snn_layer(spikes, wq, interpret=True, **kw)
+    out_r, v_r = fused_snn_layer_ref(spikes, wq, **kw)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+    np.testing.assert_array_equal(np.asarray(v_k), np.asarray(v_r))
+
+
+@pytest.mark.parametrize("clamp_mode", ["saturate", "wrap"])
+def test_fused_snn_clamp_modes(clamp_mode):
+    rng = np.random.default_rng(7)
+    spikes = jnp.asarray((rng.random((6, 2, 128)) < 0.9).astype(np.int8))  # dense -> overflow
+    wq = jnp.asarray(rng.integers(-31, 32, (128, 12)).astype(np.int8))
+    kw = dict(threshold=1000, neuron="if", clamp_mode=clamp_mode)
+    out_k, v_k = fused_snn_layer(spikes, wq, interpret=True, **kw)
+    out_r, v_r = fused_snn_layer_ref(spikes, wq, **kw)
+    np.testing.assert_array_equal(np.asarray(v_k), np.asarray(v_r))
+    assert int(jnp.max(jnp.abs(v_k))) <= 1024
+
+
+def test_fused_snn_dtype_bool_input():
+    rng = np.random.default_rng(3)
+    spikes = jnp.asarray(rng.random((5, 2, 64)) < 0.3)       # bool
+    wq = jnp.asarray(rng.integers(-31, 32, (64, 24)).astype(np.int8))
+    out_k, v_k = fused_snn_layer(spikes, wq, threshold=40, neuron="rmp",
+                                 interpret=True)
+    out_r, v_r = fused_snn_layer_ref(spikes.astype(jnp.int8), wq,
+                                     threshold=40, neuron="rmp")
+    np.testing.assert_array_equal(np.asarray(v_k), np.asarray(v_r))
+
+
+# ---------------------------------------------------------------------------
+# wkv6
+# ---------------------------------------------------------------------------
+
+def _wkv_inputs(B, T, H, K, V, seed=0, w_lo=0.6):
+    rng = np.random.default_rng(seed)
+    r = rng.standard_normal((B, T, H, K)).astype(np.float32) * 0.5
+    k = rng.standard_normal((B, T, H, K)).astype(np.float32) * 0.5
+    v = rng.standard_normal((B, T, H, V)).astype(np.float32) * 0.5
+    w = rng.uniform(w_lo, 0.999, (B, T, H, K)).astype(np.float32)
+    u = rng.standard_normal((H, K)).astype(np.float32) * 0.3
+    return map(jnp.asarray, (r, k, v, w, u))
+
+
+def _to_bh(x, B, H):
+    return jnp.moveaxis(x, 2, 1).reshape(B * H, x.shape[1], x.shape[-1])
+
+
+WKV_SHAPES = [
+    # B, T, H, K, V
+    (2, 64, 2, 64, 64),
+    (1, 128, 3, 64, 64),
+    (2, 100, 2, 32, 32),     # ragged T (padding path)
+    (1, 192, 1, 16, 64),     # K != V
+]
+
+
+@pytest.mark.parametrize("shape", WKV_SHAPES)
+def test_wkv6_chunked_matches_sequential(shape):
+    B, T, H, K, V = shape
+    r, k, v, w, u = _wkv_inputs(B, T, H, K, V, seed=sum(shape))
+    ub = jnp.broadcast_to(u[None], (B, H, K)).reshape(B * H, K)
+    y_seq, s_seq = wkv6_sequential(_to_bh(r, B, H), _to_bh(k, B, H),
+                                   _to_bh(v, B, H), _to_bh(w, B, H), ub)
+    y_ops, s_ops = wkv6(r, k, v, w, u, use_pallas=False)
+    y_ops_bh = _to_bh(y_ops, B, H)
+    np.testing.assert_allclose(np.asarray(y_ops_bh), np.asarray(y_seq),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s_ops.reshape(B * H, K, V)),
+                               np.asarray(s_seq), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("shape", WKV_SHAPES[:2])
+def test_wkv6_pallas_matches_chunked(shape):
+    B, T, H, K, V = shape
+    r, k, v, w, u = _wkv_inputs(B, T, H, K, V, seed=13 + sum(shape))
+    y_p, s_p = wkv6(r, k, v, w, u, use_pallas=True, interpret=True)
+    y_c, s_c = wkv6(r, k, v, w, u, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(y_p), np.asarray(y_c), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s_p), np.asarray(s_c), rtol=1e-5, atol=1e-5)
+
+
+def test_wkv6_initial_state_continuation():
+    """Splitting a sequence must equal running it whole (serving handoff)."""
+    B, T, H, K, V = 1, 128, 2, 32, 32
+    r, k, v, w, u = _wkv_inputs(B, T, H, K, V, seed=5)
+    y_full, s_full = wkv6(r, k, v, w, u, use_pallas=False)
+    half = T // 2
+    y1, s1 = wkv6(r[:, :half], k[:, :half], v[:, :half], w[:, :half], u,
+                  use_pallas=False)
+    y2, s2 = wkv6(r[:, half:], k[:, half:], v[:, half:], w[:, half:], u,
+                  s0=s1, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_wkv6_decode_step_matches_sequential():
+    B, H, K, V = 2, 2, 32, 32
+    r, k, v, w, u = _wkv_inputs(B, 8, H, K, V, seed=9)
+    s = jnp.zeros((B, H, K, V))
+    ys = []
+    for t in range(8):
+        y, s = wkv6_decode_step(r[:, t].swapaxes(1, 1), k[:, t], v[:, t],
+                                w[:, t], u, s)
+        ys.append(y)
+    y_dec = jnp.stack(ys, axis=1)                            # (B, T, H, V)
+    y_full, s_full = wkv6(r, k, v, w, u, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(y_dec), np.asarray(y_full),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_full),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,49 @@
+"""SpikingFFN (IMPULSE layer inside the LM stack): shapes, grads, rates,
+and end-to-end trainability of a spiking-FFN transformer."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import (ParallelConfig, ShapeConfig, SpikingConfig,
+                                get_config, reduced_config)
+from repro.models import io_spec, lm
+from repro.models.spiking_ffn import init_spiking_ffn, spiking_ffn
+
+
+def _cfg():
+    base = reduced_config(get_config("llama3.2-1b"))
+    return dataclasses.replace(
+        base, spiking=SpikingConfig(neuron="rmp", timesteps=6, threshold=0.5))
+
+
+def test_spiking_ffn_forward_rate_and_grads():
+    cfg = _cfg()
+    p = init_spiking_ffn(jax.random.PRNGKey(0), cfg.d_model, cfg.d_ff,
+                         dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model)) * 0.5
+
+    def f(p):
+        out, rate = spiking_ffn(x, p, cfg)
+        return jnp.sum(out ** 2), rate
+
+    (val, rate), g = jax.value_and_grad(f, has_aux=True)(p)
+    assert 0.0 <= float(rate) <= 1.0
+    total = sum(float(jnp.abs(t).sum()) for t in jax.tree_util.tree_leaves(g))
+    assert np.isfinite(total) and total > 0     # surrogate grads flow
+
+
+def test_spiking_lm_trains():
+    cfg = _cfg()
+    shape = ShapeConfig("t", 32, 2, "train")
+    par = ParallelConfig(remat="none", fsdp=False, seq_parallel=False)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    batch = io_spec.materialize(io_spec.train_batch_spec(cfg, shape))
+    (loss, aux), grads = jax.jit(jax.value_and_grad(
+        lambda p, b: lm.loss_fn(p, b, cfg, par), has_aux=True))(params, batch)
+    assert np.isfinite(float(loss))
+    assert float(aux["aux"]) > 0                # spikes fired somewhere
+    gn = sum(float(jnp.abs(t.astype(jnp.float32)).sum())
+             for t in jax.tree_util.tree_leaves(grads))
+    assert np.isfinite(gn) and gn > 0

@@ -1,0 +1,238 @@
+"""Substrate tests: optimizers, checkpointing (+restart), data pipeline,
+train loop fault tolerance, serving engine."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import (ParallelConfig, RunConfig, ShapeConfig,
+                                get_config, reduced_config)
+from repro.data import ShardedLoader, lm_batch_fn, make_sentiment_vocab, sentiment_batch
+from repro.models import lm
+from repro.optim import (adafactor, adamw, apply_updates, clip_by_global_norm,
+                         make_optimizer, sgd)
+from repro.serve import Request, ServeEngine
+from repro.train import LoopConfig, init_train_state, make_train_step, train_loop
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+def _quad_params():
+    return {"w": jnp.array([3.0, -2.0]), "b": jnp.array([[1.0, 1.0], [1.0, 1.0]])}
+
+
+@pytest.mark.parametrize("name", ["sgd", "adam", "adamw", "adafactor"])
+def test_optimizers_minimize_quadratic(name):
+    params = _quad_params()
+    opt = make_optimizer(name, lr=0.1, weight_decay=0.0)
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)
+
+    l0 = float(loss(params))
+    for _ in range(60):
+        g = jax.grad(loss)(params)
+        upd, state = opt.update(g, state, params)
+        params = apply_updates(params, upd)
+    assert float(loss(params)) < 0.1 * l0
+
+
+def test_adafactor_memory_is_factored():
+    p = {"w": jnp.zeros((64, 32))}
+    st = adafactor(1e-3).init(p)
+    leaves = jax.tree_util.tree_leaves(st["v"])
+    assert sum(x.size for x in leaves) == 64 + 32            # not 64*32
+
+
+def test_grad_clip():
+    g = {"a": jnp.full((10,), 100.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) > 100
+    _, n2 = clip_by_global_norm(clipped, 1e9)
+    assert float(n2) == pytest.approx(1.0, rel=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"a": jnp.arange(6).reshape(2, 3), "b": {"c": jnp.float32(1.5)}}
+    for s in (1, 2, 3):
+        mgr.save(s, jax.tree_util.tree_map(lambda x: x + s, tree), blocking=True)
+    assert mgr.all_steps() == [2, 3]                         # keep=2 gc'd step 1
+    step, restored = mgr.restore(like=tree)
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(tree["a"]) + 3)
+
+
+def test_checkpoint_atomicity_tmp_never_visible(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    tree = {"w": jnp.zeros((256, 256))}
+    mgr.save(7, tree)                                        # async
+    mgr.wait()
+    assert (tmp_path / "step_7").exists()
+    assert not list(tmp_path.glob("*.tmp"))
+
+
+def test_checkpoint_elastic_restore_resharded(tmp_path):
+    """Restore onto a different sharding than saved (elastic restart)."""
+    mgr = CheckpointManager(str(tmp_path))
+    tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
+    mgr.save(1, tree, blocking=True)
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    sh = {"w": NamedSharding(mesh, P("data", None))}
+    step, restored = mgr.restore(like=tree, shardings=sh)
+    assert restored["w"].sharding == sh["w"]
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(tree["w"]))
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_loader_deterministic_and_sharded():
+    fn = lm_batch_fn(vocab=97, global_batch=8, seq=16, seed=3)
+    a = fn(5, 0, 2)
+    b = fn(5, 0, 2)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])  # pure in step
+    c = fn(5, 1, 2)
+    assert not np.array_equal(a["tokens"], c["tokens"])      # shards differ
+    assert a["tokens"].shape == (4, 16)                      # local = global/shards
+
+
+def test_loader_prefetch_and_resume():
+    fn = lm_batch_fn(vocab=17, global_batch=2, seq=8, seed=0)
+    l1 = ShardedLoader(fn, start_step=0)
+    batches1 = [next(l1) for _ in range(4)]
+    l1.close()
+    l2 = ShardedLoader(fn, start_step=2)                     # restart mid-stream
+    s, b = next(l2)
+    l2.close()
+    assert s == 2
+    np.testing.assert_array_equal(b["tokens"], batches1[2][1]["tokens"])
+
+
+def test_sentiment_task_needs_sequence():
+    """Negators flip following words: per-word linear readout can't saturate."""
+    ds = make_sentiment_vocab()
+    x, y = sentiment_batch(ds, 512, 12, seed=1)
+    assert x.shape == (512, 12, 100)
+    assert 0.3 < y.mean() < 0.7                              # balanced-ish
+
+
+# ---------------------------------------------------------------------------
+# train loop fault tolerance
+# ---------------------------------------------------------------------------
+
+def _tiny_run():
+    cfg = reduced_config(get_config("llama3.2-1b"))
+    shape = ShapeConfig("t", 32, 4, "train")
+    return RunConfig(model=cfg, shape=shape,
+                     parallel=ParallelConfig(remat="none", fsdp=False,
+                                             seq_parallel=False),
+                     optimizer="adamw", learning_rate=1e-3, warmup_steps=2)
+
+
+def test_train_loop_checkpoint_restart(tmp_path):
+    run = _tiny_run()
+    state, opt = init_train_state(jax.random.PRNGKey(0), run, total_steps=8)
+    step_fn = jax.jit(make_train_step(run, opt))
+    fn = lm_batch_fn(run.model.vocab_size, 4, 32, seed=0)
+
+    def mk_loader(start=0):
+        return ShardedLoader(lambda s, i, n: {k: jnp.asarray(v) for k, v in
+                                              fn(s, i, n).items()},
+                             start_step=start)
+
+    cfg = LoopConfig(total_steps=4, ckpt_every=2, ckpt_dir=str(tmp_path),
+                     log_every=1)
+    r1 = train_loop(step_fn, state, mk_loader(), cfg)
+    assert int(r1.state.step) == 4
+
+    # "crash" and restart: fresh state, must resume from the checkpoint
+    state2, _ = init_train_state(jax.random.PRNGKey(0), run, total_steps=8)
+    cfg2 = LoopConfig(total_steps=6, ckpt_every=2, ckpt_dir=str(tmp_path),
+                      log_every=1)
+    r2 = train_loop(step_fn, state2, mk_loader(), cfg2)
+    assert r2.resumed_from == 4
+    assert int(r2.state.step) == 6
+
+
+def test_train_loss_decreases():
+    run = _tiny_run()
+    state, opt = init_train_state(jax.random.PRNGKey(0), run, total_steps=30)
+    step_fn = jax.jit(make_train_step(run, opt))
+    fn = lm_batch_fn(run.model.vocab_size, 4, 32, seed=0)
+    losses = []
+    for s in range(20):
+        batch = {k: jnp.asarray(v) for k, v in fn(s, 0, 1).items()}
+        state, m = step_fn(state, batch)
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.1
+
+
+def test_microbatch_accumulation_matches_full_batch():
+    run = _tiny_run()
+    state, opt = init_train_state(jax.random.PRNGKey(0), run, total_steps=8)
+    fn = lm_batch_fn(run.model.vocab_size, 4, 32, seed=0)
+    batch = {k: jnp.asarray(v) for k, v in fn(0, 0, 1).items()}
+    s_full, m_full = jax.jit(make_train_step(run, opt))(state, batch)
+    run_mb = run.replace(parallel=ParallelConfig(remat="none", fsdp=False,
+                                                 seq_parallel=False,
+                                                 microbatches=2))
+    s_mb, m_mb = jax.jit(make_train_step(run_mb, opt))(state, batch)
+    assert float(m_full["loss"]) == pytest.approx(float(m_mb["loss"]), rel=2e-2)
+    w1 = jax.tree_util.tree_leaves(s_full.params)[0]
+    w2 = jax.tree_util.tree_leaves(s_mb.params)[0]
+    np.testing.assert_allclose(np.asarray(w1, np.float32),
+                               np.asarray(w2, np.float32), atol=5e-2)
+
+
+# ---------------------------------------------------------------------------
+# serving engine
+# ---------------------------------------------------------------------------
+
+def test_serve_engine_continuous_batching():
+    cfg = reduced_config(get_config("llama3.2-1b"))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(params, cfg, batch_slots=2, max_len=64)
+    rng = np.random.default_rng(0)
+    for rid in range(5):                                     # > slots: queueing
+        eng.submit(Request(rid=rid, prompt=rng.integers(0, 64, 6),
+                           max_new_tokens=4))
+    done = eng.run_until_drained()
+    assert len(done) == 5
+    for r in done:
+        assert len(r.out_tokens) == 4
+        assert all(0 <= t < cfg.vocab_size for t in r.out_tokens)
+
+
+def test_serve_engine_matches_manual_decode():
+    """Engine output == manual prefill+decode for a single request."""
+    cfg = reduced_config(get_config("llama3.2-1b"))
+    params = lm.init_params(jax.random.PRNGKey(1), cfg, dtype=jnp.float32)
+    prompt = np.asarray([5, 9, 2, 7], np.int64)
+    eng = ServeEngine(params, cfg, batch_slots=2, max_len=32)
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=3))
+    done = eng.run_until_drained()
+    par = ParallelConfig(remat="none")
+    logits, cache = lm.prefill(params, {"tokens": jnp.asarray(prompt[None])},
+                               cfg, 32, par)
+    toks = [int(jnp.argmax(logits[0]))]
+    for _ in range(2):
+        logits, cache = lm.decode_step(
+            params, jnp.asarray([[toks[-1]]], jnp.int32), cache, cfg, par)
+        toks.append(int(jnp.argmax(logits[0])))
+    assert done[0].out_tokens == toks
