@@ -9,7 +9,7 @@ import numpy as np
 
 from benchmarks.common import emit, time_call
 from repro.configs.impulse_snn import IMDB
-from repro.core import energy, snn
+from repro.core import energy, pipeline, snn
 from repro.data import make_sentiment_vocab, sentiment_batch
 from repro.optim import adamw, apply_updates
 
@@ -35,9 +35,15 @@ def run() -> list[str]:
                                     jnp.asarray(yb))
 
     xb, _ = sentiment_batch(ds, 256, 12, seed=77_777)
-    us = time_call(lambda: snn.sentiment_apply_int(params, jnp.asarray(xb[:32]),
-                                                   IMDB)[0])
-    _, rasters, counts = snn.sentiment_apply_int(params, jnp.asarray(xb), IMDB)
+    # deployed integer program via the network pipeline (int_ref backend)
+    program = pipeline.compile_network(IMDB, params, domain="int")
+    xs_small = pipeline.present_words(jnp.asarray(xb[:32]), IMDB.timesteps)
+    us = time_call(lambda: pipeline.run_network(program, xs_small,
+                                                "int_ref").logits)
+    xs = pipeline.present_words(jnp.asarray(xb), IMDB.timesteps)
+    res = pipeline.run_network(program, xs, "int_ref")
+    rasters = res.rasters
+    counts = pipeline.count_network_instructions(program, rasters)
     spars = [1.0 - float(np.asarray(r).mean()) for r in rasters]
     overall = float(np.mean(spars))
     rows.append(emit(

@@ -53,7 +53,12 @@ def run() -> list[str]:
     us = time_call(lambda: snn.sentiment_apply(p, x[:64], IMDB_T)[0])
     logits, _ = snn.sentiment_apply(p, x, IMDB_T)
     acc_snn = float(jnp.mean((logits > 0) == (y > 0.5)))
-    logits_i, _, _ = snn.sentiment_apply_int(p, x, IMDB_T)
+    # deployed integer program via the network pipeline
+    from repro.core import pipeline
+    program = pipeline.compile_network(IMDB_T, p, domain="int")
+    logits_i = pipeline.run_network(
+        program, pipeline.present_words(x, IMDB_T.timesteps),
+        "int_ref").logits[:, 0]
     acc_int = float(jnp.mean((logits_i > 0) == (y > 0.5)))
     rows.append(emit("fig9b_snn", us,
                      f"params={n_snn} acc={acc_snn:.4f} acc_int={acc_int:.4f} "

@@ -43,6 +43,14 @@ def run() -> list[str]:
     rows.append(emit("fig9_fused_kernel_10steps", us,
                      f"macro_energy={energy.sequence_energy_j(cnt)*1e9:.2f}nJ "
                      f"events={events}"))
+    # the network-level fused kernel on the same work plus a second layer
+    from repro.kernels.fused_snn_net.ops import fused_snn_net
+    w2 = jnp.asarray(rng.integers(-31, 32, (128, 128)).astype(np.int8))
+    us = time_call(lambda: fused_snn_net(
+        spikes, [wq, w2], thresholds=(60,), leaks=(0,), neuron="rmp",
+        interpret=True, emit_rasters=False)[1][-1])
+    rows.append(emit("fig9_fused_net_10steps", us,
+                     "whole-stack VMEM-resident V (see pipeline_fusion)"))
     return rows
 
 

@@ -1,0 +1,95 @@
+"""Network-fusion benchmark: per-layer kernel dispatch vs the fused network
+kernel on the IMDB sentiment stack.
+
+Two quantities per configuration:
+  * wall-clock of the full T_total presentation (Pallas interpret on CPU
+    containers — RELATIVE numbers; the TPU target is the real measurement);
+  * estimated HBM bytes for V and inter-layer spikes, from the kernels'
+    traffic models:
+      per-layer dispatch: every layer round-trips its input+output rasters
+        (T*B*N int8 each way) and writes V once per layer;
+      fused net:          input raster in, final V out; inter-layer spikes
+        and V never touch HBM (emit_rasters=False serving mode; accounting
+        mode adds the raster stores back).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_call
+from repro.kernels.fused_snn_net.ops import fused_snn_net
+from repro.kernels.fused_snn_step.ops import fused_snn_layer
+
+# IMDB deployment shapes: encoder(100) -> 128 -> 128 -> 1, 12 words x 10 steps
+LAYERS = [(100, 128), (128, 128), (128, 1)]
+T_TOTAL, B = 120, 8
+THRESH, LEAK = 60, 2
+
+
+def _per_layer(spikes, ws):
+    cur = spikes
+    for i, w in enumerate(ws[:-1]):
+        cur, v = fused_snn_layer(cur, w, threshold=THRESH, leak=LEAK,
+                                 neuron="rmp", interpret=True)
+    # readout accumulate (wide)
+    acc = jnp.einsum("tbn,no->bo", cur.astype(jnp.int32),
+                     ws[-1].astype(jnp.int32))
+    return acc
+
+
+def _hbm_bytes(emit_rasters: bool, fused: bool) -> int:
+    """int8 spike rasters + int32 V crossing HBM per inference batch."""
+    bytes_ = T_TOTAL * B * LAYERS[0][0]                  # input raster (int8)
+    for i, (n_in, n_out) in enumerate(LAYERS):
+        is_readout = i == len(LAYERS) - 1
+        if fused:
+            if emit_rasters and not is_readout:
+                bytes_ += T_TOTAL * B * n_out            # raster store
+        else:
+            # per-layer: output raster store + next layer's load, V write
+            if not is_readout:
+                bytes_ += 2 * T_TOTAL * B * n_out
+            bytes_ += 4 * B * n_out                      # V leaves the kernel
+    bytes_ += 4 * B * LAYERS[-1][1]                      # final V out
+    return bytes_
+
+
+def run() -> list[str]:
+    rows = []
+    rng = np.random.default_rng(0)
+    spikes = jnp.asarray((rng.random((T_TOTAL, B, LAYERS[0][0])) < 0.1)
+                         .astype(np.int8))
+    ws = [jnp.asarray(rng.integers(-31, 32, shp).astype(np.int8))
+          for shp in LAYERS]
+    ths, lks = (THRESH, THRESH), (LEAK, LEAK)
+
+    us_layer = time_call(lambda: _per_layer(spikes, ws))
+    rows.append(emit("fusion_per_layer_dispatch", us_layer,
+                     f"hbm_bytes={_hbm_bytes(True, fused=False)}"))
+    us_acct = time_call(lambda: fused_snn_net(
+        spikes, ws, thresholds=ths, leaks=lks, neuron="rmp",
+        interpret=True, emit_rasters=True)[1][-1])
+    rows.append(emit("fusion_fused_net_accounting", us_acct,
+                     f"hbm_bytes={_hbm_bytes(True, fused=True)} "
+                     f"speedup={us_layer/us_acct:.2f}x"))
+    us_serve = time_call(lambda: fused_snn_net(
+        spikes, ws, thresholds=ths, leaks=lks, neuron="rmp",
+        interpret=True, emit_rasters=False)[1][-1])
+    b_layer, b_serve = _hbm_bytes(True, False), _hbm_bytes(False, True)
+    rows.append(emit("fusion_fused_net_serving", us_serve,
+                     f"hbm_bytes={b_serve} "
+                     f"hbm_reduction={(1 - b_serve/b_layer)*100:.1f}% "
+                     f"speedup={us_layer/us_serve:.2f}x"))
+    # numerical parity of the two dispatch strategies (same final readout V)
+    v_layer = np.asarray(_per_layer(spikes, ws))
+    v_fused = np.asarray(fused_snn_net(spikes, ws, thresholds=ths, leaks=lks,
+                                       neuron="rmp", interpret=True,
+                                       emit_rasters=False)[1][-1])
+    rows.append(emit("fusion_parity", 0.0,
+                     f"identical={bool(np.array_equal(v_layer, v_fused))}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

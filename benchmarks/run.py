@@ -12,12 +12,14 @@ import time
 
 def main() -> None:
     from benchmarks import (fig6_neuron_energy, fig9_accuracy, fig9_efficiency,
-                            fig11_sparsity_edp, roofline, table1_comparison)
+                            fig11_sparsity_edp, pipeline_fusion, roofline,
+                            table1_comparison)
     print("name,us_per_call,derived")
     t0 = time.time()
     mods = [("fig6", fig6_neuron_energy), ("fig9_eff", fig9_efficiency),
             ("fig9_acc", fig9_accuracy), ("fig11", fig11_sparsity_edp),
-            ("table1", table1_comparison), ("roofline", roofline)]
+            ("fusion", pipeline_fusion), ("table1", table1_comparison),
+            ("roofline", roofline)]
     failures = 0
     for name, mod in mods:
         try:

@@ -1,17 +1,21 @@
-"""Quickstart: the IMPULSE macro end to end in 80 lines.
+"""Quickstart: the IMPULSE macro end to end in ~100 lines.
 
 Maps a tiny spiking layer onto the bit-accurate macro model, runs the
 in-memory instruction sequence for a few timesteps, cross-checks the
-word-level ISA and the Pallas fused kernel, and prints the calibrated
-energy/EDP numbers from the paper.
+word-level ISA — then compiles a whole NETWORK to an SNNProgram and runs it
+on every execution backend (float / int_ref / fused-net Pallas / bitmacro),
+verifying bit-identical spike rasters, and prints the calibrated energy/EDP
+numbers from the paper.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
+import jax
 import jax.numpy as jnp
 
-from repro.core import energy, isa, macro
-from repro.kernels.fused_snn_step.ops import fused_snn_layer
+from repro.configs.base import SpikingConfig
+from repro.configs.impulse_snn import SNNModelConfig
+from repro.core import energy, isa, macro, pipeline, snn
 
 rng = np.random.default_rng(0)
 
@@ -25,10 +29,8 @@ state = isa.make_state(wq, threshold=threshold, leak=leak, clamp_mode="wrap")
 # --- 2. run 5 timesteps of RMP neurons at ~85% input sparsity ---------------
 print("timestep | spikes (bit-accurate macro) | ISA match | V match")
 total = isa.InstrCount()
-spike_raster = []
 for t in range(5):
     in_spikes = rng.random(isa.MACRO_IN) < 0.15
-    spike_raster.append(in_spikes)
     out_bits = bit_macro.timestep(0, in_spikes, "rmp")
     state, out_isa, cnt = isa.timestep(state, 0, in_spikes, "rmp")
     total += cnt
@@ -36,20 +38,42 @@ for t in range(5):
     ok_v = bool(np.array_equal(bit_macro.read_v(0), np.asarray(state.vmem[0])))
     print(f"   {t}     | {out_bits.astype(int)} | {ok_s} | {ok_v}")
 
-# --- 3. same program through the Pallas fused kernel (TPU target) ----------
-spikes = jnp.asarray(np.stack(spike_raster)[:, None, :].astype(np.int8))
-out_k, v_k = fused_snn_layer(spikes, jnp.asarray(wq), threshold=threshold,
-                             leak=leak, neuron="rmp", clamp_mode="wrap",
-                             interpret=True)
-print("\nPallas fused kernel matches bit-accurate macro:",
-      bool(np.array_equal(np.asarray(v_k[0]), bit_macro.read_v(0))))
+# --- 3. a whole network as one compiled program, on every backend -----------
+# encoder(24) -> FC 24x24 -> FC 24x12 -> readout 12x1, RMP neurons
+cfg = SNNModelConfig(
+    arch_id="quickstart", layer_sizes=(24, 24, 12, 1),
+    spiking=SpikingConfig(neuron="rmp", timesteps=4, threshold=1.0,
+                          leak=0.0625, w_bits=6, v_bits=11),
+    timesteps=4)
+params = snn.init_fc_snn(jax.random.PRNGKey(0), cfg)
+x_words = jnp.asarray(rng.standard_normal((2, 3, 24)).astype(np.float32))
+xs = pipeline.present_words(x_words, cfg.timesteps)
+
+# wrap = raw silicon two's-complement arithmetic, the mode the bit-level
+# macro implements (saturation is a word-level deployment policy)
+program = pipeline.compile_network(cfg, params, domain="int", clamp_mode="wrap")
+runs = {
+    "float":    pipeline.run_network(program, xs, "float", collect_rasters=True),
+    "int_ref":  pipeline.run_network(program, xs, "int_ref"),
+    "pallas":   pipeline.run_network(program, xs, "pallas", interpret=True),
+    "bitmacro": pipeline.run_network(program, xs, "bitmacro"),
+}
+ref = runs["int_ref"]
+print("\nnetwork program on all backends (vs int_ref):")
+for name, res in runs.items():
+    ok = all(np.array_equal(np.asarray(a, np.int8), np.asarray(b))
+             for a, b in zip(res.rasters, ref.rasters))
+    ok &= bool(np.allclose(np.asarray(res.logits), np.asarray(ref.logits)))
+    print(f"  {name:8s} rasters+logits match: {ok}")
+counts = pipeline.count_network_instructions(program, ref.rasters)
 
 # --- 4. energy accounting (calibrated to the paper's silicon) ---------------
-print(f"\ninstruction counts: {total}")
+print(f"\nsingle-macro instruction counts: {total}")
 e = energy.sequence_energy_j(total)
 d = energy.sequence_delay_s(total)
 print(f"energy @0.85V/200MHz: {e*1e12:.1f} pJ | delay: {d*1e9:.1f} ns | "
       f"EDP: {e*d:.3e} J*s")
+print(f"network program counts (energy-model input): {counts}")
 print(f"Fig.6  energy/update  IF={energy.neuron_update_energy_pj('if'):.2f} "
       f"LIF={energy.neuron_update_energy_pj('lif'):.2f} "
       f"RMP={energy.neuron_update_energy_pj('rmp'):.2f} pJ "

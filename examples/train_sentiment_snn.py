@@ -20,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.impulse_snn import IMDB
-from repro.core import energy, snn
+from repro.core import energy, pipeline, snn
 from repro.data import imdb, make_sentiment_vocab, sentiment_batch
 from repro.optim import adamw, apply_updates
 
@@ -32,6 +32,11 @@ def main(argv=None):
     ap.add_argument("--words", type=int, default=12)
     ap.add_argument("--lr", type=float, default=2e-3)
     ap.add_argument("--trace", action="store_true", help="print Fig.10-style V trace")
+    ap.add_argument("--backend", default="int_ref",
+                    choices=["int_ref", "pallas"],
+                    help="integer backend for the deployed-program eval")
+    ap.add_argument("--interpret", action="store_true",
+                    help="Pallas interpret mode (CPU containers)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -75,11 +80,19 @@ def main(argv=None):
     x, y = jnp.asarray(xb), jnp.asarray(yb)
     logits, _ = snn.sentiment_apply(params, x, IMDB)
     acc_f = float(jnp.mean((logits > 0) == (y > 0.5)))
-    logits_i, rasters, counts = snn.sentiment_apply_int(params, x, IMDB)
+    # deployed program: compile once, run on the chosen integer backend
+    program = pipeline.compile_network(IMDB, params, domain="int")
+    xs = pipeline.present_words(x, IMDB.timesteps)
+    bkw = {"interpret": True} if (args.backend == "pallas" and
+                                  (args.interpret or
+                                   jax.default_backend() != "tpu")) else {}
+    res = pipeline.run_network(program, xs, args.backend, **bkw)
+    logits_i, rasters = res.logits[:, 0], res.rasters
+    counts = pipeline.count_network_instructions(program, rasters)
     acc_i = float(jnp.mean((logits_i > 0) == (y > 0.5)))
     agree = float(jnp.mean((logits_i > 0) == (logits > 0)))
-    print(f"\neval accuracy: float/QAT={acc_f:.4f}  int-macro={acc_i:.4f} "
-          f"(agreement {agree:.3f})")
+    print(f"\neval accuracy: float/QAT={acc_f:.4f}  "
+          f"int-macro[{args.backend}]={acc_i:.4f} (agreement {agree:.3f})")
 
     sparsities = [1.0 - float(np.asarray(r).mean()) for r in rasters]
     print("per-layer spike sparsity (Fig.11a):",

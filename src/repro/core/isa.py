@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.quant import V_MAX, V_MIN, clamp_v
+from repro.core.quant import V_MAX, V_MIN, clamp_v, spike_compare
 
 MACRO_IN = 128          # input rows
 MACRO_OUT = 12          # weights (output neurons) per row
@@ -108,9 +108,11 @@ def acc_v2v(st: MacroState, set_idx: int, add: jax.Array, cycle: int,
 
 def spike_check(st: MacroState, set_idx: int, cycle: int) -> MacroState:
     """Compare V against threshold (adder-as-comparator; MSB carry-out).
-    Latches spike buffers for the parity's neurons. Read-only on V."""
+    Latches spike buffers for the parity's neurons. Read-only on V. In
+    ``wrap`` clamp mode the comparison itself wraps (quant.spike_compare):
+    the silicon evaluates v + (-th) on the 11-bit adder."""
     mask = jnp.asarray(_parity_mask(cycle))
-    fired = st.vmem[set_idx] >= st.threshold
+    fired = spike_compare(st.vmem[set_idx], st.threshold, st.clamp_mode)
     buf = jnp.where(mask, fired, st.spike_buf[set_idx])
     return replace(st, spike_buf=st.spike_buf.at[set_idx].set(buf))
 
@@ -184,7 +186,7 @@ def layer_timestep_int(v: jax.Array, wq: jax.Array, in_spikes: jax.Array, *,
     v = clamp_v(v + acc, clamp_mode)
     if neuron == "lif":
         v = clamp_v(v - leak, clamp_mode)
-    s = v >= threshold
+    s = spike_compare(v, threshold, clamp_mode)
     if neuron == "rmp":
         v = clamp_v(jnp.where(s, v - threshold, v), clamp_mode)
     else:

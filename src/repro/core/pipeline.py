@@ -1,0 +1,526 @@
+"""Compiled network-level SNN programs with pluggable execution backends.
+
+IMPULSE's architectural claim is *fusion*: W_MEM and V_MEM share one array so
+the membrane state never crosses a memory boundary. Before this module, that
+fusion was only realized per layer, and the network loop around it was
+re-implemented four times (float training, integer ISA, per-layer Pallas,
+bit-level macro). `compile_network` lifts the network itself into a first-
+class object — an `SNNProgram` describing the full stack (encoder -> spiking
+FCs -> accumulate readout, thresholds/leaks/scales, multi-macro tiling) —
+executed by a registry of backends that are tested to agree bit-for-bit:
+
+  float    — QAT training semantics (surrogate gradients, fake-quant
+             weights). For integer-domain programs it executes the *same*
+             integer program in f32 (exact: all values < 2^24), which is the
+             equivalence bridge between training and deployment.
+  int_ref  — word-level ISA semantics (isa.layer_timestep_int scanned over
+             the network), the functional contract of the silicon.
+  pallas   — the network-level fused TPU kernel (kernels/fused_snn_net):
+             every layer's V tile lives in VMEM scratch across the entire
+             timestep loop and inter-layer spikes never touch HBM — the
+             network-scale analogue of the macro's fused array.
+  bitmacro — the bit-accurate column/bitline model (silicon oracle; small
+             shapes, wrap arithmetic only, as on silicon).
+
+Instruction counting is a *program-level pass* (`count_network_instructions`)
+over the spike rasters, so every backend reports identical energy-model
+inputs by construction.
+
+See DESIGN.md §3 for the pipeline/backends diagram and the VMEM-residency
+argument.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.impulse_snn import SNNModelConfig
+from repro.core import isa, mapping
+from repro.core.neuron import NeuronState, neuron_step
+from repro.core.quant import (clamp_v, fake_quant_w, quantize_const,
+                              quantize_w, spike_compare)
+
+# ---------------------------------------------------------------------------
+# Program representation
+# ---------------------------------------------------------------------------
+
+# Layer kinds:
+#   encoder — off-macro neuron layer over raw input current (identity weight)
+#   conv    — conv transform + neuron dynamics (float backend only)
+#   fc      — spiking FC layer (on-macro)
+#   readout — accumulate-only FC (prediction = final V_MEM)
+LAYER_KINDS = ("encoder", "conv", "fc", "readout")
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    kind: str
+    n_in: int
+    n_out: int
+    w: Any = None                 # float weights | int8 wq (program.domain)
+    threshold: Any = None         # float | int on the layer's fixed-point grid
+    leak: Any = None
+    scale: Any = None             # int domain: float <-> grid scale
+    stride: int = 1               # conv only
+    quantize: bool = True         # float domain: fake-quant this layer's w
+    state_shape: tuple = ()       # per-example V shape (set at compile)
+
+    @property
+    def tiling(self) -> mapping.FCTiling:
+        return mapping.fc_tiling(self.n_in, self.n_out)
+
+
+@dataclass(frozen=True)
+class SNNProgram:
+    cfg: Optional[SNNModelConfig]
+    domain: str                   # "float" (QAT training) | "int" (deployed)
+    neuron: str                   # if | lif | rmp
+    timesteps: int                # presentation steps per input frame
+    layers: tuple                 # tuple[LayerSpec, ...]
+    clamp_mode: str = "saturate"  # int domain V_MEM policy (see quant.clamp_v)
+    quantize: bool = True         # float domain: QAT fake-quant on
+
+    @property
+    def fc_stack(self) -> tuple:
+        """The on-macro part: spiking FCs + readout."""
+        return tuple(l for l in self.layers if l.kind in ("fc", "readout"))
+
+    @property
+    def neuron_layers(self) -> tuple:
+        """Layers with membrane dynamics that emit spikes."""
+        return tuple(l for l in self.layers if l.kind != "readout")
+
+    def logits(self, v_out: jax.Array) -> jax.Array:
+        """Readout V -> float logits (undo the last layer's weight scale)."""
+        if self.domain == "int":
+            return v_out.astype(jnp.float32) * self.layers[-1].scale
+        return v_out
+
+
+@dataclass
+class NetResult:
+    """What one backend run produces. ``rasters[i]`` is the *input* spike
+    raster of fc-stack layer i (so rasters[0] is the encoder output), each
+    (T_total, B, n); ``v_final`` lists final V per layer, readout last."""
+    v_out: jax.Array
+    logits: jax.Array
+    v_final: list
+    rasters: Optional[list] = None
+    aux: dict = field(default_factory=dict)
+
+
+# ---------------------------------------------------------------------------
+# Compilation
+# ---------------------------------------------------------------------------
+
+def conv2d(x: jax.Array, w: jax.Array, stride: int) -> jax.Array:
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _conv_state_shapes(cfg: SNNModelConfig, convs: list) -> list:
+    x = jnp.zeros((1, *cfg.in_shape))
+    shapes = []
+    for c, (_, _, stride) in zip(convs, cfg.conv_spec):
+        x = jax.eval_shape(lambda a, w, s=stride: conv2d(a, w, s), x, c["w"])
+        shapes.append(tuple(x.shape[1:]))
+        x = jnp.zeros(x.shape, x.dtype)
+    return shapes
+
+
+def compile_network(cfg: SNNModelConfig, params: dict, *, domain: str = "float",
+                    clamp_mode: str = "saturate", quantize: bool = True
+                    ) -> SNNProgram:
+    """Lower (cfg, params) to an executable network program.
+
+    ``domain="float"`` keeps the trainable parameterization (softplus'd
+    thresholds/leaks, fake-quant weights) — differentiable, used for QAT.
+    ``domain="int"`` quantizes every on-macro layer onto its 6b/11b grid
+    (the deployed macro program); the encoder stays float (off-macro input
+    layer, as in the paper).
+    """
+    th = jax.nn.softplus(params["threshold"]) + 1e-3
+    lk = jax.nn.softplus(params["leak"]) * 0.1
+    layers: list[LayerSpec] = []
+    k = 0                                         # neuron-layer index into th/lk
+
+    convs = params.get("convs", [])
+    if convs:
+        if domain == "int":
+            raise NotImplementedError("conv stacks compile float-only (the "
+                                      "int conv mapping is a later PR)")
+        shapes = _conv_state_shapes(cfg, convs)
+        c_in = cfg.in_shape[-1]
+        for i, (c, shape) in enumerate(zip(convs, shapes)):
+            kh, kw = c["w"].shape[:2]
+            layers.append(LayerSpec(
+                kind="conv", n_in=kh * kw * c_in,
+                n_out=shape[-1], w=c["w"], threshold=th[k], leak=lk[k],
+                stride=cfg.conv_spec[i][2], quantize=(i > 0),
+                state_shape=shape))
+            c_in = shape[-1]
+            k += 1
+    else:
+        # word/current encoder: identity weight, neuron dynamics
+        d_in = cfg.layer_sizes[0]
+        layers.append(LayerSpec(kind="encoder", n_in=d_in, n_out=d_in,
+                                threshold=th[k], leak=lk[k],
+                                state_shape=(d_in,)))
+        k += 1
+
+    sizes = cfg.layer_sizes
+    fc_ws = params["layers"]
+    for j, (n_in, n_out) in enumerate(zip(sizes[:-1], sizes[1:])):
+        is_readout = j == len(fc_ws) - 1
+        w = fc_ws[j]["w"]
+        if domain == "int":
+            wq, scale = quantize_w(w)
+            th_i = None if is_readout else jnp.int32(
+                quantize_const(float(th[k]), scale))
+            lk_i = None if is_readout else jnp.int32(
+                quantize_const(float(lk[k]), scale))
+            layers.append(LayerSpec(
+                kind="readout" if is_readout else "fc", n_in=n_in, n_out=n_out,
+                w=wq, threshold=th_i, leak=lk_i, scale=float(scale),
+                state_shape=(n_out,)))
+        else:
+            layers.append(LayerSpec(
+                kind="readout" if is_readout else "fc", n_in=n_in, n_out=n_out,
+                w=w, threshold=None if is_readout else th[k],
+                leak=None if is_readout else lk[k], state_shape=(n_out,)))
+        if not is_readout:
+            k += 1
+
+    return SNNProgram(cfg=cfg, domain=domain, neuron=cfg.spiking.neuron,
+                      timesteps=cfg.timesteps, layers=tuple(layers),
+                      clamp_mode=clamp_mode, quantize=quantize)
+
+
+def rate_coded_program(spiking_cfg, state_shape: tuple) -> SNNProgram:
+    """Single-population program (used by models/spiking_ffn): one encoder
+    layer integrating a constant current, thresholds/leaks taken verbatim
+    (no softplus re-parameterization)."""
+    layer = LayerSpec(kind="encoder", n_in=state_shape[-1],
+                      n_out=state_shape[-1], threshold=spiking_cfg.threshold,
+                      leak=spiking_cfg.leak, state_shape=state_shape)
+    return SNNProgram(cfg=None, domain="float", neuron=spiking_cfg.neuron,
+                      timesteps=spiking_cfg.timesteps, layers=(layer,),
+                      quantize=False)
+
+
+# ---------------------------------------------------------------------------
+# Input presentation
+# ---------------------------------------------------------------------------
+
+def present_words(x_words: jax.Array, timesteps: int) -> jax.Array:
+    """(B, n_words, d) -> (n_words * T, B, d): each word held T steps
+    (membrane state persists across words — the sequential-memory claim)."""
+    xs = jnp.repeat(x_words, timesteps, axis=1)
+    return jnp.moveaxis(xs, 1, 0)
+
+
+def present_static(x: jax.Array, timesteps: int) -> jax.Array:
+    """(B, ...) -> (T, B, ...): direct encoding, same frame every step."""
+    return jnp.broadcast_to(x[None], (timesteps, *x.shape))
+
+
+# ---------------------------------------------------------------------------
+# Backend registry
+# ---------------------------------------------------------------------------
+
+BACKENDS: dict[str, Callable] = {}
+
+
+def register_backend(name: str) -> Callable:
+    def deco(fn: Callable) -> Callable:
+        BACKENDS[name] = fn
+        return fn
+    return deco
+
+
+def run_network(program: SNNProgram, xs: jax.Array, backend: str = "float",
+                **kw) -> NetResult:
+    """Execute a program on per-timestep input currents xs (T_total, B, ...).
+
+    The float backend consumes xs directly. Integer backends share one float
+    encoder pass (`encode`) — the off-macro input layer — then execute the
+    on-macro fc stack in their own substrate.
+    """
+    if backend not in BACKENDS:
+        raise KeyError(f"unknown backend {backend!r}; have {sorted(BACKENDS)}")
+    if backend != "float" and program.domain != "int":
+        raise ValueError(f"backend {backend!r} needs an int-domain program "
+                         "(compile_network(..., domain='int'))")
+    return BACKENDS[backend](program, xs, **kw)
+
+
+# ---------------------------------------------------------------------------
+# float backend — the single temporal executor for training AND the f32
+# rendering of integer programs (exact: every value is an integer < 2^24)
+# ---------------------------------------------------------------------------
+
+def _w_float(program: SNNProgram, spec: LayerSpec) -> jax.Array:
+    if program.domain == "int":
+        return spec.w.astype(jnp.float32)
+    if program.quantize and spec.quantize:
+        return fake_quant_w(spec.w)
+    return spec.w
+
+
+def _float_step(program: SNNProgram, vs: list, xt: jax.Array
+                ) -> tuple[list, list]:
+    """One network timestep. Returns (new vs, per-neuron-layer spikes)."""
+    neuron = program.neuron
+    int_dom = program.domain == "int"
+    cur = xt
+    vs_new, spikes = [], []
+    for i, spec in enumerate(program.layers):
+        if spec.kind == "readout":
+            if cur.ndim > 2:
+                cur = cur.reshape(cur.shape[0], -1)
+            vs_new.append(vs[i] + cur @ _w_float(program, spec))
+            continue
+        if spec.kind == "conv":
+            current = conv2d(cur, _w_float(program, spec), spec.stride)
+        elif spec.kind == "fc":
+            if cur.ndim > 2:
+                cur = cur.reshape(cur.shape[0], -1)
+            current = cur @ _w_float(program, spec)
+        else:                                     # encoder: identity weight
+            current = cur
+        if int_dom and spec.kind == "fc":
+            # f32 rendering of isa.layer_timestep_int (bit-exact)
+            th = spec.threshold.astype(jnp.float32)
+            v = clamp_v(vs[i] + current, program.clamp_mode)
+            if neuron == "lif":
+                v = clamp_v(v - spec.leak.astype(jnp.float32),
+                            program.clamp_mode)
+            s = spike_compare(v, th, program.clamp_mode).astype(jnp.float32)
+            if neuron == "rmp":
+                v = clamp_v(jnp.where(s > 0, v - th, v), program.clamp_mode)
+            else:
+                v = jnp.where(s > 0, 0.0, v)
+        else:
+            st, s = neuron_step(NeuronState(vs[i]), current, neuron=neuron,
+                                threshold=spec.threshold, leak=spec.leak)
+            v = st.v
+        vs_new.append(v)
+        spikes.append(s)
+        cur = s
+    return vs_new, spikes
+
+
+def _init_vs(program: SNNProgram, batch: int) -> list:
+    return [jnp.zeros((batch, *spec.state_shape)) for spec in program.layers]
+
+
+@register_backend("float")
+def run_float(program: SNNProgram, xs: jax.Array, *, return_trace: bool = False,
+              collect_rasters: bool = False, collect_sums: bool = False,
+              static_input: bool = False) -> NetResult:
+    """Differentiable scan over the whole presentation. Aux always carries
+    per-step mean spike rates; ``collect_rasters`` additionally stacks the
+    full per-layer rasters, ``collect_sums`` carries per-layer spike-count
+    sums (rate decoding without materializing rasters).
+
+    ``static_input``: xs is a single (B, ...) frame presented every step
+    (direct encoding); the scan closes over it instead of taking a
+    timesteps-fold broadcast as a loop operand (which would materialize
+    T copies of the activation on training hot paths)."""
+    B = xs.shape[0] if static_input else xs.shape[1]
+    n_neuron = len(program.neuron_layers)
+
+    def step(carry, xt):
+        vs, sums = carry
+        vs, spikes = _float_step(program, vs, xt)
+        rates = jnp.stack([s.mean() for s in spikes])
+        if collect_sums:
+            sums = [c + s for c, s in zip(sums, spikes)]
+        trace = vs[-1][:, 0] if return_trace else jnp.zeros(B)
+        out = (rates, trace, tuple(spikes) if collect_rasters else ())
+        return (vs, sums), out
+
+    sums0 = [jnp.zeros((B, *spec.state_shape))
+             for spec in program.neuron_layers] if collect_sums else [0.0] * n_neuron
+    carry0 = (_init_vs(program, B), sums0)
+    if static_input:
+        (vs, sums), (rates, trace, rasters) = jax.lax.scan(
+            lambda c, _: step(c, xs), carry0, None, length=program.timesteps)
+    else:
+        (vs, sums), (rates, trace, rasters) = jax.lax.scan(step, carry0, xs)
+    aux = {"spike_rates": rates, "v_trace": trace}
+    if collect_sums:
+        aux["spike_sums"] = sums
+    v_out = vs[-1]
+    return NetResult(v_out=v_out, logits=program.logits(v_out), v_final=vs,
+                     rasters=list(rasters) if collect_rasters else None,
+                     aux=aux)
+
+
+# ---------------------------------------------------------------------------
+# shared float encoder for the integer backends (off-macro input layer)
+# ---------------------------------------------------------------------------
+
+def encode(program: SNNProgram, xs: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Run the encoder layer alone: (T_total, B, d) currents ->
+    ((T_total, B, d) int8 spikes, final encoder V). Bitwise identical to the
+    float backend's encoder layer (same ops on the same values)."""
+    enc = program.layers[0]
+    if enc.kind != "encoder":
+        raise NotImplementedError(
+            f"integer backends need an encoder-led stack, got {enc.kind!r}")
+
+    def step(v, xt):
+        st, s = neuron_step(NeuronState(v), xt, neuron=program.neuron,
+                            threshold=enc.threshold, leak=enc.leak)
+        return st.v, s.astype(jnp.int8)
+
+    v_enc, spikes = jax.lax.scan(step, jnp.zeros(xs.shape[1:]), xs)
+    return spikes, v_enc
+
+
+def _assemble(program: SNNProgram, rasters: list, v_enc, v_stack: list
+              ) -> NetResult:
+    v_out = v_stack[-1]
+    return NetResult(v_out=v_out, logits=program.logits(v_out),
+                     v_final=[v_enc] + list(v_stack), rasters=rasters)
+
+
+# ---------------------------------------------------------------------------
+# int_ref backend — word-level ISA semantics scanned over the network
+# ---------------------------------------------------------------------------
+
+def _stack_kernel_args(program: SNNProgram) -> dict:
+    """The fused_snn_net argument marshalling shared by int_ref and pallas —
+    one place to extend when the stack grows per-layer parameters."""
+    stack = program.fc_stack
+    return dict(
+        ws=[jnp.asarray(spec.w) for spec in stack],
+        thresholds=tuple(int(spec.threshold) for spec in stack[:-1]),
+        leaks=tuple(int(spec.leak) for spec in stack[:-1]),
+        neuron=program.neuron, clamp_mode=program.clamp_mode)
+
+
+@register_backend("int_ref")
+def run_int_ref(program: SNNProgram, xs: jax.Array) -> NetResult:
+    """Word-level ISA semantics: the pure-jnp network reference (a scan of
+    isa.layer_timestep_int over the stack) that is also the pallas kernel's
+    non-TPU fallback — one implementation of the contract, two entry points."""
+    from repro.kernels.fused_snn_net.ops import fused_snn_net
+    spikes_enc, v_enc = encode(program, xs)
+    kw = _stack_kernel_args(program)
+    rasters, v_stack = fused_snn_net(spikes_enc, kw.pop("ws"),
+                                     use_pallas=False, **kw)
+    return _assemble(program, [spikes_enc] + list(rasters), v_enc,
+                     list(v_stack))
+
+
+# ---------------------------------------------------------------------------
+# pallas backend — the network-level fused kernel
+# ---------------------------------------------------------------------------
+
+@register_backend("pallas")
+def run_pallas(program: SNNProgram, xs: jax.Array, *, block_b: int = 8,
+               interpret: bool = False, emit_rasters: bool = True) -> NetResult:
+    from repro.kernels.fused_snn_net.ops import fused_snn_net
+    spikes_enc, v_enc = encode(program, xs)
+    kw = _stack_kernel_args(program)
+    rasters, v_stack = fused_snn_net(
+        spikes_enc, kw.pop("ws"), block_b=block_b, interpret=interpret,
+        emit_rasters=emit_rasters, **kw)
+    full_rasters = [spikes_enc] + list(rasters) if emit_rasters else None
+    return _assemble(program, full_rasters, v_enc, list(v_stack))
+
+
+# ---------------------------------------------------------------------------
+# bitmacro backend — silicon oracle (numpy, bit-level, wrap arithmetic)
+# ---------------------------------------------------------------------------
+
+@register_backend("bitmacro")
+def run_bitmacro(program: SNNProgram, xs: jax.Array) -> NetResult:
+    """Execute the fc stack on the bit-accurate macro model. Constraints are
+    the silicon's: fan-in <= 128 per layer (row_tiles == 1 — partial-sum
+    reduction across macros is a word-level behaviour), batch <= 13 neuron
+    sets, and two's-complement *wrap* arithmetic (saturation is a word-level
+    deployment policy, not silicon; compile with clamp_mode='wrap' to
+    compare bit-for-bit — see macro.py)."""
+    from repro.core.macro import BitMacro
+    if program.clamp_mode != "wrap":
+        raise ValueError("bitmacro executes silicon wrap arithmetic; compile "
+                         "the program with clamp_mode='wrap'")
+    spikes_enc, v_enc = encode(program, xs)
+    spikes_np = np.asarray(spikes_enc).astype(bool)             # (T, B, d)
+    T_total, B = spikes_np.shape[:2]
+    if B > isa.N_NEURON_SETS:
+        raise ValueError(f"bitmacro backend maps batch onto neuron sets; "
+                         f"B={B} > {isa.N_NEURON_SETS}")
+    stack = program.fc_stack
+
+    # one BitMacro per (layer, col_tile); batch element b uses neuron set b
+    macros: list[list[BitMacro]] = []
+    for spec in stack[:-1]:
+        t = spec.tiling
+        if t.row_tiles != 1:
+            raise ValueError(f"bitmacro backend needs fan-in <= {isa.MACRO_IN} "
+                             f"(layer {spec.n_in}x{spec.n_out})")
+        wq_tiles = mapping.tile_weights(np.asarray(spec.w))     # (1, C, 128, 12)
+        macros.append([
+            BitMacro.from_weights(wq_tiles[0, c], threshold=int(spec.threshold),
+                                  leak=int(spec.leak))
+            for c in range(t.col_tiles)])
+
+    rasters = [spikes_np.astype(np.int8)]
+    layer_out = [np.zeros((T_total, B, spec.n_out), np.int8)
+                 for spec in stack[:-1]]
+    v_out = np.zeros((B, stack[-1].n_out), np.int64)
+    wq_readout = np.asarray(stack[-1].w, np.int64)
+    for t in range(T_total):
+        for b in range(B):
+            cur = spikes_np[t, b]
+            for li, spec in enumerate(stack[:-1]):
+                padded = np.zeros(isa.MACRO_IN, bool)
+                padded[:spec.n_in] = cur[:spec.n_in]
+                outs = [m.timestep(b, padded, program.neuron)
+                        for m in macros[li]]
+                cur = np.concatenate(outs)[:spec.n_out]
+                layer_out[li][t, b] = cur.astype(np.int8)
+            v_out[b] += cur.astype(np.int64) @ wq_readout
+    rasters += layer_out
+    # read V per layer: concatenate col tiles then trim padding
+    v_final = []
+    for li, spec in enumerate(stack[:-1]):
+        v = np.stack([np.concatenate([m.read_v(b) for m in macros[li]])
+                      for b in range(B)])[:, :spec.n_out]
+        v_final.append(jnp.asarray(v.astype(np.int32)))
+    rasters = [jnp.asarray(r) for r in rasters]
+    v_stack = v_final + [jnp.asarray(v_out.astype(np.int32))]
+    res = _assemble(program, rasters, v_enc, v_stack)
+    res.aux["macro_counts"] = sum(
+        (m.counts for tile in macros for m in tile), isa.InstrCount())
+    return res
+
+
+# ---------------------------------------------------------------------------
+# program-level instruction counting (the energy-model input)
+# ---------------------------------------------------------------------------
+
+def count_network_instructions(program: SNNProgram, rasters: list
+                               ) -> isa.InstrCount:
+    """Fold the per-layer event counts over the whole program. ``rasters[i]``
+    is the input raster of fc-stack layer i; identical rasters (which all
+    backends are tested to produce) give identical counts by construction."""
+    if rasters is None:
+        raise ValueError("instruction counting needs spike rasters; run the "
+                         "backend with emit_rasters=True (accounting mode)")
+    counts = isa.InstrCount()
+    for spec, raster in zip(program.fc_stack, rasters):
+        r = np.asarray(raster)
+        counts += isa.count_layer_instructions(
+            r, spec.n_in, spec.n_out,
+            program.neuron if spec.kind == "fc" else "none")
+    return counts

@@ -22,6 +22,7 @@ W_MAX = 2 ** (W_BITS - 1) - 1          # 31
 W_MIN = -W_MAX                          # symmetric QAT range
 V_MAX = 2 ** (V_BITS - 1) - 1          # 1023
 V_MIN = -(2 ** (V_BITS - 1))           # -1024
+V_SPAN = 2 ** V_BITS                   # wraparound span of the 11-bit word
 
 
 def w_scale(w: jax.Array) -> jax.Array:
@@ -69,9 +70,22 @@ def clamp_v(v: jax.Array, mode: str = "saturate") -> jax.Array:
         return jnp.clip(v, V_MIN, V_MAX)
     if mode == "wrap":
         # two's-complement wrap into [-1024, 1023]
-        span = 2 ** V_BITS
-        return ((v - V_MIN) % span) + V_MIN
+        return ((v - V_MIN) % V_SPAN) + V_MIN
     raise ValueError(f"unknown clamp mode {mode!r}")
+
+
+def spike_compare(v: jax.Array, threshold, mode: str = "saturate") -> jax.Array:
+    """SpikeCheck comparison semantics per clamp mode.
+
+    The silicon comparator evaluates sign(v + (-th)) through the SAME
+    11-bit ripple adder that does every other V op (macro.py), so in
+    ``wrap`` mode the *comparison itself* wraps when v - th leaves the
+    11-bit range. ``saturate`` is the word-level deployment-safe policy:
+    a true comparison.
+    """
+    if mode == "wrap":
+        return clamp_v(v - threshold, "wrap") >= 0
+    return v >= threshold
 
 
 def quantize_const(x: float, scale: jax.Array, lo: int = V_MIN, hi: int = V_MAX) -> jax.Array:

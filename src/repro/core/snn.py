@@ -1,12 +1,14 @@
 """Trainable SNN stack: the paper's IMDB sentiment net and MNIST LeNet5-mod.
 
 Training follows DIET-SNN [3]: surrogate-gradient BPTT with trainable
-per-layer threshold and leak, QAT to the macro's 6-bit weights. Inference has
-two paths that are tested to agree:
-  * float path (this file) — fake-quantized weights, float V;
-  * macro path — true int8 weights + 11-bit V via isa.layer_timestep_int
-    (and, transitively, the bit-accurate BitMacro), producing the spike
-    rasters and instruction counts that drive the energy model.
+per-layer threshold and leak, QAT to the macro's 6-bit weights. All temporal
+execution routes through the network-level pipeline (core.pipeline): this
+module only owns parameter init and the task-facing wrappers. Inference has
+two program domains that are tested to agree:
+  * float domain — fake-quantized weights, float V (QAT training semantics);
+  * int domain   — true int8 weights + 11-bit V, executable on any of the
+    int_ref / pallas / bitmacro backends, producing the spike rasters and
+    instruction counts that drive the energy model.
 
 Paper network (IMDB): GloVe-100d word -> encoder(100 IF/RMP neurons, spike
 encoding) -> FC 100x128 -> FC 128x128 (both spiking, on-macro) -> FC 128x1
@@ -16,19 +18,12 @@ potentials persist across words (the sequential-memory claim, Fig. 1/10).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from functools import partial
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import SpikingConfig
 from repro.configs.impulse_snn import SNNModelConfig
-from repro.core import isa
-from repro.core.neuron import NeuronState, neuron_step, spike
-from repro.core.quant import fake_quant_w, quantize_w, quantize_const, clamp_v
+from repro.core import pipeline
 
 
 # ---------------------------------------------------------------------------
@@ -55,63 +50,18 @@ def param_count(params: dict) -> int:
 
 
 # ---------------------------------------------------------------------------
-# Temporal core (float / QAT path)
+# IMDB sentiment wrappers (float / QAT and deployed integer programs)
 # ---------------------------------------------------------------------------
-
-def _hidden_init(batch: int, cfg: SNNModelConfig):
-    sizes = cfg.layer_sizes
-    vs = [jnp.zeros((batch, sizes[0]))]                     # encoder V
-    vs += [jnp.zeros((batch, n)) for n in sizes[1:-1]]      # spiking layers
-    vs += [jnp.zeros((batch, sizes[-1]))]                   # output accumulator
-    return vs
-
-
-def _one_step(params, vs, x, cfg: SNNModelConfig, quantize: bool):
-    """One SNN timestep. x: (B, n_in) analog input current. Returns new vs,
-    per-layer spikes."""
-    neuron = cfg.spiking.neuron
-    th = jax.nn.softplus(params["threshold"]) + 1e-3        # keep positive
-    lk = jax.nn.softplus(params["leak"]) * 0.1
-    spikes = []
-    # encoder: analog current -> spikes (the paper's "input layer")
-    st, s = neuron_step(NeuronState(vs[0]), x, neuron=neuron,
-                        threshold=th[0], leak=lk[0])
-    vs_new = [st.v]
-    spikes.append(s)
-    cur = s
-    # hidden spiking FC layers (on-macro)
-    for i, layer in enumerate(params["layers"][:-1]):
-        w = fake_quant_w(layer["w"]) if quantize else layer["w"]
-        st, s = neuron_step(NeuronState(vs[i + 1]), cur @ w, neuron=neuron,
-                            threshold=th[i + 1], leak=lk[i + 1])
-        vs_new.append(st.v)
-        spikes.append(s)
-        cur = s
-    # output layer: accumulate only (readout = final membrane potential)
-    w = fake_quant_w(params["layers"][-1]["w"]) if quantize else params["layers"][-1]["w"]
-    vs_new.append(vs[-1] + cur @ w)
-    return vs_new, spikes
-
 
 def sentiment_apply(params: dict, x_words: jax.Array, cfg: SNNModelConfig,
                     quantize: bool = True, return_trace: bool = False):
     """x_words: (B, n_words, d_in). Returns logits (B,) = final output V, plus
     aux dict (per-layer mean spike rates per timestep; optional V trace)."""
-    B, n_words, d_in = x_words.shape
-    T = cfg.timesteps
-
-    def step(vs, xt):
-        vs, spikes = _one_step(params, vs, xt, cfg, quantize)
-        rates = jnp.stack([s.mean() for s in spikes])
-        return vs, (rates, vs[-1][:, 0] if return_trace else jnp.zeros(B))
-
-    # word w presented for T consecutive steps
-    xs = jnp.repeat(x_words, T, axis=1)                     # (B, n_words*T, d)
-    xs = jnp.moveaxis(xs, 1, 0)                             # (T_total, B, d)
-    vs, (rates, trace) = jax.lax.scan(step, _hidden_init(B, cfg), xs)
-    logits = vs[-1][:, 0]
-    aux = {"spike_rates": rates, "v_trace": trace}
-    return logits, aux
+    program = pipeline.compile_network(cfg, params, domain="float",
+                                       quantize=quantize)
+    xs = pipeline.present_words(x_words, cfg.timesteps)
+    res = pipeline.run_network(program, xs, "float", return_trace=return_trace)
+    return res.logits[:, 0], res.aux
 
 
 def sentiment_loss(params, x_words, labels, cfg: SNNModelConfig, quantize=True):
@@ -123,69 +73,19 @@ def sentiment_loss(params, x_words, labels, cfg: SNNModelConfig, quantize=True):
     return loss, {"accuracy": acc, **aux}
 
 
-# ---------------------------------------------------------------------------
-# Macro (integer) inference path — bit-exact with the ISA / silicon model
-# ---------------------------------------------------------------------------
-
-def quantize_params(params: dict, cfg: SNNModelConfig):
-    """Float params -> per-layer (wq int8, scale, th_int, leak_int)."""
-    th = np.asarray(jax.nn.softplus(params["threshold"]) + 1e-3)
-    lk = np.asarray(jax.nn.softplus(params["leak"]) * 0.1)
-    out = []
-    for i, layer in enumerate(params["layers"]):
-        wq, scale = quantize_w(layer["w"])
-        is_out = i == len(params["layers"]) - 1
-        th_i = None if is_out else int(quantize_const(float(th[i + 1]), scale))
-        lk_i = None if is_out else int(quantize_const(float(lk[i + 1]), scale))
-        out.append({"wq": wq, "scale": float(scale), "th": th_i, "leak": lk_i})
-    return out, {"enc_th": float(th[0]), "enc_leak": float(lk[0])}
-
-
-def sentiment_apply_int(params: dict, x_words: jax.Array, cfg: SNNModelConfig):
-    """Integer-domain inference (the deployed macro program). Returns
-    (logits_float, spike_rasters list[(T_total, B, n)], instruction counts)."""
-    qlayers, enc = quantize_params(params, cfg)
-    B, n_words, d_in = x_words.shape
-    T = cfg.timesteps
-    neuron = cfg.spiking.neuron
-
-    xs = jnp.repeat(x_words, T, axis=1)
-    xs = jnp.moveaxis(xs, 1, 0)                             # (T_total, B, d)
-
-    def step(carry, xt):
-        v_enc, v_hidden, v_out = carry
-        # encoder in float (off-macro, like the paper's input layer)
-        st, s = neuron_step(NeuronState(v_enc), xt, neuron=neuron,
-                            threshold=enc["enc_th"], leak=enc["enc_leak"])
-        v_enc = st.v
-        cur = s.astype(jnp.int32)
-        rasters = [cur]
-        v_hidden_new = []
-        for i, ql in enumerate(qlayers[:-1]):
-            v, s_out = isa.layer_timestep_int(
-                v_hidden[i], jnp.asarray(ql["wq"]), cur, neuron=neuron,
-                threshold=jnp.int32(ql["th"]), leak=jnp.int32(ql["leak"]),
-                reset=jnp.int32(0))
-            v_hidden_new.append(v)
-            cur = s_out
-            rasters.append(cur)
-        # output: accumulate int, no clamp to 11b growth issue -> use wide acc
-        wq_out = jnp.asarray(qlayers[-1]["wq"], jnp.int32)
-        v_out = v_out + cur @ wq_out
-        return (v_enc, v_hidden_new, v_out), rasters
-
-    v_hidden0 = [jnp.zeros((B, l["wq"].shape[1]), jnp.int32) for l in qlayers[:-1]]
-    v_out0 = jnp.zeros((B, qlayers[-1]["wq"].shape[1]), jnp.int32)
-    carry, rasters = jax.lax.scan(step, (jnp.zeros((B, d_in)), v_hidden0, v_out0), xs)
-    logits = carry[2][:, 0].astype(jnp.float32) * qlayers[-1]["scale"]
-
-    counts = isa.InstrCount()
-    for i, ql in enumerate(qlayers):
-        r = np.asarray(rasters[i])
-        counts += isa.count_layer_instructions(
-            r, r.shape[-1], ql["wq"].shape[1],
-            neuron if i < len(qlayers) - 1 else "none")
-    return logits, rasters, counts
+def sentiment_apply_int(params: dict, x_words: jax.Array, cfg: SNNModelConfig,
+                        backend: str = "int_ref", **backend_kw):
+    """Integer-domain inference (the deployed macro program) on any integer
+    backend ("int_ref" | "pallas" | "bitmacro"). Returns (logits_float,
+    spike_rasters list[(T_total, B, n)], instruction counts). In serving
+    mode (pallas with emit_rasters=False) rasters and counts are None —
+    event accounting needs the rasters."""
+    program = pipeline.compile_network(cfg, params, domain="int")
+    xs = pipeline.present_words(x_words, cfg.timesteps)
+    res = pipeline.run_network(program, xs, backend, **backend_kw)
+    counts = (pipeline.count_network_instructions(program, res.rasters)
+              if res.rasters is not None else None)
+    return res.logits[:, 0], res.rasters, counts
 
 
 # ---------------------------------------------------------------------------
@@ -211,61 +111,15 @@ def init_lenet_snn(key: jax.Array, cfg: SNNModelConfig) -> dict:
             "leak": jnp.full((n_spiking,), cfg.spiking.leak)}
 
 
-def _conv(x, w, stride):
-    return jax.lax.conv_general_dilated(
-        x, w, (stride, stride), "SAME",
-        dimension_numbers=("NHWC", "HWIO", "NHWC"))
-
-
 def lenet_apply(params: dict, images: jax.Array, cfg: SNNModelConfig,
                 quantize: bool = True):
-    """images: (B, H, W, C). Returns class logits (B, n_classes) = output V."""
-    B = images.shape[0]
-    neuron = cfg.spiking.neuron
-    th = jax.nn.softplus(params["threshold"]) + 1e-3
-    lk = jax.nn.softplus(params["leak"]) * 0.1
-
-    def shapes():
-        x = jnp.zeros((1, *cfg.in_shape))
-        vs = []
-        for c, (_, _, stride) in zip(params["convs"], cfg.conv_spec):
-            x = _conv(x, c["w"], stride)
-            vs.append(x.shape[1:])
-        return vs
-
-    conv_shapes = shapes()
-    v_convs = [jnp.zeros((B, *s)) for s in conv_shapes]
-    v_fcs = [jnp.zeros((B, n)) for n in cfg.layer_sizes[1:-1]]
-    v_out = jnp.zeros((B, cfg.layer_sizes[-1]))
-
-    def step(carry, _):
-        v_convs, v_fcs, v_out = carry
-        cur = images                                        # direct encoding
-        v_convs_new, v_fcs_new = [], []
-        k = 0
-        for i, c in enumerate(params["convs"]):
-            w = fake_quant_w(c["w"]) if (quantize and i > 0) else c["w"]
-            stride = cfg.conv_spec[i][2]
-            st, s = neuron_step(NeuronState(v_convs[i]), _conv(cur, w, stride),
-                                neuron=neuron, threshold=th[k], leak=lk[k])
-            v_convs_new.append(st.v)
-            cur = s
-            k += 1
-        cur = cur.reshape(B, -1)
-        for j, layer in enumerate(params["layers"][:-1]):
-            w = fake_quant_w(layer["w"]) if quantize else layer["w"]
-            st, s = neuron_step(NeuronState(v_fcs[j]), cur @ w,
-                                neuron=neuron, threshold=th[k], leak=lk[k])
-            v_fcs_new.append(st.v)
-            cur = s
-            k += 1
-        w = fake_quant_w(params["layers"][-1]["w"]) if quantize else params["layers"][-1]["w"]
-        v_out_new = v_out + cur @ w
-        return (v_convs_new, v_fcs_new, v_out_new), None
-
-    (v_convs, v_fcs, v_out), _ = jax.lax.scan(
-        step, (v_convs, v_fcs, v_out), None, length=cfg.timesteps)
-    return v_out
+    """images: (B, H, W, C). Returns class logits (B, n_classes) = output V.
+    Direct encoding: the image is the input current every timestep; the first
+    conv is the (unquantized) spike encoder."""
+    program = pipeline.compile_network(cfg, params, domain="float",
+                                       quantize=quantize)
+    return pipeline.run_network(program, images, "float",
+                                static_input=True).v_out
 
 
 def lenet_loss(params, images, labels, cfg: SNNModelConfig, quantize=True):

@@ -1,0 +1,14 @@
+"""Distribution layer: sharding rules, wire compression, pipeline parallelism.
+
+Three orthogonal pieces, each consumed by a different part of the stack:
+
+  * sharding  — logical-axis -> mesh placement rules. Parameters and
+    activations name *logical* axes ("batch", "vocab", "experts", ...); the
+    rules engine fits them onto whatever mesh is active, dropping any axis
+    whose size does not divide its mesh extent (`_fit`). Layers call
+    `constrain` freely: it is a no-op unless `activation_rules` is active.
+  * compress  — int8-wire gradient all-reduce with error feedback, and the
+    single-host `fake_compress` used to study its numerics without a mesh.
+  * pipeline  — GPipe-style pipeline parallelism over a mesh axis.
+"""
+from repro.dist import compress, pipeline, sharding  # noqa: F401

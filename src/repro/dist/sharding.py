@@ -1,0 +1,184 @@
+"""Sharding rules: logical axes -> mesh placement with divisibility fitting.
+
+The engine has three layers:
+
+  1. `_fit(axes, shape, mesh)` — the single primitive every rule goes
+     through: a per-dimension proposal (mesh axis name, tuple of names, or
+     None) is kept only if the dimension size divides the product of the
+     proposed mesh extents. Everything else degrades to replication, so the
+     same rules serve every (arch x mesh) cell without per-model tables.
+  2. spec builders — `param_specs`, `batch_specs`, `cache_specs`,
+     `logits_spec`, `replicated`: pytree -> NamedSharding trees for jit
+     in/out shardings.
+  3. `activation_rules(mesh, parallel)` + `constrain(x, logical_axes)` —
+     a context that maps *logical* activation axis names onto the mesh.
+     `constrain` is a no-op outside the context, so model code can pin
+     activations unconditionally (single-device tests, dry-runs without a
+     mesh, and production traces all share one code path).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Logical activation-axis name -> mesh axis. "batch" always maps to the data
+# axis; the model-parallel names collapse onto the model axis.
+_LOGICAL_TO_MESH = {
+    "batch": "data",
+    "vocab": "model",
+    "experts": "model",
+    "ffn": "model",
+    "heads": "model",
+    "embed": "model",
+    "seq": "model",          # only applied when parallel.seq_parallel
+}
+
+
+def _axis_sizes(mesh: Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def _fit(axes: tuple, shape: tuple, mesh: Mesh) -> P:
+    """Fit a per-dimension mesh-axis proposal onto concrete dimension sizes.
+
+    ``axes`` entries are a mesh axis name, a tuple of names (sharded over
+    their product), or None. A proposal is dropped (-> None) when the
+    dimension does not divide the proposed mesh extent, or when the axis was
+    already consumed by an earlier dimension.
+    """
+    sizes = _axis_sizes(mesh)
+    used: set[str] = set()
+    out = []
+    for dim, prop in zip(shape, tuple(axes) + (None,) * (len(shape) - len(axes))):
+        if prop is None:
+            out.append(None)
+            continue
+        names = prop if isinstance(prop, tuple) else (prop,)
+        if any(n not in sizes or n in used for n in names):
+            out.append(None)
+            continue
+        extent = int(np.prod([sizes[n] for n in names]))
+        if extent > 1 and dim % extent == 0:
+            out.append(prop)
+            used.update(names)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# parameter / batch / cache placement
+# ---------------------------------------------------------------------------
+
+def _param_rule(shape: tuple, parallel) -> tuple:
+    """Generic parameter rule: tensor-parallel on the trailing (output)
+    axis, FSDP on the leading (input) axis. `_fit` drops whatever does not
+    divide, so this single rule covers embeddings, dense kernels, per-expert
+    stacks and 1-D norm scales alike."""
+    if len(shape) == 0:
+        return ()
+    if len(shape) == 1:
+        return ("data",) if parallel.fsdp else (None,)
+    prop: list = [None] * len(shape)
+    prop[-1] = "model"
+    if parallel.fsdp:
+        prop[0] = "data"
+    return tuple(prop)
+
+
+def param_specs(params: Any, mesh: Mesh, parallel) -> Any:
+    """Pytree of params (arrays or ShapeDtypeStructs) -> NamedSharding tree."""
+    def spec(leaf):
+        shape = tuple(leaf.shape)
+        return NamedSharding(mesh, _fit(_param_rule(shape, parallel), shape, mesh))
+    return jax.tree_util.tree_map(spec, params)
+
+
+def batch_specs(batch: Any, mesh: Mesh, parallel) -> Any:
+    """Input batches shard their leading axis over data; with seq_parallel
+    the sequence axis additionally shards over model."""
+    def spec(leaf):
+        shape = tuple(leaf.shape)
+        prop: list = [None] * len(shape)
+        if len(shape) >= 1:
+            prop[0] = "data"
+        if parallel.seq_parallel and len(shape) >= 2:
+            prop[1] = "model"
+        return NamedSharding(mesh, _fit(tuple(prop), shape, mesh))
+    return jax.tree_util.tree_map(spec, batch)
+
+
+def cache_specs(cache: Any, mesh: Mesh, parallel, cfg=None) -> Any:
+    """KV / latent / state caches: batch over data, heads (axis 2 of
+    (B, S, H, D) layouts) over model when divisible."""
+    def spec(leaf):
+        shape = tuple(leaf.shape)
+        prop: list = [None] * len(shape)
+        if len(shape) >= 1:
+            prop[0] = "data"
+        if len(shape) >= 3:
+            prop[2] = "model"
+        return NamedSharding(mesh, _fit(tuple(prop), shape, mesh))
+    return jax.tree_util.tree_map(spec, cache)
+
+
+def logits_spec(mesh: Mesh, shape: tuple) -> NamedSharding:
+    """(batch, vocab) logits: batch over data, vocab over model."""
+    return NamedSharding(mesh, _fit(("data", "model"), tuple(shape), mesh))
+
+
+# ---------------------------------------------------------------------------
+# activation rules context + constrain
+# ---------------------------------------------------------------------------
+
+class _Rules(threading.local):
+    mesh: Optional[Mesh] = None
+    parallel: Any = None
+
+
+_RULES = _Rules()
+
+
+@contextlib.contextmanager
+def activation_rules(mesh: Mesh, parallel):
+    """Activate logical-axis constraints for traces entered inside the
+    context. Traces outside it see `constrain` as the identity."""
+    prev = (_RULES.mesh, _RULES.parallel)
+    _RULES.mesh, _RULES.parallel = mesh, parallel
+    try:
+        yield
+    finally:
+        _RULES.mesh, _RULES.parallel = prev
+
+
+def constrain(x: jax.Array, logical_axes: tuple) -> jax.Array:
+    """Pin an activation's logical axes onto the active mesh; identity when
+    no rules are active. Entries of ``logical_axes`` are logical names
+    ("batch", "seq", "vocab", "experts", "ffn", "heads"), tuples of names,
+    or None."""
+    mesh, parallel = _RULES.mesh, _RULES.parallel
+    if mesh is None:
+        return x
+
+    def to_mesh(name):
+        if name is None:
+            return None
+        if isinstance(name, tuple):
+            resolved = tuple(m for m in (to_mesh(n) for n in name) if m is not None)
+            return resolved or None
+        if name == "seq" and parallel is not None and not parallel.seq_parallel:
+            return None
+        return _LOGICAL_TO_MESH.get(name, name if name in mesh.axis_names else None)
+
+    prop = tuple(to_mesh(n) for n in logical_axes)
+    spec = _fit(prop, tuple(x.shape), mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

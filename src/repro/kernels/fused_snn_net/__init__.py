@@ -1,0 +1,1 @@
+from repro.kernels.fused_snn_net.ops import fused_snn_net  # noqa: F401

@@ -1,0 +1,143 @@
+"""Pallas TPU kernel: the ENTIRE SNN stack fused into one kernel.
+
+`fused_snn_step` realizes IMPULSE's W/V fusion within one layer; this kernel
+is the network-level analogue of the paper's fused array. One `pallas_call`
+executes encoder-spikes -> every spiking FC -> accumulate readout for the
+whole `T_total` presentation:
+
+  * every layer's V tile is a VMEM *scratch* buffer that persists across the
+    in-kernel timestep loop — membrane potentials never visit HBM at all
+    (not even once per layer as in per-layer dispatch);
+  * inter-layer spike activations are kernel-local values: layer i's fired
+    vector feeds layer i+1's MXU matmul in the same loop iteration, so the
+    T*B*N spike traffic between layers also never touches HBM;
+  * weights for ALL layers are loaded HBM->VMEM once per batch tile and
+    stay resident (the IMDB stack is ~33 KB of int8 — V_MEM-sized).
+
+HBM traffic: per-layer dispatch moves O(L*T*B*N) spike bytes + O(L*B*N) V
+bytes; fused-net moves O(T*B*N_in) input + O(B*N) final V. The optional
+raster outputs (`emit_rasters`, needed for event/energy accounting) add the
+output spike stores back — serving uses emit_rasters=False.
+
+Grid: (B // block_b,). The network dimension is NOT gridded: layer widths
+are padded to the 128-lane MXU tile and the whole stack fits VMEM (the
+macro's 128x12 geometry guarantees layer tiles are tiny). The timestep loop
+is an in-kernel fori_loop — a grid dimension over T would evict V.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.quant import clamp_v, spike_compare
+
+
+def _net_kernel(*refs, n_spiking: int, neuron: str, clamp_mode: str,
+                timesteps: int, emit_rasters: bool):
+    """Ref layout (inputs, outputs, scratch):
+      inputs : spikes_ref (T, Bt, N0p) int8; w_refs[i] (Nip, Nop) int8 for
+               the n_spiking FCs + readout; params_ref (n_spiking, 2) int32
+               rows of [threshold, leak];
+      outputs: raster_refs[i] (T, Bt, Nop) int8 per spiking FC (only when
+               emit_rasters); v_out_refs[i] (Bt, Nop) int32 per layer
+               (readout last);
+      scratch: v_refs[i] (Bt, Nop) int32 per layer — the fused V_MEM tiles.
+    """
+    n_w = n_spiking + 1
+    spikes_ref = refs[0]
+    w_refs = refs[1:1 + n_w]
+    params_ref = refs[1 + n_w]
+    pos = 2 + n_w
+    raster_refs = refs[pos:pos + n_spiking] if emit_rasters else ()
+    pos += n_spiking if emit_rasters else 0
+    v_out_refs = refs[pos:pos + n_w]
+    v_refs = refs[pos + n_w:]
+
+    ws = [w_refs[i][...] for i in range(n_w)]     # VMEM-resident weights
+    for vref in v_refs:
+        vref[...] = jnp.zeros_like(vref)
+
+    def body(t, carry):
+        cur = spikes_ref[t]                                    # (Bt, N0p) int8
+        for i in range(n_spiking):
+            # AccW2V for the whole layer: binary matmul on the MXU
+            acc = jax.lax.dot_general(
+                cur, ws[i], (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+            v = clamp_v(v_refs[i][...] + acc, clamp_mode)
+            if neuron == "lif":                                # AccV2V(-leak)
+                v = clamp_v(v - params_ref[i, 1], clamp_mode)
+            fired = spike_compare(v, params_ref[i, 0], clamp_mode)  # SpikeCheck
+            if neuron == "rmp":                                # AccV2V(-th), gated
+                v = clamp_v(jnp.where(fired, v - params_ref[i, 0], v),
+                            clamp_mode)
+            else:                                              # ResetV
+                v = jnp.where(fired, 0, v)
+            v_refs[i][...] = v
+            cur = fired.astype(jnp.int8)                       # stays in VMEM
+            if emit_rasters:
+                pl.store(raster_refs[i],
+                         (pl.dslice(t, 1), slice(None), slice(None)),
+                         cur[None])
+        # readout: wide int32 accumulate, no 11b clamp
+        v_refs[n_spiking][...] = v_refs[n_spiking][...] + jax.lax.dot_general(
+            cur, ws[n_spiking], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        return carry
+
+    jax.lax.fori_loop(0, timesteps, body, 0)
+    for i in range(n_w):
+        v_out_refs[i][...] = v_refs[i][...]
+
+
+def fused_snn_net_pallas(spikes: jax.Array, ws: list, params: jax.Array, *,
+                         neuron: str, clamp_mode: str, block_b: int,
+                         emit_rasters: bool, interpret: bool = False):
+    """Dispatch the network kernel. Shapes must be pre-padded: spikes
+    (T, B, N0p) int8 with B % block_b == 0; ws[i] (Nip, Nop) int8 with every
+    dim a 128 multiple and Nip == previous Nop; params (n_spiking, 2) int32.
+
+    Returns (rasters, v_finals): rasters — list of (T, B, Nop) int8 per
+    spiking layer ([] when emit_rasters=False); v_finals — list of
+    (B, Nop) int32 per layer, readout last.
+    """
+    T, B, _ = spikes.shape
+    n_spiking = len(ws) - 1
+    grid = (B // block_b,)
+    kernel = functools.partial(
+        _net_kernel, n_spiking=n_spiking, neuron=neuron,
+        clamp_mode=clamp_mode, timesteps=T, emit_rasters=emit_rasters)
+
+    in_specs = [pl.BlockSpec((T, block_b, spikes.shape[2]),
+                             lambda b: (0, b, 0))]
+    in_specs += [pl.BlockSpec(w.shape, lambda b: (0, 0)) for w in ws]
+    in_specs += [pl.BlockSpec(params.shape, lambda b: (0, 0))]
+
+    out_specs, out_shape = [], []
+    if emit_rasters:
+        for w in ws[:-1]:
+            out_specs.append(pl.BlockSpec((T, block_b, w.shape[1]),
+                                          lambda b: (0, b, 0)))
+            out_shape.append(jax.ShapeDtypeStruct((T, B, w.shape[1]), jnp.int8))
+    for w in ws:
+        out_specs.append(pl.BlockSpec((block_b, w.shape[1]), lambda b: (b, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((B, w.shape[1]), jnp.int32))
+
+    scratch = [pltpu.VMEM((block_b, w.shape[1]), jnp.int32) for w in ws]
+
+    outs = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(spikes, *ws, params)
+    rasters = list(outs[:n_spiking]) if emit_rasters else []
+    v_finals = list(outs[n_spiking:] if emit_rasters else outs)
+    return rasters, v_finals

@@ -1,0 +1,95 @@
+"""jit'd public wrapper for the network-level fused SNN kernel: padding,
+dispatch, and the pure-JAX fallback for non-TPU backends.
+
+Padding correctness: layer widths pad to the 128-lane tile. Padded *input*
+lanes are harmless because the next layer's padded weight ROWS are zero, so
+junk spikes fired by padded lanes (their V integrates only leak) contribute
+exactly nothing downstream; rasters and V are sliced back to logical widths
+before returning.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_snn_net.kernel import fused_snn_net_pallas
+
+LANE = 128
+
+
+def _pad_axis(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@partial(jax.jit, static_argnames=("thresholds", "leaks", "neuron",
+                                   "clamp_mode", "block_b", "use_pallas",
+                                   "interpret", "emit_rasters"))
+def fused_snn_net(spikes: jax.Array, ws: list, *, thresholds: tuple,
+                  leaks: tuple, neuron: str = "rmp",
+                  clamp_mode: str = "saturate", block_b: int = 8,
+                  use_pallas: bool = True, interpret: bool = False,
+                  emit_rasters: bool = True):
+    """Run a (T, B, N0) encoder spike raster through the whole fc stack.
+
+    ``ws``: per-layer int8 weights, spiking FCs first, readout last;
+    ``thresholds``/``leaks``: per-spiking-layer ints on each layer's grid.
+    Returns (rasters, v_finals): per-spiking-layer output rasters
+    (T, B, N_i) int8 (empty list when emit_rasters=False) and per-layer
+    final V (B, N_i) int32, readout last.
+
+    ``use_pallas=False`` selects a pure-jnp reference with identical
+    semantics (scan of isa.layer_timestep_int over the stack).
+    """
+    thresholds, leaks = tuple(thresholds), tuple(leaks)
+    if not use_pallas:
+        return _fused_snn_net_ref(spikes, ws, thresholds, leaks, neuron,
+                                  clamp_mode, emit_rasters)
+    T, B, N0 = spikes.shape
+    # chain alignment on LOGICAL widths (padded widths can coincide for
+    # mismatched stacks): layer i's fan-in == layer i-1's fan-out
+    prev = N0
+    for w in ws:
+        assert w.shape[0] == prev, (w.shape, prev)
+        prev = w.shape[1]
+    s = _pad_axis(_pad_axis(spikes.astype(jnp.int8), 2, LANE), 1, block_b)
+    ws_p = [_pad_axis(_pad_axis(w.astype(jnp.int8), 0, LANE), 1, LANE)
+            for w in ws]
+    params = jnp.asarray([[t, l] for t, l in zip(thresholds, leaks)],
+                         jnp.int32).reshape(len(thresholds), 2)
+    rasters, v_finals = fused_snn_net_pallas(
+        s, ws_p, params, neuron=neuron, clamp_mode=clamp_mode,
+        block_b=block_b, emit_rasters=emit_rasters, interpret=interpret)
+    rasters = [r[:, :B, :w.shape[1]] for r, w in zip(rasters, ws[:-1])]
+    v_finals = [v[:B, :w.shape[1]] for v, w in zip(v_finals, ws)]
+    return rasters, v_finals
+
+
+def _fused_snn_net_ref(spikes, ws, thresholds, leaks, neuron, clamp_mode,
+                       emit_rasters):
+    """Pure-jnp oracle: the word-level ISA scanned over the network."""
+    from repro.core.isa import layer_timestep_int
+    B = spikes.shape[1]
+
+    def step(carry, s_t):
+        vs = list(carry)
+        cur = s_t.astype(jnp.int32)
+        rasters = []
+        for i, w in enumerate(ws[:-1]):
+            vs[i], cur = layer_timestep_int(
+                vs[i], w, cur, neuron=neuron,
+                threshold=jnp.int32(thresholds[i]), leak=jnp.int32(leaks[i]),
+                reset=jnp.int32(0), clamp_mode=clamp_mode)
+            rasters.append(cur.astype(jnp.int8))
+        vs[-1] = vs[-1] + cur @ ws[-1].astype(jnp.int32)
+        return tuple(vs), tuple(rasters)
+
+    vs0 = tuple(jnp.zeros((B, w.shape[1]), jnp.int32) for w in ws)
+    vs, rasters = jax.lax.scan(step, vs0, spikes.astype(jnp.int8))
+    return (list(rasters) if emit_rasters else []), list(vs)

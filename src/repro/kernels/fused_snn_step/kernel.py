@@ -22,16 +22,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.quant import V_MAX, V_MIN
+from repro.core.quant import clamp_v, spike_compare
 
 NEURON_IDS = {"if": 0, "lif": 1, "rmp": 2}
-
-
-def _clamp11(v, clamp_mode: str):
-    if clamp_mode == "saturate":
-        return jnp.clip(v, V_MIN, V_MAX)
-    span = V_MAX - V_MIN + 1
-    return ((v - V_MIN) % span) + V_MIN
 
 
 def _snn_kernel(spikes_ref, w_ref, params_ref, out_ref, v_ref, *,
@@ -51,12 +44,12 @@ def _snn_kernel(spikes_ref, w_ref, params_ref, out_ref, v_ref, *,
         acc = jax.lax.dot_general(
             s_in, w, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.int32)
-        v = _clamp11(v + acc, clamp_mode)
+        v = clamp_v(v + acc, clamp_mode)
         if neuron == "lif":                                   # AccV2V(-leak)
-            v = _clamp11(v - leak, clamp_mode)
-        fired = v >= threshold                                # SpikeCheck
+            v = clamp_v(v - leak, clamp_mode)
+        fired = spike_compare(v, threshold, clamp_mode)       # SpikeCheck
         if neuron == "rmp":                                   # AccV2V(-th), gated
-            v = _clamp11(jnp.where(fired, v - threshold, v), clamp_mode)
+            v = clamp_v(jnp.where(fired, v - threshold, v), clamp_mode)
         else:                                                 # ResetV
             v = jnp.where(fired, reset, v)
         pl.store(out_ref, (pl.dslice(t, 1), slice(None), slice(None)),

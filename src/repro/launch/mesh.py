@@ -16,15 +16,23 @@ HBM_BYTES = 16 * 2**30          # 16 GiB per chip
 ICI_BW = 50e9                   # bytes/s per link (~)
 
 
+def make_mesh(shape, axes):
+    """jax.make_mesh across jax versions: axis_types (and AxisType) only
+    exist from jax 0.5; older jax builds the same Auto-typed mesh without
+    the kwarg."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(shape, axes,
+                             axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(n_devices: int = 0, model: int = 1):
     """Small CPU mesh for tests (n devices must already exist)."""
     n = n_devices or len(jax.devices())
-    return jax.make_mesh((n // model, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((n // model, model), ("data", "model"))

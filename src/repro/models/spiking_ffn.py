@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.neuron import NeuronState, neuron_step
+from repro.core import pipeline
 from repro.core.quant import fake_quant_w
 from repro.models.layers import dense_init
 
@@ -26,20 +26,15 @@ def init_spiking_ffn(key, d_model: int, d_ff: int, dtype=jnp.bfloat16) -> dict:
 def spiking_ffn(x: jax.Array, p: dict, cfg: ModelConfig) -> tuple[jax.Array, jax.Array]:
     """x: (B, T, d). Returns (out, mean_spike_rate). Rate-coded: the hidden
     spiking population integrates the same current for `timesteps` steps; the
-    normalized spike count is the activation."""
+    normalized spike count is the activation. The temporal loop is the
+    pipeline's float executor on a single-population program."""
     sp = cfg.spiking
     w_up = fake_quant_w(p["up"].astype(jnp.float32)).astype(x.dtype)
     current = (x @ w_up).astype(jnp.float32)
 
-    def step(carry, _):
-        st, count = carry
-        st, s = neuron_step(st, current, neuron=sp.neuron,
-                            threshold=sp.threshold, leak=sp.leak)
-        return (st, count + s), s.mean()
-
-    st0 = NeuronState(jnp.zeros_like(current))
-    (st, count), rates = jax.lax.scan(
-        step, (st0, jnp.zeros_like(current)), None, length=sp.timesteps)
-    h = (count / sp.timesteps).astype(x.dtype)
+    program = pipeline.rate_coded_program(sp, current.shape[1:])
+    res = pipeline.run_network(program, current, "float", collect_sums=True,
+                               static_input=True)
+    h = (res.aux["spike_sums"][0] / sp.timesteps).astype(x.dtype)
     w_down = fake_quant_w(p["down"].astype(jnp.float32)).astype(x.dtype)
-    return h @ w_down, rates.mean()
+    return h @ w_down, res.aux["spike_rates"].mean()

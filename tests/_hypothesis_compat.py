@@ -1,0 +1,81 @@
+"""Minimal stand-in for the `hypothesis` API surface these tests use.
+
+The container image does not ship hypothesis and installing packages is not
+an option, so conftest.py registers this module as `hypothesis` when the
+real library is absent. It is NOT a property-based testing engine: each
+@given test runs `max_examples` deterministic examples — strategy boundary
+values first (where most of the macro's two's-complement edge cases live),
+then seeded pseudo-random draws. With the real hypothesis installed this
+module is never imported.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import itertools
+import random
+from dataclasses import dataclass
+from typing import Any, Callable
+
+
+@dataclass(frozen=True)
+class _Strategy:
+    boundary: tuple            # always-tested edge examples
+    draw: Callable[[random.Random], Any]
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    edge = {min_value, max_value, 0, -1, 1}
+    edge = tuple(v for v in sorted(edge) if min_value <= v <= max_value)
+    return _Strategy(edge, lambda r: r.randint(min_value, max_value))
+
+
+def floats(min_value: float, max_value: float, **_: Any) -> _Strategy:
+    return _Strategy((min_value, max_value),
+                     lambda r: r.uniform(min_value, max_value))
+
+
+def sampled_from(options) -> _Strategy:
+    options = tuple(options)
+    return _Strategy(options[:2], lambda r: r.choice(options))
+
+
+def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
+    def draw(r: random.Random):
+        n = r.randint(min_size, max_size)
+        return [elements.draw(r) for _ in range(n)]
+    boundary = tuple([list(elements.boundary[:1]) * max(min_size, 1)][:1])
+    return _Strategy(boundary, draw)
+
+
+class strategies:                       # mirrors `from hypothesis import strategies as st`
+    integers = staticmethod(integers)
+    floats = staticmethod(floats)
+    sampled_from = staticmethod(sampled_from)
+    lists = staticmethod(lists)
+
+
+def settings(max_examples: int = 100, **_: Any):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats: _Strategy):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            max_examples = getattr(wrapper, "_max_examples", 100)
+            # all-boundary cross product first, then seeded random draws
+            combos = list(itertools.product(*(s.boundary for s in strats)))
+            rng = random.Random(1234567 + len(strats))
+            while len(combos) < max_examples:
+                combos.append(tuple(s.draw(rng) for s in strats))
+            for combo in combos[:max(max_examples, len(combos))]:
+                fn(*args, *combo, **kwargs)
+        # pytest must not see the strategy params as fixtures
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+    return deco

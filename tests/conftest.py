@@ -1,0 +1,23 @@
+"""Test-session setup: make `src/` importable and gate optional deps.
+
+The tier-1 command runs with PYTHONPATH=src (also set via pytest.ini
+``pythonpath``); the sys.path insert below keeps direct `pytest tests/...`
+invocations working from any cwd. The hypothesis fallback keeps the
+property tests runnable in the hermetic container (no pip installs).
+"""
+import sys
+from pathlib import Path
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    import importlib.util
+    _spec = importlib.util.spec_from_file_location(
+        "hypothesis", Path(__file__).parent / "_hypothesis_compat.py")
+    _mod = importlib.util.module_from_spec(_spec)
+    sys.modules["hypothesis"] = _mod     # register first: dataclasses resolve
+    _spec.loader.exec_module(_mod)       # __module__ via sys.modules at exec

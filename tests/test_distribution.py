@@ -24,6 +24,12 @@ def run_subprocess(body: str, devices: int = 8) -> dict:
         import json
         import jax, jax.numpy as jnp
         import numpy as np
+        if not hasattr(jax.sharding, "AxisType"):   # jax < 0.5 compat shim
+            class _AxisType:
+                Auto = None
+            jax.sharding.AxisType = _AxisType
+            _mm = jax.make_mesh
+            jax.make_mesh = lambda *a, axis_types=None, **k: _mm(*a, **k)
         {textwrap.indent(textwrap.dedent(body), '        ').strip()}
         print("RESULT:" + json.dumps(result))
     """)

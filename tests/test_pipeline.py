@@ -1,0 +1,169 @@
+"""Backend-equivalence contract of the network pipeline.
+
+One SNNProgram, four execution substrates — float (f32 rendering of the
+integer program), int_ref (word-level ISA), pallas (network-level fused
+kernel, interpret mode), bitmacro (bit-level silicon oracle) — must produce
+bit-identical spike rasters, final V, and identical program-level
+InstrCounts. The sweep covers every neuron model, both V_MEM clamp policies,
+and odd shapes (non-multiples of the 128-lane / 12-neuron tiles).
+
+The bitmacro backend joins only in ``wrap`` mode: the silicon's ripple adder
+wraps mod 2^11 (saturation is a word-level deployment policy, macro.py), and
+saturating at word level does not commute with the macro's event-by-event
+accumulation order.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SpikingConfig
+from repro.configs.impulse_snn import IMDB, SNNModelConfig
+from repro.core import pipeline, snn
+
+# (layer_sizes, n_words, batch) — odd widths exercise the padding paths
+SHAPES = [
+    ((100, 128, 128, 1), 2, 2),     # the IMDB geometry
+    ((37, 50, 20, 3), 3, 2),        # ragged everything
+    ((130, 140, 12, 1), 2, 1),      # >128 fan-in (row-tiled on silicon)
+]
+
+
+def _make(layer_sizes, neuron, n_words, batch, seed=0):
+    cfg = SNNModelConfig(
+        arch_id="test", layer_sizes=layer_sizes,
+        spiking=SpikingConfig(neuron=neuron, timesteps=3, threshold=1.0,
+                              leak=0.0625, w_bits=6, v_bits=11),
+        timesteps=3)
+    params = snn.init_fc_snn(jax.random.PRNGKey(seed), cfg)
+    rng = np.random.default_rng(seed + 7)
+    x = jnp.asarray(rng.standard_normal(
+        (batch, n_words, layer_sizes[0])).astype(np.float32))
+    return cfg, params, x
+
+
+def _run_all(cfg, params, x, clamp_mode):
+    program = pipeline.compile_network(cfg, params, domain="int",
+                                       clamp_mode=clamp_mode)
+    xs = pipeline.present_words(x, cfg.timesteps)
+    results = {
+        "float": pipeline.run_network(program, xs, "float",
+                                      collect_rasters=True),
+        "int_ref": pipeline.run_network(program, xs, "int_ref"),
+        "pallas": pipeline.run_network(program, xs, "pallas", interpret=True,
+                                       block_b=4),
+    }
+    fan_in_ok = all(l.tiling.row_tiles == 1 for l in program.fc_stack[:-1])
+    if clamp_mode == "wrap" and fan_in_ok and x.shape[0] <= 13:
+        results["bitmacro"] = pipeline.run_network(program, xs, "bitmacro")
+    return program, results
+
+
+@pytest.mark.parametrize("clamp_mode", ["saturate", "wrap"])
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("neuron", ["if", "lif", "rmp"])
+def test_backend_equivalence(neuron, shape, clamp_mode):
+    layer_sizes, n_words, batch = shape
+    cfg, params, x = _make(layer_sizes, neuron, n_words, batch)
+    program, results = _run_all(cfg, params, x, clamp_mode)
+    ref = results.pop("int_ref")
+    counts_ref = pipeline.count_network_instructions(program, ref.rasters)
+    assert counts_ref.total > 0
+    for name, res in results.items():
+        for li, (a, b) in enumerate(zip(res.rasters, ref.rasters)):
+            np.testing.assert_array_equal(
+                np.asarray(a).astype(np.int8), np.asarray(b),
+                err_msg=f"{name} raster {li} ({neuron}/{clamp_mode})")
+        # final V: encoder V is float everywhere; stack V must be bit-equal
+        for li, (a, b) in enumerate(zip(res.v_final[1:], ref.v_final[1:])):
+            np.testing.assert_array_equal(
+                np.asarray(a).astype(np.int64),
+                np.asarray(b).astype(np.int64),
+                err_msg=f"{name} V {li} ({neuron}/{clamp_mode})")
+        counts = pipeline.count_network_instructions(program, res.rasters)
+        assert counts == counts_ref, (name, counts, counts_ref)
+
+
+def test_imdb_all_four_backends_bit_identical():
+    """The acceptance contract on the paper's own network: all four backends,
+    one program, identical rasters / V / InstrCounts (wrap = raw silicon)."""
+    cfg = dataclasses.replace(IMDB, timesteps=3,
+                              spiking=dataclasses.replace(IMDB.spiking,
+                                                          timesteps=3))
+    params = snn.init_fc_snn(jax.random.PRNGKey(1), cfg)
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((2, 3, 100)).astype(np.float32))
+    program, results = _run_all(cfg, params, x, "wrap")
+    assert set(results) == {"float", "int_ref", "pallas", "bitmacro"}
+    ref = results["int_ref"]
+    counts = {n: pipeline.count_network_instructions(program, r.rasters)
+              for n, r in results.items()}
+    for name, res in results.items():
+        for a, b in zip(res.rasters, ref.rasters):
+            np.testing.assert_array_equal(np.asarray(a).astype(np.int8),
+                                          np.asarray(b), err_msg=name)
+        for a, b in zip(res.v_final[1:], ref.v_final[1:]):
+            np.testing.assert_array_equal(np.asarray(a).astype(np.int64),
+                                          np.asarray(b).astype(np.int64),
+                                          err_msg=name)
+        np.testing.assert_allclose(np.asarray(res.logits),
+                                   np.asarray(ref.logits), err_msg=name)
+        assert counts[name] == counts["int_ref"]
+
+
+def test_wrappers_route_through_pipeline():
+    """snn.sentiment_apply_int on the pallas backend == int_ref backend."""
+    cfg = dataclasses.replace(IMDB, timesteps=2,
+                              spiking=dataclasses.replace(IMDB.spiking,
+                                                          timesteps=2))
+    params = snn.init_fc_snn(jax.random.PRNGKey(2), cfg)
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal((3, 2, 100)).astype(np.float32))
+    l_ref, r_ref, c_ref = snn.sentiment_apply_int(params, x, cfg)
+    l_pal, r_pal, c_pal = snn.sentiment_apply_int(params, x, cfg,
+                                                  backend="pallas",
+                                                  interpret=True)
+    np.testing.assert_array_equal(np.asarray(l_ref), np.asarray(l_pal))
+    for a, b in zip(r_ref, r_pal):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert c_ref == c_pal
+
+
+def test_serving_mode_skips_rasters():
+    """emit_rasters=False returns the same final V with no raster outputs
+    (the inter-layer-spikes-never-touch-HBM serving configuration)."""
+    cfg, params, x = _make((64, 40, 24, 2), "rmp", 2, 3, seed=4)
+    program = pipeline.compile_network(cfg, params, domain="int")
+    xs = pipeline.present_words(x, cfg.timesteps)
+    full = pipeline.run_network(program, xs, "pallas", interpret=True)
+    serve = pipeline.run_network(program, xs, "pallas", interpret=True,
+                                 emit_rasters=False)
+    assert serve.rasters is None
+    np.testing.assert_array_equal(np.asarray(serve.v_out),
+                                  np.asarray(full.v_out))
+
+
+def test_rate_coded_program_matches_manual_loop():
+    """The spiking_ffn path: pipeline rate decoding == a hand-rolled
+    neuron_step loop (guards the refactor of models/spiking_ffn)."""
+    from repro.core.neuron import NeuronState, neuron_step
+    sp = SpikingConfig(neuron="lif", timesteps=6, threshold=0.4, leak=0.05)
+    rng = np.random.default_rng(0)
+    current = jnp.asarray(rng.standard_normal((2, 5, 16)).astype(np.float32))
+    program = pipeline.rate_coded_program(sp, current.shape[1:])
+    res = pipeline.run_network(program, current, "float", collect_sums=True,
+                               static_input=True)
+    # the materialized-presentation form must agree with the closed-over form
+    res2 = pipeline.run_network(program, pipeline.present_static(current, 6),
+                                "float", collect_sums=True)
+    np.testing.assert_allclose(np.asarray(res.aux["spike_sums"][0]),
+                               np.asarray(res2.aux["spike_sums"][0]))
+    st, count = NeuronState(jnp.zeros_like(current)), jnp.zeros_like(current)
+    for _ in range(6):
+        st, s = neuron_step(st, current, neuron="lif", threshold=0.4,
+                            leak=0.05)
+        count = count + s
+    np.testing.assert_allclose(np.asarray(res.aux["spike_sums"][0]),
+                               np.asarray(count))

@@ -89,8 +89,8 @@ def test_checkpoint_elastic_restore_resharded(tmp_path):
     mgr = CheckpointManager(str(tmp_path))
     tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
     mgr.save(1, tree, blocking=True)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1,), ("data",))
     from jax.sharding import NamedSharding, PartitionSpec as P
     sh = {"w": NamedSharding(mesh, P("data", None))}
     step, restored = mgr.restore(like=tree, shardings=sh)
