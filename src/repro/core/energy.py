@@ -114,6 +114,29 @@ def edp_reduction(sparsity: float, neuron: str = "rmp",
                / edp_per_neuron_per_timestep(0.0, neuron, point)
 
 
+def measured_edp(counts: InstrCount, point: OperatingPoint = POINT_D) -> float:
+    """EDP of a *measured* instruction tally (J*s): the event-driven
+    counterpart of the analytic Fig. 11b curve. The counts come from the
+    execution pipeline (rasters or a `pipeline.SparsityReport`), so the EDP
+    reflects the sparsity the workload actually exhibited rather than a
+    swept parameter."""
+    return sequence_edp(counts, point)
+
+
+def measured_edp_per_neuron_timestep(counts: InstrCount, macro_timesteps: int,
+                                     point: OperatingPoint = POINT_D) -> float:
+    """Normalize a measured tally to the Fig. 11b axis: average instruction
+    cycles per macro-timestep (``macro_timesteps`` =
+    `SparsityReport.macro_timesteps`), then EDP per neuron — directly
+    comparable to `edp_per_neuron_per_timestep(s)` at the measured
+    sparsity. Fractional average counts are fine: the energy/delay sums are
+    linear in the per-instruction counts."""
+    if macro_timesteps <= 0:
+        raise ValueError("macro_timesteps must be positive")
+    avg = InstrCount(*(c / macro_timesteps for c in counts))
+    return sequence_edp(avg, point) / MACRO_OUT
+
+
 def tops_per_watt(point: OperatingPoint) -> float:
     """Throughput/power for AccW2V (1 op/cycle), Table I row."""
     return point.accw2v_tops_w

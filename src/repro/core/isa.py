@@ -175,15 +175,16 @@ def timestep(st: MacroState, set_idx: int, in_spikes, neuron: str
 # for snn.py / the Pallas kernel). Processes a whole layer tile at once.
 # ---------------------------------------------------------------------------
 
-def layer_timestep_int(v: jax.Array, wq: jax.Array, in_spikes: jax.Array, *,
-                       neuron: str, threshold: jax.Array, leak: jax.Array,
-                       reset: jax.Array, clamp_mode: str = "saturate"
-                       ) -> tuple[jax.Array, jax.Array]:
-    """Batched integer timestep: v (..., n_out) int32, wq (n_in, n_out) int8,
-    in_spikes (..., n_in) {0,1}. Mathematically == issuing `timestep` per macro
-    tile (tested). Returns (v', out_spikes)."""
-    acc = jnp.matmul(in_spikes.astype(jnp.int32), wq.astype(jnp.int32))
-    v = clamp_v(v + acc, clamp_mode)
+def neuron_dynamics_int(v: jax.Array, *, neuron: str, threshold: jax.Array,
+                        leak: jax.Array, reset: jax.Array,
+                        clamp_mode: str = "saturate"
+                        ) -> tuple[jax.Array, jax.Array]:
+    """The post-accumulation half of a timestep: leak / SpikeCheck / reset on
+    an already-accumulated (and clamped) V. Split out from
+    `layer_timestep_int` so event-gated executors can skip the AccW2V matmul
+    for all-silent inputs while still running the neuron update every
+    timestep (LIF leaks and RMP can re-fire with zero input — the update
+    sequence is unconditional on silicon too, Fig. 6)."""
     if neuron == "lif":
         v = clamp_v(v - leak, clamp_mode)
     s = spike_compare(v, threshold, clamp_mode)
@@ -194,19 +195,35 @@ def layer_timestep_int(v: jax.Array, wq: jax.Array, in_spikes: jax.Array, *,
     return v, s.astype(jnp.int32)
 
 
-def count_layer_instructions(spike_raster: np.ndarray, n_in: int, n_out: int,
-                             neuron: str) -> InstrCount:
-    """Instruction cycles to run a (n_in -> n_out) FC layer for a spike raster
-    of shape (T, ..., n_in), including multi-macro tiling (mapping.py geometry:
-    row tiles add AccV2V partial-sum reductions).
+def layer_timestep_int(v: jax.Array, wq: jax.Array, in_spikes: jax.Array, *,
+                       neuron: str, threshold: jax.Array, leak: jax.Array,
+                       reset: jax.Array, clamp_mode: str = "saturate"
+                       ) -> tuple[jax.Array, jax.Array]:
+    """Batched integer timestep: v (..., n_out) int32, wq (n_in, n_out) int8,
+    in_spikes (..., n_in) {0,1}. Mathematically == issuing `timestep` per macro
+    tile (tested). Returns (v', out_spikes)."""
+    acc = jnp.matmul(in_spikes.astype(jnp.int32), wq.astype(jnp.int32))
+    v = clamp_v(v + acc, clamp_mode)
+    return neuron_dynamics_int(v, neuron=neuron, threshold=threshold,
+                               leak=leak, reset=reset, clamp_mode=clamp_mode)
+
+
+def count_layer_instructions_from_events(total_events: int, batch_t: int,
+                                         n_in: int, n_out: int, neuron: str
+                                         ) -> InstrCount:
+    """Instruction cycles for a (n_in -> n_out) FC layer given only the
+    aggregate event statistics: ``total_events`` input spikes over
+    ``batch_t`` (timestep, example) frames. This is the raster-free entry
+    point used by `pipeline.SparsityReport` (occupancy summaries carry the
+    same information the counter needs); `count_layer_instructions`
+    delegates here, so both paths agree by construction. Includes
+    multi-macro tiling (mapping.py geometry: row tiles add AccV2V
+    partial-sum reductions).
     """
     from repro.core import mapping
     tiles = mapping.fc_tiling(n_in, n_out)
-    spikes_per_t = np.asarray(spike_raster).reshape(spike_raster.shape[0], -1, n_in)
-    total_events = int(spikes_per_t.sum())
-    batch_t = spikes_per_t.shape[0] * spikes_per_t.shape[1]
     # AccW2V: each event hits every column tile, odd+even cycles
-    n_acc_w = 2 * total_events * tiles.col_tiles
+    n_acc_w = 2 * int(total_events) * tiles.col_tiles
     # partial-sum reduction: (row_tiles-1) AccV2V per set per parity per timestep
     n_red = 2 * (tiles.row_tiles - 1) * tiles.col_tiles * batch_t
     cnt = InstrCount(acc_w2v=n_acc_w, acc_v2v=n_red)
@@ -217,3 +234,15 @@ def count_layer_instructions(spike_raster: np.ndarray, n_in: int, n_out: int,
                   "none": InstrCount()}[neuron]
     upd = InstrCount(*(x * tiles.col_tiles * batch_t for x in per_update))
     return cnt + upd
+
+
+def count_layer_instructions(spike_raster: np.ndarray, n_in: int, n_out: int,
+                             neuron: str) -> InstrCount:
+    """Instruction cycles to run a (n_in -> n_out) FC layer for a spike raster
+    of shape (T, ..., n_in). See `count_layer_instructions_from_events`.
+    """
+    spikes_per_t = np.asarray(spike_raster).reshape(spike_raster.shape[0], -1, n_in)
+    total_events = int(spikes_per_t.sum())
+    batch_t = spikes_per_t.shape[0] * spikes_per_t.shape[1]
+    return count_layer_instructions_from_events(total_events, batch_t,
+                                                n_in, n_out, neuron)

@@ -406,35 +406,87 @@ def _stack_kernel_args(program: SNNProgram) -> dict:
         neuron=program.neuron, clamp_mode=program.clamp_mode)
 
 
+def run_stack_from_raster(program: SNNProgram, spikes_enc: jax.Array, *,
+                          use_pallas: bool = False, use_sparse: bool = False,
+                          block_b: int = 8, interpret: bool = False,
+                          emit_rasters: bool = True):
+    """Execute only the on-macro fc stack on a supplied encoder spike raster
+    (T_total, B, d) int8 — the public raster-in entry point that the
+    int_ref/pallas backends and raster-driven benchmarks (synthetic
+    sparsity sweeps) share. Returns (rasters, v_stack, skips) with
+    ``rasters[0]`` the input raster itself, aligned with
+    `count_network_instructions` / `sparsity_report` expectations."""
+    from repro.kernels.fused_snn_net.ops import fused_snn_net
+    kw = _stack_kernel_args(program)
+    rasters, v_stack, skips = fused_snn_net(
+        spikes_enc, kw.pop("ws"), use_pallas=use_pallas,
+        use_sparse=use_sparse, block_b=block_b, interpret=interpret,
+        emit_rasters=emit_rasters, **kw)
+    full = [spikes_enc] + list(rasters) if emit_rasters else None
+    return full, list(v_stack), skips
+
+
+def _attach_skips(res: NetResult, skips, timesteps: int) -> NetResult:
+    """Stash event-gating statistics on a result: raw per-(tile, layer)
+    skipped-matmul counts plus the aggregate skipped-tile fraction (each of
+    the n_tiles * n_layers gate sites fires once per timestep)."""
+    if skips is None:
+        return res
+    skips = np.asarray(skips)
+    res.aux["skip_counts"] = skips
+    res.aux["skipped_tile_fraction"] = float(skips.sum()) / float(
+        timesteps * skips.shape[0] * skips.shape[1])
+    return res
+
+
 @register_backend("int_ref")
-def run_int_ref(program: SNNProgram, xs: jax.Array) -> NetResult:
+def run_int_ref(program: SNNProgram, xs: jax.Array, *,
+                use_sparse: bool = False) -> NetResult:
     """Word-level ISA semantics: the pure-jnp network reference (a scan of
     isa.layer_timestep_int over the stack) that is also the pallas kernel's
-    non-TPU fallback — one implementation of the contract, two entry points."""
-    from repro.kernels.fused_snn_net.ops import fused_snn_net
+    non-TPU fallback — one implementation of the contract, two entry points.
+    ``use_sparse`` runs the lax.cond event-gated variant (bit-identical)."""
     spikes_enc, v_enc = encode(program, xs)
-    kw = _stack_kernel_args(program)
-    rasters, v_stack = fused_snn_net(spikes_enc, kw.pop("ws"),
-                                     use_pallas=False, **kw)
-    return _assemble(program, [spikes_enc] + list(rasters), v_enc,
-                     list(v_stack))
+    rasters, v_stack, skips = run_stack_from_raster(
+        program, spikes_enc, use_pallas=False, use_sparse=use_sparse)
+    res = _assemble(program, rasters, v_enc, v_stack)
+    return _attach_skips(res, skips, xs.shape[0])
 
 
 # ---------------------------------------------------------------------------
-# pallas backend — the network-level fused kernel
+# pallas backends — the network-level fused kernel (dense and event-gated)
 # ---------------------------------------------------------------------------
+
+def _run_pallas(program: SNNProgram, xs: jax.Array, *, block_b: int,
+                interpret: bool, emit_rasters: bool, use_sparse: bool
+                ) -> NetResult:
+    spikes_enc, v_enc = encode(program, xs)
+    rasters, v_stack, skips = run_stack_from_raster(
+        program, spikes_enc, use_pallas=True, use_sparse=use_sparse,
+        block_b=block_b, interpret=interpret, emit_rasters=emit_rasters)
+    res = _assemble(program, rasters, v_enc, v_stack)
+    return _attach_skips(res, skips, xs.shape[0])
+
 
 @register_backend("pallas")
 def run_pallas(program: SNNProgram, xs: jax.Array, *, block_b: int = 8,
                interpret: bool = False, emit_rasters: bool = True) -> NetResult:
-    from repro.kernels.fused_snn_net.ops import fused_snn_net
-    spikes_enc, v_enc = encode(program, xs)
-    kw = _stack_kernel_args(program)
-    rasters, v_stack = fused_snn_net(
-        spikes_enc, kw.pop("ws"), block_b=block_b, interpret=interpret,
-        emit_rasters=emit_rasters, **kw)
-    full_rasters = [spikes_enc] + list(rasters) if emit_rasters else None
-    return _assemble(program, full_rasters, v_enc, list(v_stack))
+    return _run_pallas(program, xs, block_b=block_b, interpret=interpret,
+                       emit_rasters=emit_rasters, use_sparse=False)
+
+
+@register_backend("pallas_sparse")
+def run_pallas_sparse(program: SNNProgram, xs: jax.Array, *, block_b: int = 8,
+                      interpret: bool = False, emit_rasters: bool = True
+                      ) -> NetResult:
+    """Event-gated fused kernel: per (timestep, layer, batch-tile) the MXU
+    matmul is predicated on tile occupancy (`@pl.when`), realizing the
+    paper's event-driven AccW2V at tile granularity; the neuron update is
+    unconditional, so results stay bit-identical to every dense backend.
+    aux carries ``skip_counts`` ((B_tiles, n_layers) skipped matmuls) and
+    ``skipped_tile_fraction``."""
+    return _run_pallas(program, xs, block_b=block_b, interpret=interpret,
+                       emit_rasters=emit_rasters, use_sparse=True)
 
 
 # ---------------------------------------------------------------------------
@@ -506,17 +558,134 @@ def run_bitmacro(program: SNNProgram, xs: jax.Array) -> NetResult:
 
 
 # ---------------------------------------------------------------------------
-# program-level instruction counting (the energy-model input)
+# program-level sparsity measurement + instruction counting (the energy-
+# model inputs)
 # ---------------------------------------------------------------------------
 
-def count_network_instructions(program: SNNProgram, rasters: list
+@dataclass(frozen=True)
+class SparsityReport:
+    """Measured event statistics of one program execution — the bridge from
+    spike rasters to the energy model. Per fc-stack layer i (whose *input*
+    raster is the output of neuron layer i): total input events, per-
+    timestep occupancy, and the macro-tiling geometry needed to turn events
+    into instruction cycles. Built from full rasters (`sparsity_report`,
+    exact, per-timestep resolution) or from the float backend's
+    ``collect_sums`` aggregates (`sparsity_report_from_sums`, raster-free —
+    the training-loop-friendly path). Both feed
+    `count_network_instructions(program, report=...)` and
+    `energy.measured_edp*`."""
+    n_in: tuple                   # fan-in per fc-stack layer
+    n_out: tuple
+    neurons: tuple                # per-layer update kind ("rmp"... | "none")
+    events: tuple                 # total input spike events per layer
+    frames: int                   # (timestep, example) pairs = T_total * B
+    timesteps: int
+    batch: int
+    occupancy_t: Optional[tuple] = None   # per layer: (T_total,) mean input
+                                          # occupancy per timestep (rasters
+                                          # only; None from sums)
+
+    @property
+    def layer_sparsity(self) -> tuple:
+        """1 - (events / possible events), per fc-stack layer input."""
+        return tuple(1.0 - e / (self.frames * n)
+                     for e, n in zip(self.events, self.n_in))
+
+    @property
+    def overall_sparsity(self) -> float:
+        """Event-weighted network input sparsity (all layers pooled)."""
+        possible = sum(self.frames * n for n in self.n_in)
+        return 1.0 - sum(self.events) / possible
+
+    @property
+    def silent_timestep_fraction(self) -> tuple:
+        """Per layer: fraction of timesteps whose whole-batch input raster
+        is silent — the whole-batch-granularity skip opportunity (the
+        reference gate; per-batch-tile kernels skip at least this often)."""
+        if self.occupancy_t is None:
+            return tuple(None for _ in self.n_in)
+        return tuple(float(np.mean(np.asarray(o) == 0.0))
+                     for o in self.occupancy_t)
+
+    @property
+    def macro_timesteps(self) -> int:
+        """Total macro-timesteps executed: every (timestep, example) frame
+        runs each layer's col_tiles macros once — the normalizer that makes
+        a measured InstrCount comparable to the paper's per-neuron
+        per-timestep EDP curve (energy.measured_edp_per_neuron_timestep)."""
+        return sum(self.frames * mapping.fc_tiling(ni, no).col_tiles
+                   for ni, no in zip(self.n_in, self.n_out))
+
+    def instruction_counts(self) -> isa.InstrCount:
+        """Event statistics -> instruction cycles (identical to counting the
+        rasters directly: both route through
+        isa.count_layer_instructions_from_events)."""
+        counts = isa.InstrCount()
+        for ni, no, neuron, ev in zip(self.n_in, self.n_out, self.neurons,
+                                      self.events):
+            counts += isa.count_layer_instructions_from_events(
+                ev, self.frames, ni, no, neuron)
+        return counts
+
+
+def _report_geometry(program: SNNProgram) -> tuple:
+    stack = program.fc_stack
+    return (tuple(l.n_in for l in stack), tuple(l.n_out for l in stack),
+            tuple(program.neuron if l.kind == "fc" else "none"
+                  for l in stack))
+
+
+def sparsity_report(program: SNNProgram, rasters: list) -> SparsityReport:
+    """Exact report from per-layer input rasters (`NetResult.rasters`):
+    rasters[i] is (T_total, B, n_in_i) for fc-stack layer i."""
+    if rasters is None:
+        raise ValueError("sparsity_report needs spike rasters; run the "
+                         "backend with emit_rasters=True (accounting mode), "
+                         "or build the report from collect_sums aggregates")
+    n_in, n_out, neurons = _report_geometry(program)
+    rs = [np.asarray(r).reshape(r.shape[0], -1, ni)
+          for r, ni in zip(rasters, n_in)]
+    T, B = rs[0].shape[:2]
+    return SparsityReport(
+        n_in=n_in, n_out=n_out, neurons=neurons,
+        events=tuple(int(r.sum()) for r in rs),
+        frames=T * B, timesteps=T, batch=B,
+        occupancy_t=tuple(r.mean(axis=(1, 2)) for r in rs))
+
+
+def sparsity_report_from_sums(program: SNNProgram, spike_sums: list,
+                              timesteps: int) -> SparsityReport:
+    """Raster-free report from the float backend's ``collect_sums`` aux:
+    spike_sums[i] is the (B, ...) per-neuron spike-count total of neuron
+    layer i. The last len(fc_stack) neuron layers feed the fc stack, so
+    their totals are exactly the per-layer input event counts — per-
+    timestep occupancy is not recoverable from sums (occupancy_t=None)."""
+    n_in, n_out, neurons = _report_geometry(program)
+    sums = spike_sums[-len(program.fc_stack):]
+    if len(sums) != len(n_in):
+        raise ValueError(f"need one spike-sum per fc-stack layer input "
+                         f"({len(n_in)}), got {len(spike_sums)}")
+    B = int(np.asarray(sums[0]).shape[0])
+    return SparsityReport(
+        n_in=n_in, n_out=n_out, neurons=neurons,
+        events=tuple(int(np.asarray(s).sum()) for s in sums),
+        frames=timesteps * B, timesteps=timesteps, batch=B)
+
+
+def count_network_instructions(program: SNNProgram, rasters: list = None, *,
+                               report: Optional[SparsityReport] = None
                                ) -> isa.InstrCount:
     """Fold the per-layer event counts over the whole program. ``rasters[i]``
     is the input raster of fc-stack layer i; identical rasters (which all
-    backends are tested to produce) give identical counts by construction."""
+    backends are tested to produce) give identical counts by construction.
+    Alternatively pass a `SparsityReport` (``report=...``) — the raster-free
+    accounting path; both routes share one counting implementation."""
+    if report is not None:
+        return report.instruction_counts()
     if rasters is None:
-        raise ValueError("instruction counting needs spike rasters; run the "
-                         "backend with emit_rasters=True (accounting mode)")
+        raise ValueError("instruction counting needs spike rasters (run the "
+                         "backend with emit_rasters=True, accounting mode) "
+                         "or a SparsityReport")
     counts = isa.InstrCount()
     for spec, raster in zip(program.fc_stack, rasters):
         r = np.asarray(raster)

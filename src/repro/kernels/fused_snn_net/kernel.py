@@ -19,6 +19,20 @@ bytes; fused-net moves O(T*B*N_in) input + O(B*N) final V. The optional
 raster outputs (`emit_rasters`, needed for event/energy accounting) add the
 output spike stores back — serving uses emit_rasters=False.
 
+Event-gated mode (``sparse=True``) is the execution-side realization of the
+paper's sparsity claim (Fig. 11): per (timestep, layer, batch-tile) the
+kernel reduces the in-VMEM int8 spike tile to an occupancy count and wraps
+the MXU matmul + V accumulate in `@pl.when(count > 0)` — an all-silent tile
+issues zero AccW2V work, exactly like silent input rows issue no AccW2V
+cycles on silicon. The *neuron update* (leak / SpikeCheck / reset) still
+runs every timestep: LIF leaks and RMP can re-fire with zero input, and the
+macro's update sequence is unconditional too (the `u` term in the Fig. 11b
+EDP model) — which is why gating stays bit-identical to the dense kernel.
+Padded lanes/rows are zero-masked before occupancy is taken (their junk
+spikes multiply zero weight rows, so masking changes no visible output but
+keeps silence detection on logical lanes). Skipped-matmul counts per
+(batch-tile, layer) come back as an extra output for the accounting layer.
+
 Grid: (B // block_b,). The network dimension is NOT gridded: layer widths
 are padded to the 128-lane MXU tile and the whole stack fits VMEM (the
 macro's 128x12 geometry guarantees layer tiles are tiny). The timestep loop
@@ -35,16 +49,20 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.quant import clamp_v, spike_compare
 
+SKIP_LANES = 128    # skip-count output lane width (layer i in column i)
+
 
 def _net_kernel(*refs, n_spiking: int, neuron: str, clamp_mode: str,
-                timesteps: int, emit_rasters: bool):
+                timesteps: int, emit_rasters: bool, sparse: bool,
+                logical_widths: tuple, batch_logical: int, block_b: int):
     """Ref layout (inputs, outputs, scratch):
       inputs : spikes_ref (T, Bt, N0p) int8; w_refs[i] (Nip, Nop) int8 for
                the n_spiking FCs + readout; params_ref (n_spiking, 2) int32
                rows of [threshold, leak];
       outputs: raster_refs[i] (T, Bt, Nop) int8 per spiking FC (only when
                emit_rasters); v_out_refs[i] (Bt, Nop) int32 per layer
-               (readout last);
+               (readout last); skip_ref (1, SKIP_LANES) int32 (only when
+               sparse) — skipped-matmul count of layer i in column i;
       scratch: v_refs[i] (Bt, Nop) int32 per layer — the fused V_MEM tiles.
     """
     n_w = n_spiking + 1
@@ -55,20 +73,64 @@ def _net_kernel(*refs, n_spiking: int, neuron: str, clamp_mode: str,
     raster_refs = refs[pos:pos + n_spiking] if emit_rasters else ()
     pos += n_spiking if emit_rasters else 0
     v_out_refs = refs[pos:pos + n_w]
-    v_refs = refs[pos + n_w:]
+    pos += n_w
+    skip_ref = refs[pos] if sparse else None
+    pos += 1 if sparse else 0
+    v_refs = refs[pos:]
 
     ws = [w_refs[i][...] for i in range(n_w)]     # VMEM-resident weights
     for vref in v_refs:
         vref[...] = jnp.zeros_like(vref)
+    if sparse:
+        skip_ref[...] = jnp.zeros_like(skip_ref)
+        b0 = pl.program_id(0) * block_b
+
+    def mask_pad(x, n_logical):
+        """Zero padded lanes (>= n_logical) and padded batch rows. Padded
+        positions carry junk spikes whose downstream weight rows are zero —
+        masking changes no visible output, but keeps the occupancy test on
+        logical events only."""
+        bt, n = x.shape
+        lane_ok = jax.lax.broadcasted_iota(jnp.int32, (bt, n), 1) < n_logical
+        row_ok = (jax.lax.broadcasted_iota(jnp.int32, (bt, n), 0) + b0
+                  ) < batch_logical
+        return jnp.where(lane_ok & row_ok, x, 0)
+
+    def accumulate(i, cur):
+        """AccW2V for a whole layer: binary matmul on the MXU. Returns the
+        accumulated (clamped; readout unclamped) V value. Dense mode is
+        pure compute — the caller stores V once after the neuron update.
+        Sparse mode must go through the ref (only ref writes can be
+        predicated): silent tiles skip the matmul + write entirely and the
+        skip counter for layer i bumps instead."""
+        if not sparse:
+            acc = jax.lax.dot_general(cur, ws[i], (((1,), (0,)), ((), ())),
+                                      preferred_element_type=jnp.int32)
+            v = v_refs[i][...] + acc
+            return clamp_v(v, clamp_mode) if i < n_spiking else v
+        occupied = jnp.sum(cur.astype(jnp.int32)) > 0
+
+        @pl.when(occupied)
+        def _do(i=i, cur=cur):
+            acc = jax.lax.dot_general(cur, ws[i], (((1,), (0,)), ((), ())),
+                                      preferred_element_type=jnp.int32)
+            v_refs[i][...] = clamp_v(v_refs[i][...] + acc, clamp_mode) \
+                if i < n_spiking else v_refs[i][...] + acc
+
+        @pl.when(jnp.logical_not(occupied))
+        def _skip(i=i):
+            col = jax.lax.broadcasted_iota(
+                jnp.int32, (1, SKIP_LANES), 1) == i
+            skip_ref[...] = skip_ref[...] + col.astype(jnp.int32)
+
+        return v_refs[i][...]
 
     def body(t, carry):
         cur = spikes_ref[t]                                    # (Bt, N0p) int8
+        if sparse:
+            cur = mask_pad(cur, logical_widths[0])
         for i in range(n_spiking):
-            # AccW2V for the whole layer: binary matmul on the MXU
-            acc = jax.lax.dot_general(
-                cur, ws[i], (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.int32)
-            v = clamp_v(v_refs[i][...] + acc, clamp_mode)
+            v = accumulate(i, cur)
             if neuron == "lif":                                # AccV2V(-leak)
                 v = clamp_v(v - params_ref[i, 1], clamp_mode)
             fired = spike_compare(v, params_ref[i, 0], clamp_mode)  # SpikeCheck
@@ -79,14 +141,16 @@ def _net_kernel(*refs, n_spiking: int, neuron: str, clamp_mode: str,
                 v = jnp.where(fired, 0, v)
             v_refs[i][...] = v
             cur = fired.astype(jnp.int8)                       # stays in VMEM
+            if sparse:
+                cur = mask_pad(cur, logical_widths[i + 1])
             if emit_rasters:
                 pl.store(raster_refs[i],
                          (pl.dslice(t, 1), slice(None), slice(None)),
                          cur[None])
         # readout: wide int32 accumulate, no 11b clamp
-        v_refs[n_spiking][...] = v_refs[n_spiking][...] + jax.lax.dot_general(
-            cur, ws[n_spiking], (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.int32)
+        v_out = accumulate(n_spiking, cur)
+        if not sparse:                  # sparse mode already wrote the ref
+            v_refs[n_spiking][...] = v_out
         return carry
 
     jax.lax.fori_loop(0, timesteps, body, 0)
@@ -96,21 +160,35 @@ def _net_kernel(*refs, n_spiking: int, neuron: str, clamp_mode: str,
 
 def fused_snn_net_pallas(spikes: jax.Array, ws: list, params: jax.Array, *,
                          neuron: str, clamp_mode: str, block_b: int,
-                         emit_rasters: bool, interpret: bool = False):
+                         emit_rasters: bool, interpret: bool = False,
+                         sparse: bool = False, logical_widths: tuple = (),
+                         batch_logical: int = 0):
     """Dispatch the network kernel. Shapes must be pre-padded: spikes
     (T, B, N0p) int8 with B % block_b == 0; ws[i] (Nip, Nop) int8 with every
     dim a 128 multiple and Nip == previous Nop; params (n_spiking, 2) int32.
 
-    Returns (rasters, v_finals): rasters — list of (T, B, Nop) int8 per
-    spiking layer ([] when emit_rasters=False); v_finals — list of
-    (B, Nop) int32 per layer, readout last.
+    ``sparse`` selects the event-gated kernel; it needs ``logical_widths``
+    (the pre-padding width of the input raster and of every layer's output,
+    len(ws)+1 entries) and ``batch_logical`` (pre-padding B) to mask padding
+    junk out of the occupancy test.
+
+    Returns (rasters, v_finals, skips): rasters — list of (T, B, Nop) int8
+    per spiking layer ([] when emit_rasters=False); v_finals — list of
+    (B, Nop) int32 per layer, readout last; skips — (B // block_b, len(ws))
+    int32 skipped-matmul counts per (batch tile, layer) in sparse mode,
+    None otherwise.
     """
     T, B, _ = spikes.shape
     n_spiking = len(ws) - 1
     grid = (B // block_b,)
+    if sparse and len(logical_widths) != len(ws) + 1:
+        raise ValueError("sparse mode needs len(ws)+1 logical widths, got "
+                         f"{len(logical_widths)} for {len(ws)} layers")
     kernel = functools.partial(
         _net_kernel, n_spiking=n_spiking, neuron=neuron,
-        clamp_mode=clamp_mode, timesteps=T, emit_rasters=emit_rasters)
+        clamp_mode=clamp_mode, timesteps=T, emit_rasters=emit_rasters,
+        sparse=sparse, logical_widths=tuple(logical_widths),
+        batch_logical=batch_logical, block_b=block_b)
 
     in_specs = [pl.BlockSpec((T, block_b, spikes.shape[2]),
                              lambda b: (0, b, 0))]
@@ -126,6 +204,10 @@ def fused_snn_net_pallas(spikes: jax.Array, ws: list, params: jax.Array, *,
     for w in ws:
         out_specs.append(pl.BlockSpec((block_b, w.shape[1]), lambda b: (b, 0)))
         out_shape.append(jax.ShapeDtypeStruct((B, w.shape[1]), jnp.int32))
+    if sparse:
+        out_specs.append(pl.BlockSpec((1, SKIP_LANES), lambda b: (b, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((B // block_b, SKIP_LANES),
+                                              jnp.int32))
 
     scratch = [pltpu.VMEM((block_b, w.shape[1]), jnp.int32) for w in ws]
 
@@ -138,6 +220,8 @@ def fused_snn_net_pallas(spikes: jax.Array, ws: list, params: jax.Array, *,
         scratch_shapes=scratch,
         interpret=interpret,
     )(spikes, *ws, params)
-    rasters = list(outs[:n_spiking]) if emit_rasters else []
-    v_finals = list(outs[n_spiking:] if emit_rasters else outs)
-    return rasters, v_finals
+    outs = list(outs)
+    skips = outs.pop()[:, :len(ws)] if sparse else None
+    rasters = outs[:n_spiking] if emit_rasters else []
+    v_finals = outs[n_spiking:] if emit_rasters else outs
+    return rasters, v_finals, skips

@@ -6,6 +6,13 @@ lanes are harmless because the next layer's padded weight ROWS are zero, so
 junk spikes fired by padded lanes (their V integrates only leak) contribute
 exactly nothing downstream; rasters and V are sliced back to logical widths
 before returning.
+
+``use_sparse`` selects the event-gated execution path (see kernel.py): the
+AccW2V matmul of a layer is skipped whenever its input tile is all-silent,
+while the neuron update still runs every timestep — bit-identical to the
+dense path by construction. Both the Pallas kernel and the pure-jnp
+reference implement the gate (`@pl.when` / `lax.cond`), and both report
+skipped-matmul counts for the accounting layer.
 """
 from __future__ import annotations
 
@@ -28,68 +35,123 @@ def _pad_axis(x: jax.Array, axis: int, mult: int) -> jax.Array:
     return jnp.pad(x, widths)
 
 
+def _check_stack(spikes: jax.Array, ws: list) -> None:
+    """Chain-alignment on LOGICAL widths (padded widths can coincide for
+    mismatched stacks): layer i's fan-in == layer i-1's fan-out. Raises
+    (rather than asserts) so the contract survives ``python -O``."""
+    if not ws:
+        raise ValueError("fused_snn_net needs a non-empty weight stack "
+                         "(spiking FCs first, readout last); got ws=[]")
+    prev = spikes.shape[2]
+    for i, w in enumerate(ws):
+        if w.ndim != 2:
+            raise ValueError(f"ws[{i}] must be a 2-D (n_in, n_out) weight "
+                             f"matrix, got shape {w.shape}")
+        if w.shape[0] != prev:
+            raise ValueError(
+                f"layer chain misaligned: ws[{i}] has fan-in {w.shape[0]} "
+                f"but the previous layer emits {prev} lanes")
+        prev = w.shape[1]
+
+
 @partial(jax.jit, static_argnames=("thresholds", "leaks", "neuron",
                                    "clamp_mode", "block_b", "use_pallas",
-                                   "interpret", "emit_rasters"))
+                                   "interpret", "emit_rasters", "use_sparse"))
 def fused_snn_net(spikes: jax.Array, ws: list, *, thresholds: tuple,
                   leaks: tuple, neuron: str = "rmp",
                   clamp_mode: str = "saturate", block_b: int = 8,
                   use_pallas: bool = True, interpret: bool = False,
-                  emit_rasters: bool = True):
+                  emit_rasters: bool = True, use_sparse: bool = False):
     """Run a (T, B, N0) encoder spike raster through the whole fc stack.
 
     ``ws``: per-layer int8 weights, spiking FCs first, readout last;
     ``thresholds``/``leaks``: per-spiking-layer ints on each layer's grid.
-    Returns (rasters, v_finals): per-spiking-layer output rasters
-    (T, B, N_i) int8 (empty list when emit_rasters=False) and per-layer
-    final V (B, N_i) int32, readout last.
+    Returns (rasters, v_finals, skips): per-spiking-layer output rasters
+    (T, B, N_i) int8 (empty list when emit_rasters=False), per-layer
+    final V (B, N_i) int32 (readout last), and — in ``use_sparse`` mode —
+    skipped-matmul counts, (B_tiles, n_layers) int32 for the Pallas kernel
+    (one row per batch tile) or (1, n_layers) for the reference (whose
+    gate granularity is the whole batch); ``skips`` is None when dense.
 
     ``use_pallas=False`` selects a pure-jnp reference with identical
     semantics (scan of isa.layer_timestep_int over the stack).
     """
     thresholds, leaks = tuple(thresholds), tuple(leaks)
+    _check_stack(spikes, ws)
     if not use_pallas:
         return _fused_snn_net_ref(spikes, ws, thresholds, leaks, neuron,
-                                  clamp_mode, emit_rasters)
+                                  clamp_mode, emit_rasters, use_sparse)
     T, B, N0 = spikes.shape
-    # chain alignment on LOGICAL widths (padded widths can coincide for
-    # mismatched stacks): layer i's fan-in == layer i-1's fan-out
-    prev = N0
-    for w in ws:
-        assert w.shape[0] == prev, (w.shape, prev)
-        prev = w.shape[1]
     s = _pad_axis(_pad_axis(spikes.astype(jnp.int8), 2, LANE), 1, block_b)
     ws_p = [_pad_axis(_pad_axis(w.astype(jnp.int8), 0, LANE), 1, LANE)
             for w in ws]
     params = jnp.asarray([[t, l] for t, l in zip(thresholds, leaks)],
                          jnp.int32).reshape(len(thresholds), 2)
-    rasters, v_finals = fused_snn_net_pallas(
+    rasters, v_finals, skips = fused_snn_net_pallas(
         s, ws_p, params, neuron=neuron, clamp_mode=clamp_mode,
-        block_b=block_b, emit_rasters=emit_rasters, interpret=interpret)
+        block_b=block_b, emit_rasters=emit_rasters, interpret=interpret,
+        sparse=use_sparse,
+        logical_widths=(N0,) + tuple(w.shape[1] for w in ws),
+        batch_logical=B)
     rasters = [r[:, :B, :w.shape[1]] for r, w in zip(rasters, ws[:-1])]
     v_finals = [v[:B, :w.shape[1]] for v, w in zip(v_finals, ws)]
-    return rasters, v_finals
+    return rasters, v_finals, skips
 
 
 def _fused_snn_net_ref(spikes, ws, thresholds, leaks, neuron, clamp_mode,
-                       emit_rasters):
-    """Pure-jnp oracle: the word-level ISA scanned over the network."""
-    from repro.core.isa import layer_timestep_int
+                       emit_rasters, use_sparse=False):
+    """Pure-jnp oracle: the word-level ISA scanned over the network. In
+    ``use_sparse`` mode the AccW2V matmul of each layer is wrapped in a
+    `lax.cond` on whole-batch occupancy (the reference's tile = the whole
+    batch) and per-layer skipped-step counts ride along."""
+    from repro.core.isa import layer_timestep_int, neuron_dynamics_int
+    from repro.core.quant import clamp_v
     B = spikes.shape[1]
+    n_w = len(ws)
+
+    def gated_acc(v, w, cur):
+        occupied = jnp.sum(cur) > 0
+        v = jax.lax.cond(
+            occupied,
+            lambda v: clamp_v(v + cur @ w.astype(jnp.int32), clamp_mode),
+            lambda v: v, v)
+        return v, jnp.logical_not(occupied).astype(jnp.int32)
 
     def step(carry, s_t):
-        vs = list(carry)
+        vs, skips = list(carry[0]), carry[1]
         cur = s_t.astype(jnp.int32)
         rasters = []
+        skipped = []
         for i, w in enumerate(ws[:-1]):
-            vs[i], cur = layer_timestep_int(
-                vs[i], w, cur, neuron=neuron,
-                threshold=jnp.int32(thresholds[i]), leak=jnp.int32(leaks[i]),
-                reset=jnp.int32(0), clamp_mode=clamp_mode)
+            if use_sparse:
+                v, sk = gated_acc(vs[i], w, cur)
+                skipped.append(sk)
+                vs[i], cur = neuron_dynamics_int(
+                    v, neuron=neuron, threshold=jnp.int32(thresholds[i]),
+                    leak=jnp.int32(leaks[i]), reset=jnp.int32(0),
+                    clamp_mode=clamp_mode)
+            else:
+                vs[i], cur = layer_timestep_int(
+                    vs[i], w, cur, neuron=neuron,
+                    threshold=jnp.int32(thresholds[i]),
+                    leak=jnp.int32(leaks[i]),
+                    reset=jnp.int32(0), clamp_mode=clamp_mode)
             rasters.append(cur.astype(jnp.int8))
-        vs[-1] = vs[-1] + cur @ ws[-1].astype(jnp.int32)
-        return tuple(vs), tuple(rasters)
+        if use_sparse:
+            occupied = jnp.sum(cur) > 0
+            vs[-1] = jax.lax.cond(
+                occupied,
+                lambda v: v + cur @ ws[-1].astype(jnp.int32),
+                lambda v: v, vs[-1])
+            skipped.append(jnp.logical_not(occupied).astype(jnp.int32))
+            skips = skips + jnp.stack(skipped)
+        else:
+            vs[-1] = vs[-1] + cur @ ws[-1].astype(jnp.int32)
+        return (tuple(vs), skips), tuple(rasters)
 
     vs0 = tuple(jnp.zeros((B, w.shape[1]), jnp.int32) for w in ws)
-    vs, rasters = jax.lax.scan(step, vs0, spikes.astype(jnp.int8))
-    return (list(rasters) if emit_rasters else []), list(vs)
+    skips0 = jnp.zeros((n_w,), jnp.int32)
+    (vs, skips), rasters = jax.lax.scan(step, (vs0, skips0),
+                                        spikes.astype(jnp.int8))
+    return ((list(rasters) if emit_rasters else []), list(vs),
+            skips[None] if use_sparse else None)

@@ -53,6 +53,18 @@ class ServeEngine:
         self.finished: list[Request] = []
         self.cache = lm.init_cache(cfg, batch_slots, max_len)
         self.last_tokens = jnp.zeros((batch_slots, 1), jnp.int32)
+        # Per-leaf batch axis of the cache tree, determined structurally: the
+        # unique axis whose extent follows the batch argument. Probing with
+        # batch_slots + 1 makes the comparison unambiguous even when
+        # batch_slots coincides with another dimension (batch_slots == 1
+        # would make a shape-based guess ambiguous on every size-1 axis).
+        probe = jax.eval_shape(lambda: lm.init_cache(cfg, batch_slots + 1,
+                                                     max_len))
+        self._batch_axes = jax.tree_util.tree_map(
+            lambda full, grown: next(
+                (ax for ax in range(full.ndim)
+                 if full.shape[ax] != grown.shape[ax]), None),
+            self.cache, probe)
 
         self._decode = jax.jit(
             lambda p, t, c: lm.decode_step(p, t, c, cfg, self.parallel))
@@ -71,29 +83,40 @@ class ServeEngine:
 
     def _admit(self) -> None:
         for i, slot in enumerate(self.slots):
-            if slot.req is not None or self.queue.empty():
+            if slot.req is not None:
                 continue
-            req = self.queue.get()
-            plen = len(req.prompt)
-            logits, cache1 = self._prefill_fn(plen)(
-                self.params, {"tokens": jnp.asarray(req.prompt[None], jnp.int32)})
-            # copy the single-lane cache into slot lane i
-            def put(lane, full):
-                if lane.ndim == 0 or full.ndim == 0:
-                    return full
-                # batch dim position differs per leaf: blocks have leading L
-                for ax in range(full.ndim):
-                    if full.shape[ax] == self.B and lane.shape[ax] == 1:
-                        idx = [slice(None)] * full.ndim
-                        idx[ax] = slice(i, i + 1)
-                        return full.at[tuple(idx)].set(lane.astype(full.dtype))
-                return full
-            self.cache = jax.tree_util.tree_map(put, cache1, self.cache)
-            tok = int(jnp.argmax(logits[0]))
-            req.out_tokens.append(tok)
-            self.last_tokens = self.last_tokens.at[i, 0].set(tok)
-            slot.req = req
-            slot.remaining = req.max_new_tokens - 1
+            # a request can finish at prefill (max_new_tokens=1, or the
+            # prefill token is eos); keep draining the queue until one
+            # actually needs decode ticks, so the slot never runs a
+            # spurious tick for an already-complete request
+            while not self.queue.empty():
+                req = self.queue.get()
+                if req.max_new_tokens <= 0:      # nothing to generate
+                    self.finished.append(req)
+                    continue
+                plen = len(req.prompt)
+                logits, cache1 = self._prefill_fn(plen)(
+                    self.params,
+                    {"tokens": jnp.asarray(req.prompt[None], jnp.int32)})
+                tok = int(jnp.argmax(logits[0]))
+                req.out_tokens.append(tok)
+                if req.max_new_tokens <= 1 or tok == req.eos_id:
+                    self.finished.append(req)
+                    continue
+                # copy the single-lane cache into slot lane i, along each
+                # leaf's structurally-determined batch axis
+                def put(lane, full, ax):
+                    if ax is None:
+                        return full
+                    idx = [slice(None)] * full.ndim
+                    idx[ax] = slice(i, i + 1)
+                    return full.at[tuple(idx)].set(lane.astype(full.dtype))
+                self.cache = jax.tree_util.tree_map(
+                    put, cache1, self.cache, self._batch_axes)
+                self.last_tokens = self.last_tokens.at[i, 0].set(tok)
+                slot.req = req
+                slot.remaining = req.max_new_tokens - 1
+                break
 
     # -- decode tick ----------------------------------------------------------
     def step(self) -> int:

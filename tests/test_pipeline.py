@@ -54,6 +54,8 @@ def _run_all(cfg, params, x, clamp_mode):
         "int_ref": pipeline.run_network(program, xs, "int_ref"),
         "pallas": pipeline.run_network(program, xs, "pallas", interpret=True,
                                        block_b=4),
+        "pallas_sparse": pipeline.run_network(program, xs, "pallas_sparse",
+                                              interpret=True, block_b=4),
     }
     fan_in_ok = all(l.tiling.row_tiles == 1 for l in program.fc_stack[:-1])
     if clamp_mode == "wrap" and fan_in_ok and x.shape[0] <= 13:
@@ -86,8 +88,8 @@ def test_backend_equivalence(neuron, shape, clamp_mode):
         assert counts == counts_ref, (name, counts, counts_ref)
 
 
-def test_imdb_all_four_backends_bit_identical():
-    """The acceptance contract on the paper's own network: all four backends,
+def test_imdb_all_backends_bit_identical():
+    """The acceptance contract on the paper's own network: all backends,
     one program, identical rasters / V / InstrCounts (wrap = raw silicon)."""
     cfg = dataclasses.replace(IMDB, timesteps=3,
                               spiking=dataclasses.replace(IMDB.spiking,
@@ -96,7 +98,8 @@ def test_imdb_all_four_backends_bit_identical():
     rng = np.random.default_rng(3)
     x = jnp.asarray(rng.standard_normal((2, 3, 100)).astype(np.float32))
     program, results = _run_all(cfg, params, x, "wrap")
-    assert set(results) == {"float", "int_ref", "pallas", "bitmacro"}
+    assert set(results) == {"float", "int_ref", "pallas", "pallas_sparse",
+                            "bitmacro"}
     ref = results["int_ref"]
     counts = {n: pipeline.count_network_instructions(program, r.rasters)
               for n, r in results.items()}
@@ -143,6 +146,97 @@ def test_serving_mode_skips_rasters():
     assert serve.rasters is None
     np.testing.assert_array_equal(np.asarray(serve.v_out),
                                   np.asarray(full.v_out))
+
+
+@pytest.mark.parametrize("neuron", ["if", "lif", "rmp"])
+def test_instruction_counts_match_bitmacro_counts(neuron):
+    """Cross-check the two instruction-counting paths on wrap-mode programs:
+    the program-level raster pass (count_network_instructions) vs the
+    cycle-by-cycle tally the bit-level macro model keeps while executing
+    (aux['macro_counts']). The bitmacro executes only the spiking layers
+    (the readout accumulate is word-level), so the raster pass restricted
+    to spiking layers must equal the silicon tally exactly."""
+    from repro.core import isa
+    cfg, params, x = _make((100, 128, 128, 1), neuron, 2, 3, seed=11)
+    program = pipeline.compile_network(cfg, params, domain="int",
+                                       clamp_mode="wrap")
+    xs = pipeline.present_words(x, cfg.timesteps)
+    res = pipeline.run_network(program, xs, "bitmacro")
+    spiking = [l for l in program.fc_stack if l.kind == "fc"]
+    counts = isa.InstrCount()
+    for spec, raster in zip(spiking, res.rasters):
+        counts += isa.count_layer_instructions(
+            np.asarray(raster), spec.n_in, spec.n_out, program.neuron)
+    assert counts == res.aux["macro_counts"], (counts,
+                                               res.aux["macro_counts"])
+    # and the network-level pass = spiking tally + the readout layer
+    total = pipeline.count_network_instructions(program, res.rasters)
+    readout = program.fc_stack[-1]
+    counts += isa.count_layer_instructions(
+        np.asarray(res.rasters[-1]), readout.n_in, readout.n_out, "none")
+    assert total == counts
+
+
+def test_sparsity_report_counting_paths_agree():
+    """Raster counting == report counting == collect_sums counting; the
+    report's occupancy stats reconstruct the raster's."""
+    cfg, params, x = _make((37, 50, 20, 3), "rmp", 3, 2, seed=5)
+    program = pipeline.compile_network(cfg, params, domain="int")
+    xs = pipeline.present_words(x, cfg.timesteps)
+    res = pipeline.run_network(program, xs, "int_ref")
+    rep = pipeline.sparsity_report(program, res.rasters)
+    c_raster = pipeline.count_network_instructions(program, res.rasters)
+    assert pipeline.count_network_instructions(program, report=rep) == c_raster
+    # raster-free path: float backend spike-count sums
+    resf = pipeline.run_network(program, xs, "float", collect_sums=True)
+    rep_sums = pipeline.sparsity_report_from_sums(
+        program, resf.aux["spike_sums"], xs.shape[0])
+    assert rep_sums.events == rep.events
+    assert rep_sums.occupancy_t is None
+    assert pipeline.count_network_instructions(program,
+                                               report=rep_sums) == c_raster
+    # occupancy stats reconstruct the rasters'
+    T, B = xs.shape[:2]
+    assert rep.frames == T * B and rep.timesteps == T and rep.batch == B
+    for r, occ, s, n in zip(res.rasters, rep.occupancy_t,
+                            rep.layer_sparsity, rep.n_in):
+        r = np.asarray(r)
+        np.testing.assert_allclose(occ, r.mean(axis=(1, 2)))
+        assert s == pytest.approx(1.0 - r.mean())
+    assert 0.0 <= rep.overall_sparsity <= 1.0
+    assert rep.macro_timesteps > 0
+
+
+@pytest.mark.parametrize("sparsity", [0.0, 0.5, 0.85])
+def test_measured_edp_matches_analytic_on_single_macro(sparsity):
+    """The measured-EDP normalization closes the loop with the analytic
+    Fig. 11b model: a single full macro (128 -> 12 rmp layer) at exactly
+    (1-s)*128 events per frame must land on the analytic curve point."""
+    from repro.core import energy
+    T, B = 10, 4
+    events_per_frame = round((1.0 - sparsity) * 128)
+    rep = pipeline.SparsityReport(
+        n_in=(128,), n_out=(12,), neurons=("rmp",),
+        events=(events_per_frame * T * B,), frames=T * B,
+        timesteps=T, batch=B)
+    medp = energy.measured_edp_per_neuron_timestep(
+        rep.instruction_counts(), rep.macro_timesteps)
+    analytic = energy.edp_per_neuron_per_timestep(sparsity, "rmp")
+    assert medp == pytest.approx(analytic, rel=1e-9)
+    assert energy.measured_edp(rep.instruction_counts()) > 0
+    with pytest.raises(ValueError):
+        energy.measured_edp_per_neuron_timestep(rep.instruction_counts(), 0)
+
+
+def test_sparsity_report_error_paths():
+    cfg, params, _ = _make((37, 50, 20, 3), "rmp", 2, 2)
+    program = pipeline.compile_network(cfg, params, domain="int")
+    with pytest.raises(ValueError):
+        pipeline.sparsity_report(program, None)
+    with pytest.raises(ValueError):
+        pipeline.count_network_instructions(program)
+    with pytest.raises(ValueError):
+        pipeline.sparsity_report_from_sums(program, [np.zeros((2, 50))], 3)
 
 
 def test_rate_coded_program_matches_manual_loop():

@@ -236,3 +236,58 @@ def test_serve_engine_matches_manual_decode():
             params, jnp.asarray([[toks[-1]]], jnp.int32), cache, cfg, par)
         toks.append(int(jnp.argmax(logits[0])))
     assert done[0].out_tokens == toks
+
+
+def test_serve_engine_max_new_tokens_one():
+    """Regression: max_new_tokens=1 must emit exactly one token (the prefill
+    token), not run a spurious decode tick — the request finalizes at admit."""
+    cfg = reduced_config(get_config("llama3.2-1b"))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(params, cfg, batch_slots=2, max_len=32)
+    rng = np.random.default_rng(1)
+    for rid, n in enumerate([1, 1, 3, 0]):       # finalize-at-admit + normal mix
+        eng.submit(Request(rid=rid, prompt=rng.integers(0, 64, 5),
+                           max_new_tokens=n))
+    done = eng.run_until_drained()
+    assert sorted(len(r.out_tokens) for r in done) == [0, 1, 1, 3]
+    assert all(len(r.out_tokens) == r.max_new_tokens for r in done)
+
+
+def test_serve_engine_eos_at_prefill():
+    """Regression: a request whose prefill token already is eos must stop
+    there instead of decoding past eos."""
+    cfg = reduced_config(get_config("llama3.2-1b"))
+    params = lm.init_params(jax.random.PRNGKey(1), cfg, dtype=jnp.float32)
+    prompt = np.asarray([5, 9, 2, 7], np.int64)
+    par = ParallelConfig(remat="none")
+    logits, _ = lm.prefill(params, {"tokens": jnp.asarray(prompt[None])},
+                           cfg, 32, par)
+    eos = int(jnp.argmax(logits[0]))             # force eos at prefill
+    eng = ServeEngine(params, cfg, batch_slots=2, max_len=32)
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=8, eos_id=eos))
+    done = eng.run_until_drained()
+    assert done[0].out_tokens == [eos]
+
+
+def test_serve_engine_single_slot_lane_scatter():
+    """Regression: with batch_slots=1 the prefill cache-lane scatter must
+    resolve the batch axis structurally (every size-1 axis 'matches' a
+    shape-based guess); the single-slot engine must equal manual decode."""
+    cfg = reduced_config(get_config("llama3.2-1b"))
+    params = lm.init_params(jax.random.PRNGKey(1), cfg, dtype=jnp.float32)
+    prompt = np.asarray([3, 1, 4, 1], np.int64)
+    eng = ServeEngine(params, cfg, batch_slots=1, max_len=32)
+    for rid in range(2):                         # sequential through one slot
+        eng.submit(Request(rid=rid, prompt=prompt, max_new_tokens=3))
+    done = eng.run_until_drained()
+    par = ParallelConfig(remat="none")
+    logits, cache = lm.prefill(params, {"tokens": jnp.asarray(prompt[None])},
+                               cfg, 32, par)
+    toks = [int(jnp.argmax(logits[0]))]
+    for _ in range(2):
+        logits, cache = lm.decode_step(
+            params, jnp.asarray([[toks[-1]]], jnp.int32), cache, cfg, par)
+        toks.append(int(jnp.argmax(logits[0])))
+    assert len(done) == 2
+    for r in done:
+        assert r.out_tokens == toks
