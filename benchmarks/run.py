@@ -39,7 +39,7 @@ def main(argv=None) -> None:
     t0 = time.time()
     if args.quick:
         mods = [("fig6", fig6_neuron_energy), ("table1", table1_comparison),
-                ("gating", sparsity_gating)]
+                ("fig9_eff", fig9_efficiency), ("gating", sparsity_gating)]
     else:
         mods = [("fig6", fig6_neuron_energy), ("fig9_eff", fig9_efficiency),
                 ("fig9_acc", fig9_accuracy), ("fig11", fig11_sparsity_edp),

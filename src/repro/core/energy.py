@@ -127,7 +127,9 @@ def measured_edp_per_neuron_timestep(counts: InstrCount, macro_timesteps: int,
                                      point: OperatingPoint = POINT_D) -> float:
     """Normalize a measured tally to the Fig. 11b axis: average instruction
     cycles per macro-timestep (``macro_timesteps`` =
-    `SparsityReport.macro_timesteps`), then EDP per neuron — directly
+    `SparsityReport.macro_timesteps`; conv layers contribute one macro-
+    timestep per (timestep, example, output position) frame — the im2col
+    lowering re-uses the grid per position), then EDP per neuron — directly
     comparable to `edp_per_neuron_per_timestep(s)` at the measured
     sparsity. Fractional average counts are fine: the energy/delay sums are
     linear in the per-instruction counts."""
@@ -150,3 +152,14 @@ def gops_per_mm2(point: OperatingPoint) -> float:
 def snn_energy_j(counts: InstrCount, point: OperatingPoint = POINT_D) -> float:
     """Total energy for an instruction-count tally of a full SNN inference."""
     return sequence_energy_j(counts, point)
+
+
+def energy_per_inference_j(counts: InstrCount, batch: int,
+                           point: OperatingPoint = POINT_D) -> float:
+    """Per-example energy of an executed workload tally (counts measured
+    over ``batch`` examples by `pipeline.count_network_instructions` — for
+    conv programs these come from execution of the im2col-lowered program,
+    not the analytic pass alone)."""
+    if batch <= 0:
+        raise ValueError("batch must be positive")
+    return sequence_energy_j(counts, point) / batch

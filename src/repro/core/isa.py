@@ -208,6 +208,28 @@ def layer_timestep_int(v: jax.Array, wq: jax.Array, in_spikes: jax.Array, *,
                                leak=leak, reset=reset, clamp_mode=clamp_mode)
 
 
+def conv_layer_timestep_int(v: jax.Array, wq: jax.Array, in_spikes: jax.Array,
+                            *, stride: int, neuron: str, threshold: jax.Array,
+                            leak: jax.Array, reset: jax.Array,
+                            clamp_mode: str = "saturate"
+                            ) -> tuple[jax.Array, jax.Array]:
+    """Batched integer conv timestep — the word-level semantics of one conv
+    layer on the macro grid. v (B, H_out, W_out, c_out) int32; wq the HWIO
+    int8 kernel (k, k, c_in, c_out); in_spikes (B, H, W, c_in) {0,1}.
+
+    Lowered via im2col over the 128-row fan-in rule (mapping.im2col): every
+    output position is an independent frame whose k*k*c_in patch vector
+    drives `layer_timestep_int` on the packed (k*k*c_in, c_out) weight block
+    — each position re-uses the same macro grid (mapping.conv_tiling), with
+    its own V_MEM neuron set. Returns (v', out_spikes), both
+    (B, H_out, W_out, c_out)."""
+    from repro.core import mapping
+    patches = mapping.im2col(in_spikes, wq.shape[0], stride)
+    return layer_timestep_int(v, mapping.pack_conv_weights(wq), patches,
+                              neuron=neuron, threshold=threshold, leak=leak,
+                              reset=reset, clamp_mode=clamp_mode)
+
+
 def count_layer_instructions_from_events(total_events: int, batch_t: int,
                                          n_in: int, n_out: int, neuron: str
                                          ) -> InstrCount:

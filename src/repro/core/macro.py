@@ -177,9 +177,15 @@ class BitMacro:
     def _vv_operand(self, name_or_set, set_idx: int, j: int) -> np.ndarray:
         if isinstance(name_or_set, str):
             return self.const[name_or_set][j % 2, j // 2]
+        if isinstance(name_or_set, np.ndarray):   # another macro's V rows
+            return name_or_set[j % 2, j // 2]
         return self.vbits[name_or_set, j % 2, j // 2]
 
     def acc_v2v(self, set_idx: int, src, cycle: int, conditional: bool = False) -> None:
+        """V[set, parity] += src[parity]. ``src`` is a const-row name, a
+        local set index, or a (2, 6, 12) bit array exported by another
+        macro's `transfer_v` — the word-level AccV2V partial-sum reduction
+        of the distributed multi-macro architecture (mapping.py)."""
         for j in range(cycle, MACRO_OUT, 2):
             if conditional and not self.spike_buf[set_idx, j]:
                 continue                         # CWD leaves bitlines precharged
@@ -188,6 +194,19 @@ class BitMacro:
             s, _, _ = blfa_unit_add(a, b, guard_mode="CF")
             self.vbits[set_idx, j % 2, j // 2] = s
         self.counts += InstrCount(acc_v2v=1)
+
+    def transfer_v(self, set_idx: int) -> np.ndarray:
+        """Export one neuron set's V rows for a cross-macro AccV2V and clear
+        them to zero — the fan-in-split macro handing its partial sum to the
+        reduction target. The executed cycles are counted on the *receiving*
+        macro's `acc_v2v` (one macro-to-macro AccV2V instruction drives both
+        arrays in the same cycle: this macro reads its bitlines while the
+        target's BLFA adds; the CWD rewrites the reset pattern on the way
+        out), matching the analytic reduction term of
+        `isa.count_layer_instructions_from_events` exactly."""
+        bits = self.vbits[set_idx].copy()
+        self.vbits[set_idx] = 0                    # encode_v(0) is all-zero
+        return bits
 
     def spike_check(self, set_idx: int, cycle: int) -> None:
         """Adder-as-comparator against the (negated) threshold row; latches

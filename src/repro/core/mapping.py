@@ -4,7 +4,11 @@ A single macro serves fan-in <= 128 and 12 output neurons. Larger layers tile
 onto a (row_tiles x col_tiles) macro grid; partial sums along the fan-in split
 are reduced with AccV2V instructions (the paper's "distributed multi-macro
 architecture"). Conv layers map via im2col with the paper's fan-in rule
-(k*k*c_in <= 128 per macro row block, e.g. 3*3*14 = 126).
+(k*k*c_in <= 128 per macro row block, e.g. 3*3*14 = 126): `im2col` extracts
+the (kh, kw, c_in)-ordered patch vector of every output position, so one conv
+layer becomes an FC layer of fan-in k*k*c_in over B*H_out*W_out frames, each
+frame claiming one neuron set of the macro grid (`pack_conv_weights` flattens
+the HWIO kernel onto the matching W_MEM rows).
 
 The same tile constants seed the Pallas BlockSpecs (kernels/fused_snn_step):
 the TPU analogue pads 128x12 to the MXU-aligned 128x128 lane tile.
@@ -14,6 +18,7 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.isa import MACRO_IN, MACRO_OUT
@@ -70,6 +75,60 @@ def tile_weights(w: np.ndarray) -> np.ndarray:
 def untile_outputs(v: np.ndarray, n_out: int) -> np.ndarray:
     """(col_tiles, 12) -> (n_out,) dropping padding."""
     return v.reshape(-1)[:n_out]
+
+
+# ---------------------------------------------------------------------------
+# Conv -> macro-grid lowering (im2col over the 128-row fan-in rule)
+# ---------------------------------------------------------------------------
+
+def same_pads(size: int, kernel: int, stride: int) -> tuple[int, int, int]:
+    """XLA "SAME" geometry along one spatial axis: (out_size, pad_lo, pad_hi)."""
+    out = -(-size // stride)                       # ceil(size / stride)
+    total = max((out - 1) * stride + kernel - size, 0)
+    lo = total // 2
+    return out, lo, total - lo
+
+
+def conv_out_hw(in_hw: tuple[int, int], kernel: int, stride: int) -> tuple[int, int]:
+    """Output (H, W) of a SAME-padded conv."""
+    return (same_pads(in_hw[0], kernel, stride)[0],
+            same_pads(in_hw[1], kernel, stride)[0])
+
+
+def im2col(x, kernel: int, stride: int):
+    """(B, H, W, C) -> (B, H_out, W_out, k*k*C) SAME-padded patch extraction.
+
+    Patch features are ordered (kh, kw, c) — exactly the row order
+    `pack_conv_weights` flattens the HWIO kernel with — so
+    ``im2col(x) @ pack_conv_weights(w) == conv2d(x, w)`` bit-for-bit in
+    integer arithmetic (zero padding contributes zero rows). Traceable
+    (pure jnp slicing with static shapes), exact for int-valued inputs.
+    """
+    x = jnp.asarray(x)
+    _, h, w, _ = x.shape
+    h_out, lo_h, hi_h = same_pads(h, kernel, stride)
+    w_out, lo_w, hi_w = same_pads(w, kernel, stride)
+    xp = jnp.pad(x, ((0, 0), (lo_h, hi_h), (lo_w, hi_w), (0, 0)))
+    cols = [xp[:, di:di + (h_out - 1) * stride + 1:stride,
+               dj:dj + (w_out - 1) * stride + 1:stride, :]
+            for di in range(kernel) for dj in range(kernel)]
+    return jnp.concatenate(cols, axis=-1)
+
+
+def pack_conv_weights(w):
+    """HWIO conv kernel (k, k, c_in, c_out) -> W_MEM layout (k*k*c_in, c_out):
+    one macro row per patch feature, in `im2col` feature order."""
+    return jnp.asarray(w).reshape(-1, w.shape[-1])
+
+
+def im2col_raster(raster, kernel: int, stride: int):
+    """Temporal form: (T, B, H, W, C) spike maps -> (T, B*P, k*k*C) patch
+    raster, P = H_out*W_out — the conv layer's input raster in the shape the
+    FC executors consume (one frame per (example, output position))."""
+    t, b = raster.shape[:2]
+    patches = im2col(jnp.reshape(raster, (t * b, *raster.shape[2:])),
+                     kernel, stride)
+    return jnp.reshape(patches, (t, -1, patches.shape[-1]))
 
 
 # TPU-side tile constants: the macro's 128-row fan-in aligns exactly with the

@@ -5,9 +5,10 @@ the membrane state never crosses a memory boundary. Before this module, that
 fusion was only realized per layer, and the network loop around it was
 re-implemented four times (float training, integer ISA, per-layer Pallas,
 bit-level macro). `compile_network` lifts the network itself into a first-
-class object — an `SNNProgram` describing the full stack (encoder -> spiking
-FCs -> accumulate readout, thresholds/leaks/scales, multi-macro tiling) —
-executed by a registry of backends that are tested to agree bit-for-bit:
+class object — an `SNNProgram` describing the full stack (encoder -> on-
+macro convs (im2col-lowered, mapping.py) -> spiking FCs -> accumulate
+readout, thresholds/leaks/scales, multi-macro tiling) — executed by a
+registry of backends that are tested to agree bit-for-bit:
 
   float    — QAT training semantics (surrogate gradients, fake-quant
              weights). For integer-domain programs it executes the *same*
@@ -19,8 +20,11 @@ executed by a registry of backends that are tested to agree bit-for-bit:
              every layer's V tile lives in VMEM scratch across the entire
              timestep loop and inter-layer spikes never touch HBM — the
              network-scale analogue of the macro's fused array.
-  bitmacro — the bit-accurate column/bitline model (silicon oracle; small
-             shapes, wrap arithmetic only, as on silicon).
+  bitmacro — the bit-accurate column/bitline model (silicon oracle; wrap
+             arithmetic only, as on silicon; fan-in > 128 layers split over
+             row-tiled macros whose partial sums reduce with word-level
+             AccV2V cycles, conv layers lower via im2col, and frames beyond
+             13 neuron sets claim extra macro banks).
 
 Instruction counting is a *program-level pass* (`count_network_instructions`)
 over the spike rasters, so every backend reports identical energy-model
@@ -50,7 +54,10 @@ from repro.core.quant import (clamp_v, fake_quant_w, quantize_const,
 
 # Layer kinds:
 #   encoder — off-macro neuron layer over raw input current (identity weight)
-#   conv    — conv transform + neuron dynamics (float backend only)
+#   conv    — conv transform + neuron dynamics. The FIRST conv of a stack is
+#             the off-macro spike encoder (float weights, like the paper's
+#             input layer); later convs are on-macro in the int domain
+#             (scale set, int8 HWIO kernel, im2col-lowered — mapping.py)
 #   fc      — spiking FC layer (on-macro)
 #   readout — accumulate-only FC (prediction = final V_MEM)
 LAYER_KINDS = ("encoder", "conv", "fc", "readout")
@@ -86,8 +93,23 @@ class SNNProgram:
 
     @property
     def fc_stack(self) -> tuple:
-        """The on-macro part: spiking FCs + readout."""
+        """The FC part of the on-macro stack: spiking FCs + readout."""
         return tuple(l for l in self.layers if l.kind in ("fc", "readout"))
+
+    @property
+    def int_conv_stack(self) -> tuple:
+        """On-macro conv layers (int domain only: quantized, scale set).
+        The first conv of a stack is the off-macro encoder and never
+        appears here."""
+        return tuple(l for l in self.layers
+                     if l.kind == "conv" and l.scale is not None)
+
+    @property
+    def macro_stack(self) -> tuple:
+        """Everything that executes on macros: on-macro convs (im2col-
+        lowered), spiking FCs, readout — the layers instruction counting
+        and the integer backends iterate over."""
+        return self.int_conv_stack + self.fc_stack
 
     @property
     def neuron_layers(self) -> tuple:
@@ -104,8 +126,10 @@ class SNNProgram:
 @dataclass
 class NetResult:
     """What one backend run produces. ``rasters[i]`` is the *input* spike
-    raster of fc-stack layer i (so rasters[0] is the encoder output), each
-    (T_total, B, n); ``v_final`` lists final V per layer, readout last."""
+    raster of macro-stack layer i (so rasters[0] is the encoder output) —
+    (T_total, B, n) flat for FC layers, (T_total, B, H, W, C) spike maps
+    feeding conv layers; ``v_final`` lists final V per layer, readout
+    last."""
     v_out: jax.Array
     logits: jax.Array
     v_final: list
@@ -141,8 +165,10 @@ def compile_network(cfg: SNNModelConfig, params: dict, *, domain: str = "float",
     ``domain="float"`` keeps the trainable parameterization (softplus'd
     thresholds/leaks, fake-quant weights) — differentiable, used for QAT.
     ``domain="int"`` quantizes every on-macro layer onto its 6b/11b grid
-    (the deployed macro program); the encoder stays float (off-macro input
-    layer, as in the paper).
+    (the deployed macro program); the encoder — the first FC *or conv*
+    layer — stays float (off-macro input layer, as in the paper). On-macro
+    convs keep their HWIO int8 kernel plus the im2col fan-in geometry
+    (n_in = k*k*c_in — the 128-row rule, mapping.conv_tiling).
     """
     th = jax.nn.softplus(params["threshold"]) + 1e-3
     lk = jax.nn.softplus(params["leak"]) * 0.1
@@ -151,18 +177,25 @@ def compile_network(cfg: SNNModelConfig, params: dict, *, domain: str = "float",
 
     convs = params.get("convs", [])
     if convs:
-        if domain == "int":
-            raise NotImplementedError("conv stacks compile float-only (the "
-                                      "int conv mapping is a later PR)")
         shapes = _conv_state_shapes(cfg, convs)
         c_in = cfg.in_shape[-1]
         for i, (c, shape) in enumerate(zip(convs, shapes)):
             kh, kw = c["w"].shape[:2]
-            layers.append(LayerSpec(
-                kind="conv", n_in=kh * kw * c_in,
-                n_out=shape[-1], w=c["w"], threshold=th[k], leak=lk[k],
-                stride=cfg.conv_spec[i][2], quantize=(i > 0),
-                state_shape=shape))
+            if domain == "int" and i > 0:         # on-macro conv
+                wq, scale = quantize_w(c["w"])
+                layers.append(LayerSpec(
+                    kind="conv", n_in=kh * kw * c_in, n_out=shape[-1],
+                    w=wq,
+                    threshold=jnp.int32(quantize_const(float(th[k]), scale)),
+                    leak=jnp.int32(quantize_const(float(lk[k]), scale)),
+                    scale=float(scale), stride=cfg.conv_spec[i][2],
+                    quantize=False, state_shape=shape))
+            else:                                 # float / encoder conv
+                layers.append(LayerSpec(
+                    kind="conv", n_in=kh * kw * c_in,
+                    n_out=shape[-1], w=c["w"], threshold=th[k], leak=lk[k],
+                    stride=cfg.conv_spec[i][2], quantize=(i > 0),
+                    state_shape=shape))
             c_in = shape[-1]
             k += 1
     else:
@@ -293,8 +326,10 @@ def _float_step(program: SNNProgram, vs: list, xt: jax.Array
             current = cur @ _w_float(program, spec)
         else:                                     # encoder: identity weight
             current = cur
-        if int_dom and spec.kind == "fc":
-            # f32 rendering of isa.layer_timestep_int (bit-exact)
+        if int_dom and spec.scale is not None:    # on-macro (fc or conv)
+            # f32 rendering of isa.layer_timestep_int (bit-exact; for convs
+            # conv2d == the im2col matmul per position, exactly, in int
+            # arithmetic rendered in f32 — all values < 2^24)
             th = spec.threshold.astype(jnp.float32)
             v = clamp_v(vs[i] + current, program.clamp_mode)
             if neuron == "lif":
@@ -367,21 +402,38 @@ def run_float(program: SNNProgram, xs: jax.Array, *, return_trace: bool = False,
 # ---------------------------------------------------------------------------
 
 def encode(program: SNNProgram, xs: jax.Array) -> tuple[jax.Array, jax.Array]:
-    """Run the encoder layer alone: (T_total, B, d) currents ->
-    ((T_total, B, d) int8 spikes, final encoder V). Bitwise identical to the
-    float backend's encoder layer (same ops on the same values)."""
+    """Run the off-macro encoder layer alone: (T_total, B, ...) currents ->
+    ((T_total, B, ...) int8 spikes, final encoder V). Bitwise identical to
+    the float backend's encoder layer (same ops on the same values). For
+    conv stacks the encoder is the first conv (float weights, spike maps
+    out); for FC stacks it is the identity-weight input layer."""
     enc = program.layers[0]
-    if enc.kind != "encoder":
-        raise NotImplementedError(
-            f"integer backends need an encoder-led stack, got {enc.kind!r}")
+    if enc.kind == "encoder":
+        def step(v, xt):
+            st, s = neuron_step(NeuronState(v), xt, neuron=program.neuron,
+                                threshold=enc.threshold, leak=enc.leak)
+            return st.v, s.astype(jnp.int8)
 
-    def step(v, xt):
-        st, s = neuron_step(NeuronState(v), xt, neuron=program.neuron,
-                            threshold=enc.threshold, leak=enc.leak)
-        return st.v, s.astype(jnp.int8)
+        v_enc, spikes = jax.lax.scan(step, jnp.zeros(xs.shape[1:]), xs)
+        return spikes, v_enc
+    if enc.kind == "conv":
+        w = enc.w if not (program.quantize and enc.quantize) \
+            else fake_quant_w(enc.w)
 
-    v_enc, spikes = jax.lax.scan(step, jnp.zeros(xs.shape[1:]), xs)
-    return spikes, v_enc
+        def step(v, xt):
+            st, s = neuron_step(NeuronState(v), conv2d(xt, w, enc.stride),
+                                neuron=program.neuron, threshold=enc.threshold,
+                                leak=enc.leak)
+            return st.v, s.astype(jnp.int8)
+
+        v0 = jnp.zeros((xs.shape[1], *enc.state_shape))
+        v_enc, spikes = jax.lax.scan(step, v0, xs)
+        return spikes, v_enc
+    raise ValueError(
+        f"integer backends need an encoder- or conv-led stack, but this "
+        f"program's first layer is kind={enc.kind!r} "
+        f"({enc.n_in}x{enc.n_out}); FC programs start with an 'encoder' "
+        f"layer and conv programs with the conv spike encoder")
 
 
 def _assemble(program: SNNProgram, rasters: list, v_enc, v_stack: list
@@ -406,24 +458,99 @@ def _stack_kernel_args(program: SNNProgram) -> dict:
         neuron=program.neuron, clamp_mode=program.clamp_mode)
 
 
+def _run_fc_stack(program: SNNProgram, spikes: jax.Array, *, use_pallas: bool,
+                  use_sparse: bool, block_b: int, interpret: bool,
+                  emit_rasters: bool):
+    from repro.kernels.fused_snn_net.ops import fused_snn_net
+    kw = _stack_kernel_args(program)
+    return fused_snn_net(
+        spikes, kw.pop("ws"), use_pallas=use_pallas,
+        use_sparse=use_sparse, block_b=block_b, interpret=interpret,
+        emit_rasters=emit_rasters, **kw)
+
+
 def run_stack_from_raster(program: SNNProgram, spikes_enc: jax.Array, *,
                           use_pallas: bool = False, use_sparse: bool = False,
                           block_b: int = 8, interpret: bool = False,
                           emit_rasters: bool = True):
     """Execute only the on-macro fc stack on a supplied encoder spike raster
-    (T_total, B, d) int8 — the public raster-in entry point that the
-    int_ref/pallas backends and raster-driven benchmarks (synthetic
-    sparsity sweeps) share. Returns (rasters, v_stack, skips) with
+    (T_total, B, d) int8 — the public raster-in entry point that
+    raster-driven benchmarks (synthetic sparsity sweeps) share with the
+    int_ref/pallas backends. Returns (rasters, v_stack, skips) with
     ``rasters[0]`` the input raster itself, aligned with
-    `count_network_instructions` / `sparsity_report` expectations."""
-    from repro.kernels.fused_snn_net.ops import fused_snn_net
-    kw = _stack_kernel_args(program)
-    rasters, v_stack, skips = fused_snn_net(
-        spikes_enc, kw.pop("ws"), use_pallas=use_pallas,
-        use_sparse=use_sparse, block_b=block_b, interpret=interpret,
-        emit_rasters=emit_rasters, **kw)
+    `count_network_instructions` / `sparsity_report` expectations. Conv
+    programs carry an on-macro conv front-end and route through
+    `run_network` instead."""
+    if program.int_conv_stack:
+        raise ValueError("run_stack_from_raster executes the fc stack only; "
+                         "this program has on-macro conv layers — execute it "
+                         "through run_network (int_ref/pallas backends)")
+    rasters, v_stack, skips = _run_fc_stack(
+        program, spikes_enc, use_pallas=use_pallas, use_sparse=use_sparse,
+        block_b=block_b, interpret=interpret, emit_rasters=emit_rasters)
     full = [spikes_enc] + list(rasters) if emit_rasters else None
     return full, list(v_stack), skips
+
+
+def _conv_front_end(program: SNNProgram, spikes_enc: jax.Array, *,
+                    use_pallas: bool, use_sparse: bool, block_b: int,
+                    interpret: bool):
+    """Run the on-macro int conv layers on encoder spike maps. Each conv
+    layer lowers onto the macro grid via im2col (mapping.py): its
+    (T, B, H, W, C) input maps become a (T, B*P, k*k*C) patch raster —
+    one frame per (example, output position), each claiming a V_MEM neuron
+    set — executed by the same fused_snn_net machinery as the fc stack
+    (readout=False), so the Pallas kernel, the jnp reference, and event
+    gating all serve conv programs unchanged. Returns (maps, v_convs,
+    conv_skips): per-layer output spike maps (T, B, H_out, W_out, C_out)
+    int8, final V maps, and per-layer gate counts (None entries when
+    dense)."""
+    from repro.kernels.fused_snn_net.ops import fused_snn_net
+    maps, v_convs, conv_skips = [], [], []
+    cur = spikes_enc
+    for spec in program.int_conv_stack:
+        t_total, batch = cur.shape[:2]
+        patches = mapping.im2col_raster(cur, spec.w.shape[0], spec.stride)
+        out_hw = mapping.conv_out_hw(cur.shape[2:4], spec.w.shape[0],
+                                     spec.stride)
+        rasters, v, skips = fused_snn_net(
+            patches.astype(jnp.int8),
+            [jnp.asarray(mapping.pack_conv_weights(spec.w))],
+            thresholds=(int(spec.threshold),), leaks=(int(spec.leak),),
+            neuron=program.neuron, clamp_mode=program.clamp_mode,
+            readout=False, use_pallas=use_pallas, use_sparse=use_sparse,
+            block_b=block_b, interpret=interpret, emit_rasters=True)
+        cur = rasters[0].reshape(t_total, batch, *out_hw, spec.n_out)
+        maps.append(cur)
+        v_convs.append(v[0].reshape(batch, *out_hw, spec.n_out))
+        conv_skips.append(skips)
+    return maps, v_convs, conv_skips
+
+
+def _run_macro_stack(program: SNNProgram, xs: jax.Array, *, use_pallas: bool,
+                     use_sparse: bool, block_b: int = 8,
+                     interpret: bool = False, emit_rasters: bool = True
+                     ) -> NetResult:
+    """Shared int_ref/pallas executor: float encoder pass, then the on-macro
+    conv front-end (when present), then the fused fc stack."""
+    spikes_enc, v_enc = encode(program, xs)
+    conv_maps, v_convs, conv_skips = _conv_front_end(
+        program, spikes_enc, use_pallas=use_pallas, use_sparse=use_sparse,
+        block_b=block_b, interpret=interpret)
+    last = conv_maps[-1] if conv_maps else spikes_enc
+    flat = last.reshape(*last.shape[:2], -1) if last.ndim > 3 else last
+    rasters_fc, v_stack, skips = _run_fc_stack(
+        program, flat, use_pallas=use_pallas, use_sparse=use_sparse,
+        block_b=block_b, interpret=interpret, emit_rasters=emit_rasters)
+    # rasters[i] = the input raster of macro-stack layer i: spike maps for
+    # the conv part (the last conv's map doubles, flattened, as fc input)
+    full = ([spikes_enc] + conv_maps + list(rasters_fc)
+            if emit_rasters else None)
+    res = _assemble(program, full, v_enc, list(v_convs) + list(v_stack))
+    res = _attach_skips(res, skips, xs.shape[0])
+    if use_sparse and conv_skips:
+        res.aux["conv_skip_counts"] = [np.asarray(s) for s in conv_skips]
+    return res
 
 
 def _attach_skips(res: NetResult, skips, timesteps: int) -> NetResult:
@@ -443,14 +570,14 @@ def _attach_skips(res: NetResult, skips, timesteps: int) -> NetResult:
 def run_int_ref(program: SNNProgram, xs: jax.Array, *,
                 use_sparse: bool = False) -> NetResult:
     """Word-level ISA semantics: the pure-jnp network reference (a scan of
-    isa.layer_timestep_int over the stack) that is also the pallas kernel's
-    non-TPU fallback — one implementation of the contract, two entry points.
-    ``use_sparse`` runs the lax.cond event-gated variant (bit-identical)."""
-    spikes_enc, v_enc = encode(program, xs)
-    rasters, v_stack, skips = run_stack_from_raster(
-        program, spikes_enc, use_pallas=False, use_sparse=use_sparse)
-    res = _assemble(program, rasters, v_enc, v_stack)
-    return _attach_skips(res, skips, xs.shape[0])
+    isa.layer_timestep_int over the fc stack, preceded by the im2col conv
+    front-end — `_conv_front_end` -> fused_snn_net(readout=False), whose
+    patch-raster execution is tested equal to isa.conv_layer_timestep_int)
+    that is also the pallas kernel's non-TPU fallback — one implementation
+    of the contract, two entry points. ``use_sparse`` runs the lax.cond
+    event-gated variant (bit-identical)."""
+    return _run_macro_stack(program, xs, use_pallas=False,
+                            use_sparse=use_sparse)
 
 
 # ---------------------------------------------------------------------------
@@ -460,12 +587,9 @@ def run_int_ref(program: SNNProgram, xs: jax.Array, *,
 def _run_pallas(program: SNNProgram, xs: jax.Array, *, block_b: int,
                 interpret: bool, emit_rasters: bool, use_sparse: bool
                 ) -> NetResult:
-    spikes_enc, v_enc = encode(program, xs)
-    rasters, v_stack, skips = run_stack_from_raster(
-        program, spikes_enc, use_pallas=True, use_sparse=use_sparse,
-        block_b=block_b, interpret=interpret, emit_rasters=emit_rasters)
-    res = _assemble(program, rasters, v_enc, v_stack)
-    return _attach_skips(res, skips, xs.shape[0])
+    return _run_macro_stack(program, xs, use_pallas=True,
+                            use_sparse=use_sparse, block_b=block_b,
+                            interpret=interpret, emit_rasters=emit_rasters)
 
 
 @register_backend("pallas")
@@ -493,67 +617,120 @@ def run_pallas_sparse(program: SNNProgram, xs: jax.Array, *, block_b: int = 8,
 # bitmacro backend — silicon oracle (numpy, bit-level, wrap arithmetic)
 # ---------------------------------------------------------------------------
 
+def _bitmacro_layer(inp: np.ndarray, wq: np.ndarray, threshold: int,
+                    leak: int, neuron: str):
+    """Execute one spiking layer, (T, F, n_in) bool input frames ->
+    ((T, F, n_out) int8 spikes, (F, n_out) final V, InstrCount), on a bank
+    of bit-level macros — the distributed multi-macro architecture:
+
+      * frames (batch elements, or (example, output position) pairs for
+        im2col-lowered convs) map onto V_MEM neuron sets, 13 per macro
+        grid; frame counts beyond 13 claim additional macro banks;
+      * fan-in splits over ``row_tiles`` macros (mapping.tile_weights).
+        Row tile 0 holds the persistent membrane state and the neuron
+        constants; tiles >= 1 accumulate per-timestep partial sums that a
+        word-level AccV2V (odd+even cycle per tile) reduces into tile 0
+        before the neuron-update sequence runs there. Wrap arithmetic
+        makes the split exact: mod-2^11 addition composes, so reduced
+        per-tile partials equal the single-accumulate word semantics bit
+        for bit (the reason saturate mode is word-level-only, macro.py).
+
+    Executed cycles equal `isa.count_layer_instructions` on the input
+    raster exactly: 2 AccW2V per event per col tile, 2(row_tiles-1) AccV2V
+    reduction cycles per (frame, timestep, col tile), plus the per-neuron
+    update sequence."""
+    from repro.core.macro import BitMacro
+    t_total, n_frames, n_in = inp.shape
+    n_out = wq.shape[1]
+    tiling = mapping.fc_tiling(n_in, n_out)
+    wq_tiles = mapping.tile_weights(np.asarray(wq))
+    n_banks = -(-n_frames // isa.N_NEURON_SETS)
+    banks = [[[BitMacro.from_weights(wq_tiles[r, c], threshold=threshold,
+                                     leak=leak)
+               for c in range(tiling.col_tiles)]
+              for r in range(tiling.row_tiles)]
+             for _ in range(n_banks)]
+    out = np.zeros((t_total, n_frames, n_out), np.int8)
+    for t in range(t_total):
+        for f in range(n_frames):
+            bank, set_idx = divmod(f, isa.N_NEURON_SETS)
+            grid = banks[bank]
+            for row in np.nonzero(inp[t, f])[0]:        # event-driven AccW2V
+                r, macro_row = divmod(int(row), isa.MACRO_IN)
+                for c in range(tiling.col_tiles):
+                    grid[r][c].acc_w2v(set_idx, macro_row, cycle=0)
+                    grid[r][c].acc_w2v(set_idx, macro_row, cycle=1)
+            for r in range(1, tiling.row_tiles):        # AccV2V reduction
+                for c in range(tiling.col_tiles):
+                    partial = grid[r][c].transfer_v(set_idx)
+                    for cycle in (0, 1):
+                        grid[0][c].acc_v2v(set_idx, partial, cycle)
+            spikes = np.concatenate(
+                [grid[0][c].neuron_update(set_idx, neuron)
+                 for c in range(tiling.col_tiles)])
+            out[t, f] = spikes[:n_out].astype(np.int8)
+    v = np.stack([
+        np.concatenate([banks[f // isa.N_NEURON_SETS][0][c]
+                        .read_v(f % isa.N_NEURON_SETS)
+                        for c in range(tiling.col_tiles)])
+        for f in range(n_frames)])[:, :n_out]
+    counts = sum((m.counts for bank in banks for row in bank for m in row),
+                 isa.InstrCount())
+    return out, v.astype(np.int32), counts
+
+
 @register_backend("bitmacro")
 def run_bitmacro(program: SNNProgram, xs: jax.Array) -> NetResult:
-    """Execute the fc stack on the bit-accurate macro model. Constraints are
-    the silicon's: fan-in <= 128 per layer (row_tiles == 1 — partial-sum
-    reduction across macros is a word-level behaviour), batch <= 13 neuron
-    sets, and two's-complement *wrap* arithmetic (saturation is a word-level
-    deployment policy, not silicon; compile with clamp_mode='wrap' to
-    compare bit-for-bit — see macro.py)."""
-    from repro.core.macro import BitMacro
+    """Execute the on-macro stack on the bit-accurate macro model (the
+    silicon oracle). Layers with fan-in > 128 split over row-tiled macros
+    whose partial sums reduce with word-level AccV2V cycles; conv layers
+    lower via im2col onto the same grid (one neuron set per (example,
+    output position)); frames beyond 13 neuron sets claim extra macro
+    banks. The one remaining constraint is the silicon's two's-complement
+    *wrap* arithmetic (saturation is a word-level deployment policy, not
+    silicon — and the only mode in which split partial sums compose
+    exactly; compile with clamp_mode='wrap', see macro.py)."""
     if program.clamp_mode != "wrap":
         raise ValueError("bitmacro executes silicon wrap arithmetic; compile "
                          "the program with clamp_mode='wrap'")
     spikes_enc, v_enc = encode(program, xs)
-    spikes_np = np.asarray(spikes_enc).astype(bool)             # (T, B, d)
-    T_total, B = spikes_np.shape[:2]
-    if B > isa.N_NEURON_SETS:
-        raise ValueError(f"bitmacro backend maps batch onto neuron sets; "
-                         f"B={B} > {isa.N_NEURON_SETS}")
-    stack = program.fc_stack
+    cur = np.asarray(spikes_enc).astype(np.int8)       # (T, B, ...) spikes
+    t_total, batch = cur.shape[:2]
+    stack = program.macro_stack
 
-    # one BitMacro per (layer, col_tile); batch element b uses neuron set b
-    macros: list[list[BitMacro]] = []
+    rasters = [jnp.asarray(cur)]
+    v_stack: list = []
+    total = isa.InstrCount()
     for spec in stack[:-1]:
-        t = spec.tiling
-        if t.row_tiles != 1:
-            raise ValueError(f"bitmacro backend needs fan-in <= {isa.MACRO_IN} "
-                             f"(layer {spec.n_in}x{spec.n_out})")
-        wq_tiles = mapping.tile_weights(np.asarray(spec.w))     # (1, C, 128, 12)
-        macros.append([
-            BitMacro.from_weights(wq_tiles[0, c], threshold=int(spec.threshold),
-                                  leak=int(spec.leak))
-            for c in range(t.col_tiles)])
-
-    rasters = [spikes_np.astype(np.int8)]
-    layer_out = [np.zeros((T_total, B, spec.n_out), np.int8)
-                 for spec in stack[:-1]]
-    v_out = np.zeros((B, stack[-1].n_out), np.int64)
+        if spec.kind == "conv":
+            patches = np.asarray(mapping.im2col_raster(
+                cur, spec.w.shape[0], spec.stride))
+            out_hw = mapping.conv_out_hw(cur.shape[2:4], spec.w.shape[0],
+                                         spec.stride)
+            inp = patches.astype(bool)
+            wq = np.asarray(mapping.pack_conv_weights(spec.w))
+        else:
+            inp = cur.reshape(t_total, -1, spec.n_in).astype(bool)
+            wq = np.asarray(spec.w)
+        out, v, counts = _bitmacro_layer(inp, wq, int(spec.threshold),
+                                         int(spec.leak), program.neuron)
+        total += counts
+        if spec.kind == "conv":
+            cur = out.reshape(t_total, batch, *out_hw, spec.n_out)
+            v = v.reshape(batch, *out_hw, spec.n_out)
+        else:
+            cur = out
+        rasters.append(jnp.asarray(cur))
+        v_stack.append(jnp.asarray(v))
+    # readout: word-level wide accumulate (off the bit array, as deployed)
+    flat = cur.reshape(t_total, batch, -1)
     wq_readout = np.asarray(stack[-1].w, np.int64)
-    for t in range(T_total):
-        for b in range(B):
-            cur = spikes_np[t, b]
-            for li, spec in enumerate(stack[:-1]):
-                padded = np.zeros(isa.MACRO_IN, bool)
-                padded[:spec.n_in] = cur[:spec.n_in]
-                outs = [m.timestep(b, padded, program.neuron)
-                        for m in macros[li]]
-                cur = np.concatenate(outs)[:spec.n_out]
-                layer_out[li][t, b] = cur.astype(np.int8)
-            v_out[b] += cur.astype(np.int64) @ wq_readout
-    rasters += layer_out
-    # read V per layer: concatenate col tiles then trim padding
-    v_final = []
-    for li, spec in enumerate(stack[:-1]):
-        v = np.stack([np.concatenate([m.read_v(b) for m in macros[li]])
-                      for b in range(B)])[:, :spec.n_out]
-        v_final.append(jnp.asarray(v.astype(np.int32)))
-    rasters = [jnp.asarray(r) for r in rasters]
-    v_stack = v_final + [jnp.asarray(v_out.astype(np.int32))]
+    v_out = np.zeros((batch, stack[-1].n_out), np.int64)
+    for t in range(t_total):
+        v_out += flat[t].astype(np.int64) @ wq_readout
+    v_stack.append(jnp.asarray(v_out.astype(np.int32)))
     res = _assemble(program, rasters, v_enc, v_stack)
-    res.aux["macro_counts"] = sum(
-        (m.counts for tile in macros for m in tile), isa.InstrCount())
+    res.aux["macro_counts"] = total
     return res
 
 
@@ -574,7 +751,7 @@ class SparsityReport:
     the training-loop-friendly path). Both feed
     `count_network_instructions(program, report=...)` and
     `energy.measured_edp*`."""
-    n_in: tuple                   # fan-in per fc-stack layer
+    n_in: tuple                   # fan-in per macro-stack layer
     n_out: tuple
     neurons: tuple                # per-layer update kind ("rmp"... | "none")
     events: tuple                 # total input spike events per layer
@@ -584,17 +761,27 @@ class SparsityReport:
     occupancy_t: Optional[tuple] = None   # per layer: (T_total,) mean input
                                           # occupancy per timestep (rasters
                                           # only; None from sums)
+    layer_frames: Optional[tuple] = None  # per-layer frame counts; conv
+                                          # layers run T*B*P frames (one per
+                                          # output position). None = every
+                                          # layer runs ``frames``
+
+    @property
+    def frames_by_layer(self) -> tuple:
+        return (self.layer_frames if self.layer_frames is not None
+                else tuple(self.frames for _ in self.n_in))
 
     @property
     def layer_sparsity(self) -> tuple:
-        """1 - (events / possible events), per fc-stack layer input."""
-        return tuple(1.0 - e / (self.frames * n)
-                     for e, n in zip(self.events, self.n_in))
+        """1 - (events / possible events), per macro-stack layer input."""
+        return tuple(1.0 - e / (f * n)
+                     for e, n, f in zip(self.events, self.n_in,
+                                        self.frames_by_layer))
 
     @property
     def overall_sparsity(self) -> float:
         """Event-weighted network input sparsity (all layers pooled)."""
-        possible = sum(self.frames * n for n in self.n_in)
+        possible = sum(f * n for n, f in zip(self.n_in, self.frames_by_layer))
         return 1.0 - sum(self.events) / possible
 
     @property
@@ -609,77 +796,126 @@ class SparsityReport:
 
     @property
     def macro_timesteps(self) -> int:
-        """Total macro-timesteps executed: every (timestep, example) frame
-        runs each layer's col_tiles macros once — the normalizer that makes
-        a measured InstrCount comparable to the paper's per-neuron
-        per-timestep EDP curve (energy.measured_edp_per_neuron_timestep)."""
-        return sum(self.frames * mapping.fc_tiling(ni, no).col_tiles
-                   for ni, no in zip(self.n_in, self.n_out))
+        """Total macro-timesteps executed: every frame (a (timestep,
+        example) pair, or (timestep, example, output position) for conv
+        layers) runs its layer's col_tiles macro grids once — the
+        normalizer that makes a measured InstrCount comparable to the
+        paper's per-neuron per-timestep EDP curve
+        (energy.measured_edp_per_neuron_timestep)."""
+        return sum(f * mapping.fc_tiling(ni, no).col_tiles
+                   for ni, no, f in zip(self.n_in, self.n_out,
+                                        self.frames_by_layer))
 
     def instruction_counts(self) -> isa.InstrCount:
         """Event statistics -> instruction cycles (identical to counting the
         rasters directly: both route through
         isa.count_layer_instructions_from_events)."""
         counts = isa.InstrCount()
-        for ni, no, neuron, ev in zip(self.n_in, self.n_out, self.neurons,
-                                      self.events):
+        for ni, no, neuron, ev, f in zip(self.n_in, self.n_out, self.neurons,
+                                         self.events, self.frames_by_layer):
             counts += isa.count_layer_instructions_from_events(
-                ev, self.frames, ni, no, neuron)
+                ev, f, ni, no, neuron)
         return counts
 
 
 def _report_geometry(program: SNNProgram) -> tuple:
-    stack = program.fc_stack
+    stack = program.macro_stack
     return (tuple(l.n_in for l in stack), tuple(l.n_out for l in stack),
-            tuple(program.neuron if l.kind == "fc" else "none"
+            tuple("none" if l.kind == "readout" else program.neuron
                   for l in stack))
+
+
+def _stack_input_rasters(program: SNNProgram, rasters: list) -> list:
+    """Normalize a raster list onto the macro stack: take the trailing
+    len(macro_stack) entries (float-domain conv programs emit one raster
+    per neuron layer, whose tail is exactly the macro-stack inputs), then
+    lower conv-layer entries — (T, B, H, W, C) spike maps — to their
+    (T, B*P, k*k*C) im2col patch rasters, the event stream the macro
+    actually consumes. FC entries reshape to (T, frames, n_in)."""
+    stack = program.macro_stack
+    if len(rasters) < len(stack):
+        raise ValueError(f"need one input raster per macro-stack layer "
+                         f"({len(stack)}), got {len(rasters)}")
+    out = []
+    for spec, raster in zip(stack, rasters[-len(stack):]):
+        r = np.asarray(raster)
+        if spec.kind == "conv":
+            r = np.asarray(mapping.im2col_raster(r, spec.w.shape[0],
+                                                 spec.stride))
+        out.append(r.reshape(r.shape[0], -1, spec.n_in))
+    return out
 
 
 def sparsity_report(program: SNNProgram, rasters: list) -> SparsityReport:
     """Exact report from per-layer input rasters (`NetResult.rasters`):
-    rasters[i] is (T_total, B, n_in_i) for fc-stack layer i."""
+    rasters[i] is (T_total, B, n_in_i) for macro-stack layer i — or the
+    (T_total, B, H, W, C) input spike map for a conv layer, which is
+    lowered to its im2col patch raster here (events are counted per
+    output position, as the macro issues them)."""
     if rasters is None:
         raise ValueError("sparsity_report needs spike rasters; run the "
                          "backend with emit_rasters=True (accounting mode), "
                          "or build the report from collect_sums aggregates")
     n_in, n_out, neurons = _report_geometry(program)
-    rs = [np.asarray(r).reshape(r.shape[0], -1, ni)
-          for r, ni in zip(rasters, n_in)]
-    T, B = rs[0].shape[:2]
+    rs = _stack_input_rasters(program, rasters)
+    T = rs[0].shape[0]
+    B = int(np.asarray(rasters[-1]).shape[1])     # fc rasters carry batch
     return SparsityReport(
         n_in=n_in, n_out=n_out, neurons=neurons,
         events=tuple(int(r.sum()) for r in rs),
         frames=T * B, timesteps=T, batch=B,
-        occupancy_t=tuple(r.mean(axis=(1, 2)) for r in rs))
+        occupancy_t=tuple(r.mean(axis=(1, 2)) for r in rs),
+        layer_frames=tuple(T * r.shape[1] for r in rs))
 
 
 def sparsity_report_from_sums(program: SNNProgram, spike_sums: list,
                               timesteps: int) -> SparsityReport:
     """Raster-free report from the float backend's ``collect_sums`` aux:
     spike_sums[i] is the (B, ...) per-neuron spike-count total of neuron
-    layer i. The last len(fc_stack) neuron layers feed the fc stack, so
-    their totals are exactly the per-layer input event counts — per-
+    layer i. The last len(macro_stack) neuron layers feed the macro stack,
+    so their totals are exactly the per-layer input event counts. Conv-fed
+    layers see each input pixel once per covering patch; im2col is linear,
+    so the patch event total is ``im2col(sum map).sum()`` — exact. Per-
     timestep occupancy is not recoverable from sums (occupancy_t=None)."""
     n_in, n_out, neurons = _report_geometry(program)
-    sums = spike_sums[-len(program.fc_stack):]
+    stack = program.macro_stack
+    sums = spike_sums[-len(stack):]
     if len(sums) != len(n_in):
-        raise ValueError(f"need one spike-sum per fc-stack layer input "
+        raise ValueError(f"need one spike-sum per macro-stack layer input "
                          f"({len(n_in)}), got {len(spike_sums)}")
     B = int(np.asarray(sums[0]).shape[0])
+    events, layer_frames = [], []
+    for spec, s in zip(stack, sums):
+        s = np.asarray(s)
+        if spec.kind == "conv":
+            patches = np.asarray(mapping.im2col(s, spec.w.shape[0],
+                                                spec.stride))
+            # int64 element-wise cast before summing: the f32 counts are
+            # integer-valued, but f32 *accumulation* loses exactness > 2^24
+            events.append(int(patches.sum(dtype=np.int64)))
+            layer_frames.append(timesteps * B
+                                * patches.shape[1] * patches.shape[2])
+        else:
+            events.append(int(s.sum(dtype=np.int64)))
+            layer_frames.append(timesteps * B)
     return SparsityReport(
-        n_in=n_in, n_out=n_out, neurons=neurons,
-        events=tuple(int(np.asarray(s).sum()) for s in sums),
-        frames=timesteps * B, timesteps=timesteps, batch=B)
+        n_in=n_in, n_out=n_out, neurons=neurons, events=tuple(events),
+        frames=timesteps * B, timesteps=timesteps, batch=B,
+        layer_frames=tuple(layer_frames))
 
 
 def count_network_instructions(program: SNNProgram, rasters: list = None, *,
                                report: Optional[SparsityReport] = None
                                ) -> isa.InstrCount:
     """Fold the per-layer event counts over the whole program. ``rasters[i]``
-    is the input raster of fc-stack layer i; identical rasters (which all
-    backends are tested to produce) give identical counts by construction.
-    Alternatively pass a `SparsityReport` (``report=...``) — the raster-free
-    accounting path; both routes share one counting implementation."""
+    is the input raster of macro-stack layer i (conv layers take their input
+    spike maps, lowered to im2col patch rasters here); identical rasters
+    (which all backends are tested to produce) give identical counts by
+    construction. Row-tiled layers include the AccV2V partial-sum reduction
+    term (isa.count_layer_instructions_from_events) that the bitmacro
+    backend executes cycle-for-cycle. Alternatively pass a `SparsityReport`
+    (``report=...``) — the raster-free accounting path; both routes share
+    one counting implementation."""
     if report is not None:
         return report.instruction_counts()
     if rasters is None:
@@ -687,9 +923,9 @@ def count_network_instructions(program: SNNProgram, rasters: list = None, *,
                          "backend with emit_rasters=True, accounting mode) "
                          "or a SparsityReport")
     counts = isa.InstrCount()
-    for spec, raster in zip(program.fc_stack, rasters):
-        r = np.asarray(raster)
+    for spec, r in zip(program.macro_stack,
+                       _stack_input_rasters(program, rasters)):
         counts += isa.count_layer_instructions(
             r, spec.n_in, spec.n_out,
-            program.neuron if spec.kind == "fc" else "none")
+            "none" if spec.kind == "readout" else program.neuron)
     return counts

@@ -122,6 +122,26 @@ def lenet_apply(params: dict, images: jax.Array, cfg: SNNModelConfig,
                                 static_input=True).v_out
 
 
+def lenet_apply_int(params: dict, images: jax.Array, cfg: SNNModelConfig,
+                    backend: str = "int_ref", **backend_kw):
+    """Integer-domain LeNet5-mod inference — the deployed conv program: the
+    first conv stays the float spike encoder, later convs lower onto the
+    macro grid via im2col (6b weights, 11b V), FCs ride the fused stack.
+    Runs on any integer backend ("int_ref" | "pallas" | "pallas_sparse" |
+    "bitmacro", the latter needing clamp_mode='wrap'). Returns
+    (logits (B, n_classes), spike rasters, instruction counts) — rasters
+    and counts None in serving mode (emit_rasters=False)."""
+    program = pipeline.compile_network(cfg, params, domain="int",
+                                       **{k: backend_kw.pop(k)
+                                          for k in ("clamp_mode",)
+                                          if k in backend_kw})
+    xs = pipeline.present_static(images, cfg.timesteps)
+    res = pipeline.run_network(program, xs, backend, **backend_kw)
+    counts = (pipeline.count_network_instructions(program, res.rasters)
+              if res.rasters is not None else None)
+    return res.logits, res.rasters, counts
+
+
 def lenet_loss(params, images, labels, cfg: SNNModelConfig, quantize=True):
     logits = lenet_apply(params, images, cfg, quantize)
     logp = jax.nn.log_softmax(logits)

@@ -52,20 +52,24 @@ from repro.core.quant import clamp_v, spike_compare
 SKIP_LANES = 128    # skip-count output lane width (layer i in column i)
 
 
-def _net_kernel(*refs, n_spiking: int, neuron: str, clamp_mode: str,
-                timesteps: int, emit_rasters: bool, sparse: bool,
-                logical_widths: tuple, batch_logical: int, block_b: int):
+def _net_kernel(*refs, n_spiking: int, has_readout: bool, neuron: str,
+                clamp_mode: str, timesteps: int, emit_rasters: bool,
+                sparse: bool, logical_widths: tuple, batch_logical: int,
+                block_b: int):
     """Ref layout (inputs, outputs, scratch):
       inputs : spikes_ref (T, Bt, N0p) int8; w_refs[i] (Nip, Nop) int8 for
-               the n_spiking FCs + readout; params_ref (n_spiking, 2) int32
-               rows of [threshold, leak];
+               the n_spiking FCs (+ readout when has_readout); params_ref
+               (n_spiking, 2) int32 rows of [threshold, leak];
       outputs: raster_refs[i] (T, Bt, Nop) int8 per spiking FC (only when
                emit_rasters); v_out_refs[i] (Bt, Nop) int32 per layer
                (readout last); skip_ref (1, SKIP_LANES) int32 (only when
                sparse) — skipped-matmul count of layer i in column i;
       scratch: v_refs[i] (Bt, Nop) int32 per layer — the fused V_MEM tiles.
+
+    ``has_readout=False`` runs an all-spiking stack (no accumulate-only
+    tail) — the shape conv layers lowered onto im2col patch rasters take.
     """
-    n_w = n_spiking + 1
+    n_w = n_spiking + (1 if has_readout else 0)
     spikes_ref = refs[0]
     w_refs = refs[1:1 + n_w]
     params_ref = refs[1 + n_w]
@@ -147,10 +151,11 @@ def _net_kernel(*refs, n_spiking: int, neuron: str, clamp_mode: str,
                 pl.store(raster_refs[i],
                          (pl.dslice(t, 1), slice(None), slice(None)),
                          cur[None])
-        # readout: wide int32 accumulate, no 11b clamp
-        v_out = accumulate(n_spiking, cur)
-        if not sparse:                  # sparse mode already wrote the ref
-            v_refs[n_spiking][...] = v_out
+        if has_readout:
+            # readout: wide int32 accumulate, no 11b clamp
+            v_out = accumulate(n_spiking, cur)
+            if not sparse:              # sparse mode already wrote the ref
+                v_refs[n_spiking][...] = v_out
         return carry
 
     jax.lax.fori_loop(0, timesteps, body, 0)
@@ -162,10 +167,12 @@ def fused_snn_net_pallas(spikes: jax.Array, ws: list, params: jax.Array, *,
                          neuron: str, clamp_mode: str, block_b: int,
                          emit_rasters: bool, interpret: bool = False,
                          sparse: bool = False, logical_widths: tuple = (),
-                         batch_logical: int = 0):
+                         batch_logical: int = 0, has_readout: bool = True):
     """Dispatch the network kernel. Shapes must be pre-padded: spikes
     (T, B, N0p) int8 with B % block_b == 0; ws[i] (Nip, Nop) int8 with every
     dim a 128 multiple and Nip == previous Nop; params (n_spiking, 2) int32.
+    ``has_readout=False`` treats every layer in ws as spiking (conv stacks
+    lowered to patch rasters run this way — no accumulate-only tail).
 
     ``sparse`` selects the event-gated kernel; it needs ``logical_widths``
     (the pre-padding width of the input raster and of every layer's output,
@@ -179,15 +186,16 @@ def fused_snn_net_pallas(spikes: jax.Array, ws: list, params: jax.Array, *,
     None otherwise.
     """
     T, B, _ = spikes.shape
-    n_spiking = len(ws) - 1
+    n_spiking = len(ws) - 1 if has_readout else len(ws)
     grid = (B // block_b,)
     if sparse and len(logical_widths) != len(ws) + 1:
         raise ValueError("sparse mode needs len(ws)+1 logical widths, got "
                          f"{len(logical_widths)} for {len(ws)} layers")
     kernel = functools.partial(
-        _net_kernel, n_spiking=n_spiking, neuron=neuron,
-        clamp_mode=clamp_mode, timesteps=T, emit_rasters=emit_rasters,
-        sparse=sparse, logical_widths=tuple(logical_widths),
+        _net_kernel, n_spiking=n_spiking, has_readout=has_readout,
+        neuron=neuron, clamp_mode=clamp_mode, timesteps=T,
+        emit_rasters=emit_rasters, sparse=sparse,
+        logical_widths=tuple(logical_widths),
         batch_logical=batch_logical, block_b=block_b)
 
     in_specs = [pl.BlockSpec((T, block_b, spikes.shape[2]),
@@ -197,7 +205,7 @@ def fused_snn_net_pallas(spikes: jax.Array, ws: list, params: jax.Array, *,
 
     out_specs, out_shape = [], []
     if emit_rasters:
-        for w in ws[:-1]:
+        for w in ws[:n_spiking]:
             out_specs.append(pl.BlockSpec((T, block_b, w.shape[1]),
                                           lambda b: (0, b, 0)))
             out_shape.append(jax.ShapeDtypeStruct((T, B, w.shape[1]), jnp.int8))

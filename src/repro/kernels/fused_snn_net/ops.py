@@ -56,16 +56,21 @@ def _check_stack(spikes: jax.Array, ws: list) -> None:
 
 @partial(jax.jit, static_argnames=("thresholds", "leaks", "neuron",
                                    "clamp_mode", "block_b", "use_pallas",
-                                   "interpret", "emit_rasters", "use_sparse"))
+                                   "interpret", "emit_rasters", "use_sparse",
+                                   "readout"))
 def fused_snn_net(spikes: jax.Array, ws: list, *, thresholds: tuple,
                   leaks: tuple, neuron: str = "rmp",
                   clamp_mode: str = "saturate", block_b: int = 8,
                   use_pallas: bool = True, interpret: bool = False,
-                  emit_rasters: bool = True, use_sparse: bool = False):
+                  emit_rasters: bool = True, use_sparse: bool = False,
+                  readout: bool = True):
     """Run a (T, B, N0) encoder spike raster through the whole fc stack.
 
     ``ws``: per-layer int8 weights, spiking FCs first, readout last;
     ``thresholds``/``leaks``: per-spiking-layer ints on each layer's grid.
+    ``readout=False`` runs an all-spiking stack — every layer in ``ws`` is a
+    spiking FC (one threshold/leak each, no accumulate-only tail); conv
+    layers lowered onto im2col patch rasters execute this way.
     Returns (rasters, v_finals, skips): per-spiking-layer output rasters
     (T, B, N_i) int8 (empty list when emit_rasters=False), per-layer
     final V (B, N_i) int32 (readout last), and — in ``use_sparse`` mode —
@@ -78,9 +83,15 @@ def fused_snn_net(spikes: jax.Array, ws: list, *, thresholds: tuple,
     """
     thresholds, leaks = tuple(thresholds), tuple(leaks)
     _check_stack(spikes, ws)
+    n_spiking = len(ws) - 1 if readout else len(ws)
+    if len(thresholds) != n_spiking or len(leaks) != n_spiking:
+        raise ValueError(
+            f"need one threshold/leak per spiking layer ({n_spiking} with "
+            f"readout={readout}), got {len(thresholds)}/{len(leaks)}")
     if not use_pallas:
         return _fused_snn_net_ref(spikes, ws, thresholds, leaks, neuron,
-                                  clamp_mode, emit_rasters, use_sparse)
+                                  clamp_mode, emit_rasters, use_sparse,
+                                  readout)
     T, B, N0 = spikes.shape
     s = _pad_axis(_pad_axis(spikes.astype(jnp.int8), 2, LANE), 1, block_b)
     ws_p = [_pad_axis(_pad_axis(w.astype(jnp.int8), 0, LANE), 1, LANE)
@@ -90,16 +101,17 @@ def fused_snn_net(spikes: jax.Array, ws: list, *, thresholds: tuple,
     rasters, v_finals, skips = fused_snn_net_pallas(
         s, ws_p, params, neuron=neuron, clamp_mode=clamp_mode,
         block_b=block_b, emit_rasters=emit_rasters, interpret=interpret,
-        sparse=use_sparse,
+        sparse=use_sparse, has_readout=readout,
         logical_widths=(N0,) + tuple(w.shape[1] for w in ws),
         batch_logical=B)
-    rasters = [r[:, :B, :w.shape[1]] for r, w in zip(rasters, ws[:-1])]
+    rasters = [r[:, :B, :w.shape[1]]
+               for r, w in zip(rasters, ws[:n_spiking])]
     v_finals = [v[:B, :w.shape[1]] for v, w in zip(v_finals, ws)]
     return rasters, v_finals, skips
 
 
 def _fused_snn_net_ref(spikes, ws, thresholds, leaks, neuron, clamp_mode,
-                       emit_rasters, use_sparse=False):
+                       emit_rasters, use_sparse=False, readout=True):
     """Pure-jnp oracle: the word-level ISA scanned over the network. In
     ``use_sparse`` mode the AccW2V matmul of each layer is wrapped in a
     `lax.cond` on whole-batch occupancy (the reference's tile = the whole
@@ -108,6 +120,7 @@ def _fused_snn_net_ref(spikes, ws, thresholds, leaks, neuron, clamp_mode,
     from repro.core.quant import clamp_v
     B = spikes.shape[1]
     n_w = len(ws)
+    spiking_ws = ws[:-1] if readout else ws
 
     def gated_acc(v, w, cur):
         occupied = jnp.sum(cur) > 0
@@ -122,7 +135,7 @@ def _fused_snn_net_ref(spikes, ws, thresholds, leaks, neuron, clamp_mode,
         cur = s_t.astype(jnp.int32)
         rasters = []
         skipped = []
-        for i, w in enumerate(ws[:-1]):
+        for i, w in enumerate(spiking_ws):
             if use_sparse:
                 v, sk = gated_acc(vs[i], w, cur)
                 skipped.append(sk)
@@ -137,16 +150,18 @@ def _fused_snn_net_ref(spikes, ws, thresholds, leaks, neuron, clamp_mode,
                     leak=jnp.int32(leaks[i]),
                     reset=jnp.int32(0), clamp_mode=clamp_mode)
             rasters.append(cur.astype(jnp.int8))
+        if readout:
+            if use_sparse:
+                occupied = jnp.sum(cur) > 0
+                vs[-1] = jax.lax.cond(
+                    occupied,
+                    lambda v: v + cur @ ws[-1].astype(jnp.int32),
+                    lambda v: v, vs[-1])
+                skipped.append(jnp.logical_not(occupied).astype(jnp.int32))
+            else:
+                vs[-1] = vs[-1] + cur @ ws[-1].astype(jnp.int32)
         if use_sparse:
-            occupied = jnp.sum(cur) > 0
-            vs[-1] = jax.lax.cond(
-                occupied,
-                lambda v: v + cur @ ws[-1].astype(jnp.int32),
-                lambda v: v, vs[-1])
-            skipped.append(jnp.logical_not(occupied).astype(jnp.int32))
             skips = skips + jnp.stack(skipped)
-        else:
-            vs[-1] = vs[-1] + cur @ ws[-1].astype(jnp.int32)
         return (tuple(vs), skips), tuple(rasters)
 
     vs0 = tuple(jnp.zeros((B, w.shape[1]), jnp.int32) for w in ws)

@@ -1,0 +1,114 @@
+"""Conv -> macro-grid lowering properties (the im2col contract).
+
+The int conv path rests on one identity: SAME-padded conv2d over {0,1}
+spike maps equals the im2col patch matrix times the row-packed HWIO kernel,
+*exactly*, in integer arithmetic — zero padding contributes zero rows, and
+the (kh, kw, c) patch-feature order matches `pack_conv_weights`. Property
+tests sweep random kernel/stride/channel geometries and check the identity
+at three levels: raw accumulation, the full word-level conv layer-timestep
+(`isa.conv_layer_timestep_int` vs a conv2d-built rendering) under BOTH
+V_MEM clamp policies (the wrap mode is where partial-sum order would show),
+and the temporal raster form the pipeline feeds the executors.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import isa, mapping
+from repro.core.pipeline import conv2d
+from repro.core.quant import clamp_v, spike_compare
+
+
+def _geometry(seed, kernel, stride, c_in, c_out, h, w):
+    rng = np.random.default_rng(seed)
+    x = (rng.random((2, h, w, c_in)) < 0.35).astype(np.int32)
+    wq = rng.integers(-31, 32, (kernel, kernel, c_in, c_out)).astype(np.int32)
+    return x, wq
+
+
+@given(st.integers(min_value=1, max_value=4),     # kernel
+       st.integers(min_value=1, max_value=3),     # stride
+       st.integers(min_value=1, max_value=3),     # c_in
+       st.integers(min_value=1, max_value=5),     # c_out
+       st.integers(min_value=3, max_value=9),     # h
+       st.integers(min_value=3, max_value=9))     # w
+@settings(max_examples=48, deadline=None)
+def test_im2col_matmul_equals_conv2d(kernel, stride, c_in, c_out, h, w):
+    x, wq = _geometry(kernel + 7 * stride + h, kernel, stride, c_in, c_out,
+                      h, w)
+    ref = np.asarray(conv2d(jnp.asarray(x, jnp.float32),
+                            jnp.asarray(wq, jnp.float32), stride))
+    patches = np.asarray(mapping.im2col(x, kernel, stride))
+    got = patches @ np.asarray(mapping.pack_conv_weights(wq))
+    assert patches.shape[-1] == kernel * kernel * c_in
+    np.testing.assert_array_equal(got.astype(np.int64),
+                                  ref.astype(np.int64))
+    # geometry helper agrees with the patch shape
+    assert patches.shape[1:3] == mapping.conv_out_hw((h, w), kernel, stride)
+
+
+@pytest.mark.parametrize("clamp_mode", ["saturate", "wrap"])
+@pytest.mark.parametrize("neuron", ["if", "lif", "rmp"])
+def test_conv_layer_timestep_int_matches_conv2d_rendering(neuron, clamp_mode):
+    """The word-level conv timestep (im2col lowering) == the direct conv2d
+    rendering of the same integer dynamics, over several timesteps of
+    persistent V — including the 11-bit wrap regime (weights scaled up so V
+    actually leaves [-1024, 1023])."""
+    rng = np.random.default_rng(3)
+    kernel, stride, c_in, c_out, h = 3, 2, 2, 5, 7
+    wq = jnp.asarray(rng.integers(-31, 32, (kernel, kernel, c_in, c_out)),
+                     jnp.int32) * 4               # force wrap events
+    th, leak = jnp.int32(90), jnp.int32(3)
+    h_out, w_out = mapping.conv_out_hw((h, h), kernel, stride)
+    v = jnp.zeros((2, h_out, w_out, c_out), jnp.int32)
+    v_ref = v
+    for t in range(4):
+        x = jnp.asarray((rng.random((2, h, h, c_in)) < 0.4), jnp.int32)
+        v, s = isa.conv_layer_timestep_int(
+            v, wq, x, stride=stride, neuron=neuron, threshold=th, leak=leak,
+            reset=jnp.int32(0), clamp_mode=clamp_mode)
+        # direct rendering: conv2d accumulate, then the shared dynamics
+        acc = conv2d(x.astype(jnp.float32),
+                     wq.astype(jnp.float32), stride).astype(jnp.int32)
+        v_ref = clamp_v(v_ref + acc, clamp_mode)
+        if neuron == "lif":
+            v_ref = clamp_v(v_ref - leak, clamp_mode)
+        s_ref = spike_compare(v_ref, th, clamp_mode)
+        if neuron == "rmp":
+            v_ref = clamp_v(jnp.where(s_ref, v_ref - th, v_ref), clamp_mode)
+        else:
+            v_ref = jnp.where(s_ref, 0, v_ref)
+        np.testing.assert_array_equal(np.asarray(s),
+                                      np.asarray(s_ref.astype(jnp.int32)),
+                                      err_msg=f"spikes t={t}")
+        np.testing.assert_array_equal(np.asarray(v), np.asarray(v_ref),
+                                      err_msg=f"V t={t}")
+    assert int(np.asarray(v).min()) >= -1024 and int(np.asarray(v).max()) <= 1023
+
+
+@given(st.integers(min_value=1, max_value=3),
+       st.integers(min_value=1, max_value=3))
+@settings(max_examples=12, deadline=None)
+def test_im2col_raster_matches_per_frame(kernel, stride):
+    """(T, B, H, W, C) raster form == im2col applied frame by frame."""
+    rng = np.random.default_rng(kernel * 11 + stride)
+    raster = (rng.random((3, 2, 6, 6, 2)) < 0.3).astype(np.int8)
+    got = np.asarray(mapping.im2col_raster(raster, kernel, stride))
+    h_out, w_out = mapping.conv_out_hw((6, 6), kernel, stride)
+    assert got.shape == (3, 2 * h_out * w_out, kernel * kernel * 2)
+    for t in range(3):
+        per_frame = np.asarray(mapping.im2col(raster[t], kernel, stride))
+        np.testing.assert_array_equal(
+            got[t], per_frame.reshape(-1, kernel * kernel * 2))
+
+
+def test_same_pads_matches_xla():
+    """Asymmetric-padding cases (even kernels, stride > size alignment)."""
+    for size, kernel, stride in [(5, 2, 2), (7, 4, 3), (4, 3, 2), (3, 1, 1)]:
+        out, lo, hi = mapping.same_pads(size, kernel, stride)
+        x = jnp.ones((1, size, size, 1), jnp.float32)
+        w = jnp.ones((kernel, kernel, 1, 1), jnp.float32)
+        ref = conv2d(x, w, stride)
+        assert ref.shape[1] == out, (size, kernel, stride)
+        assert lo + hi == max((out - 1) * stride + kernel - size, 0)

@@ -5,12 +5,15 @@ integer program), int_ref (word-level ISA), pallas (network-level fused
 kernel, interpret mode), bitmacro (bit-level silicon oracle) — must produce
 bit-identical spike rasters, final V, and identical program-level
 InstrCounts. The sweep covers every neuron model, both V_MEM clamp policies,
-and odd shapes (non-multiples of the 128-lane / 12-neuron tiles).
+odd shapes (non-multiples of the 128-lane / 12-neuron tiles), fan-in > 128
+layers (row-tiled macros with the AccV2V partial-sum reduction on the
+silicon oracle), and LeNet5-mod conv stacks (im2col-lowered int convs).
 
 The bitmacro backend joins only in ``wrap`` mode: the silicon's ripple adder
 wraps mod 2^11 (saturation is a word-level deployment policy, macro.py), and
 saturating at word level does not commute with the macro's event-by-event
-accumulation order.
+accumulation order — which is also why the row-tiled partial-sum reduction
+is exact there: mod-2^11 addition composes across the fan-in split.
 """
 import dataclasses
 
@@ -20,7 +23,7 @@ import numpy as np
 import pytest
 
 from repro.configs.base import SpikingConfig
-from repro.configs.impulse_snn import IMDB, SNNModelConfig
+from repro.configs.impulse_snn import IMDB, MNIST, SNNModelConfig
 from repro.core import pipeline, snn
 
 # (layer_sizes, n_words, batch) — odd widths exercise the padding paths
@@ -29,6 +32,18 @@ SHAPES = [
     ((37, 50, 20, 3), 3, 2),        # ragged everything
     ((130, 140, 12, 1), 2, 1),      # >128 fan-in (row-tiled on silicon)
 ]
+
+# spatially reduced LeNet5-mod stack (same structure as configs.MNIST:
+# conv spike encoder -> on-macro convs -> FCs -> readout) so the bit-level
+# oracle joins the conv sweep at tractable cost
+LENET_S = SNNModelConfig(
+    arch_id="lenet-s",
+    conv_spec=((4, 3, 1), (6, 3, 2)),
+    in_shape=(8, 8, 1),
+    layer_sizes=(4 * 4 * 6, 10, 3),
+    spiking=SpikingConfig(neuron="rmp", timesteps=2, threshold=1.0,
+                          leak=0.0625, w_bits=6, v_bits=11),
+    timesteps=2, task="multiclass")
 
 
 def _make(layer_sizes, neuron, n_words, batch, seed=0):
@@ -44,10 +59,23 @@ def _make(layer_sizes, neuron, n_words, batch, seed=0):
     return cfg, params, x
 
 
-def _run_all(cfg, params, x, clamp_mode):
+def _make_conv(cfg, neuron, batch, seed=0, scale=2.0):
+    cfg = dataclasses.replace(
+        cfg, spiking=dataclasses.replace(cfg.spiking, neuron=neuron))
+    params = snn.init_lenet_snn(jax.random.PRNGKey(seed), cfg)
+    rng = np.random.default_rng(seed + 7)
+    x = jnp.asarray(rng.standard_normal(
+        (batch, *cfg.in_shape)).astype(np.float32)) * scale
+    return cfg, params, x
+
+
+def _run_all(cfg, params, x, clamp_mode, with_bitmacro=True):
     program = pipeline.compile_network(cfg, params, domain="int",
                                        clamp_mode=clamp_mode)
-    xs = pipeline.present_words(x, cfg.timesteps)
+    if cfg.conv_spec:
+        xs = pipeline.present_static(x, cfg.timesteps)
+    else:
+        xs = pipeline.present_words(x, cfg.timesteps)
     results = {
         "float": pipeline.run_network(program, xs, "float",
                                       collect_rasters=True),
@@ -57,35 +85,78 @@ def _run_all(cfg, params, x, clamp_mode):
         "pallas_sparse": pipeline.run_network(program, xs, "pallas_sparse",
                                               interpret=True, block_b=4),
     }
-    fan_in_ok = all(l.tiling.row_tiles == 1 for l in program.fc_stack[:-1])
-    if clamp_mode == "wrap" and fan_in_ok and x.shape[0] <= 13:
+    if clamp_mode == "wrap" and with_bitmacro:
         results["bitmacro"] = pipeline.run_network(program, xs, "bitmacro")
     return program, results
 
 
-@pytest.mark.parametrize("clamp_mode", ["saturate", "wrap"])
-@pytest.mark.parametrize("shape", SHAPES)
-@pytest.mark.parametrize("neuron", ["if", "lif", "rmp"])
-def test_backend_equivalence(neuron, shape, clamp_mode):
-    layer_sizes, n_words, batch = shape
-    cfg, params, x = _make(layer_sizes, neuron, n_words, batch)
-    program, results = _run_all(cfg, params, x, clamp_mode)
+def _assert_equivalent(program, results, tag=""):
     ref = results.pop("int_ref")
     counts_ref = pipeline.count_network_instructions(program, ref.rasters)
     assert counts_ref.total > 0
     for name, res in results.items():
+        assert len(res.rasters) == len(ref.rasters), (name, tag)
         for li, (a, b) in enumerate(zip(res.rasters, ref.rasters)):
             np.testing.assert_array_equal(
-                np.asarray(a).astype(np.int8), np.asarray(b),
-                err_msg=f"{name} raster {li} ({neuron}/{clamp_mode})")
+                np.asarray(a).astype(np.int8),
+                np.asarray(b).astype(np.int8),
+                err_msg=f"{name} raster {li} ({tag})")
         # final V: encoder V is float everywhere; stack V must be bit-equal
         for li, (a, b) in enumerate(zip(res.v_final[1:], ref.v_final[1:])):
             np.testing.assert_array_equal(
                 np.asarray(a).astype(np.int64),
                 np.asarray(b).astype(np.int64),
-                err_msg=f"{name} V {li} ({neuron}/{clamp_mode})")
+                err_msg=f"{name} V {li} ({tag})")
         counts = pipeline.count_network_instructions(program, res.rasters)
-        assert counts == counts_ref, (name, counts, counts_ref)
+        assert counts == counts_ref, (name, tag, counts, counts_ref)
+    return counts_ref
+
+
+@pytest.mark.parametrize("clamp_mode", ["saturate", "wrap"])
+@pytest.mark.parametrize("shape", SHAPES,
+                         ids=["imdb", "ragged", "rowtile130"])
+@pytest.mark.parametrize("neuron", ["if", "lif", "rmp"])
+def test_backend_equivalence(neuron, shape, clamp_mode):
+    layer_sizes, n_words, batch = shape
+    cfg, params, x = _make(layer_sizes, neuron, n_words, batch)
+    program, results = _run_all(cfg, params, x, clamp_mode)
+    if clamp_mode == "wrap":        # row-tiled shapes join via AccV2V now
+        assert "bitmacro" in results
+    _assert_equivalent(program, results, f"{neuron}/{clamp_mode}")
+
+
+@pytest.mark.parametrize("clamp_mode", ["saturate", "wrap"])
+@pytest.mark.parametrize("neuron", ["if", "lif", "rmp"])
+def test_conv_backend_equivalence(neuron, clamp_mode):
+    """The conv acceptance sweep on a reduced LeNet5-mod stack: im2col-
+    lowered int convs, all four substrates (bitmacro joins in wrap mode),
+    bit-identical per timestep."""
+    cfg, params, x = _make_conv(LENET_S, neuron, batch=2)
+    program, results = _run_all(cfg, params, x, clamp_mode)
+    assert len(program.int_conv_stack) == 1       # conv0 is the encoder
+    assert len(program.macro_stack) == 1 + len(program.fc_stack)
+    if clamp_mode == "wrap":
+        assert "bitmacro" in results
+    _assert_equivalent(program, results, f"conv/{neuron}/{clamp_mode}")
+
+
+def test_mnist_lenet5_mod_int_all_backends():
+    """The acceptance contract on the paper's own conv network: the MNIST
+    LeNet5-mod config (fan-in 3*3*14 = 126, two on-macro convs, row-tiled
+    686-wide FC) compiles in the int domain and runs bit-identical on every
+    backend, including the bit-level oracle with its AccV2V reduction on
+    the 686 -> 120 layer (6 row tiles)."""
+    cfg = dataclasses.replace(MNIST, timesteps=2,
+                              spiking=dataclasses.replace(MNIST.spiking,
+                                                          timesteps=2))
+    cfg, params, x = _make_conv(cfg, "rmp", batch=1, seed=2)
+    program, results = _run_all(cfg, params, x, "wrap")
+    assert set(results) == {"float", "int_ref", "pallas", "pallas_sparse",
+                            "bitmacro"}
+    assert [l.tiling.row_tiles for l in program.fc_stack] == [6, 1, 1]
+    assert [l.n_in for l in program.int_conv_stack] == [126, 126]
+    counts = _assert_equivalent(program, results, "mnist-lenet5-mod")
+    assert counts.acc_v2v > 0                     # reduction term executed
 
 
 def test_imdb_all_backends_bit_identical():
@@ -134,6 +205,29 @@ def test_wrappers_route_through_pipeline():
     assert c_ref == c_pal
 
 
+def test_lenet_wrappers_route_through_pipeline():
+    """snn.lenet_apply_int on the pallas backend == int_ref backend — the
+    LeNet-class deploy-end-to-end wrapper."""
+    cfg, params, x = _make_conv(LENET_S, "rmp", batch=2, seed=3)
+    l_ref, r_ref, c_ref = snn.lenet_apply_int(params, x, cfg)
+    l_pal, r_pal, c_pal = snn.lenet_apply_int(params, x, cfg,
+                                              backend="pallas",
+                                              interpret=True)
+    np.testing.assert_array_equal(np.asarray(l_ref), np.asarray(l_pal))
+    for a, b in zip(r_ref, r_pal):
+        np.testing.assert_array_equal(np.asarray(a).astype(np.int8),
+                                      np.asarray(b).astype(np.int8))
+    assert c_ref == c_pal and c_ref.total > 0
+    assert l_ref.shape == (2, cfg.layer_sizes[-1])
+    # serving mode: conv front-end still chains, no raster outputs
+    l_srv, r_srv, c_srv = snn.lenet_apply_int(params, x, cfg,
+                                              backend="pallas",
+                                              interpret=True,
+                                              emit_rasters=False)
+    assert r_srv is None and c_srv is None
+    np.testing.assert_array_equal(np.asarray(l_srv), np.asarray(l_ref))
+
+
 def test_serving_mode_skips_rasters():
     """emit_rasters=False returns the same final V with no raster outputs
     (the inter-layer-spikes-never-touch-HBM serving configuration)."""
@@ -148,16 +242,22 @@ def test_serving_mode_skips_rasters():
                                   np.asarray(full.v_out))
 
 
-@pytest.mark.parametrize("neuron", ["if", "lif", "rmp"])
-def test_instruction_counts_match_bitmacro_counts(neuron):
+@pytest.mark.parametrize("neuron,layer_sizes", [
+    ("if", (100, 128, 128, 1)),
+    ("lif", (100, 128, 128, 1)),
+    ("rmp", (100, 128, 128, 1)),
+    ("rmp", (130, 140, 12, 1)),     # row-tiled: AccV2V reduction cycles
+])
+def test_instruction_counts_match_bitmacro_counts(neuron, layer_sizes):
     """Cross-check the two instruction-counting paths on wrap-mode programs:
     the program-level raster pass (count_network_instructions) vs the
     cycle-by-cycle tally the bit-level macro model keeps while executing
-    (aux['macro_counts']). The bitmacro executes only the spiking layers
+    (aux['macro_counts']) — including the AccV2V partial-sum reduction term
+    on fan-in-split layers. The bitmacro executes only the spiking layers
     (the readout accumulate is word-level), so the raster pass restricted
     to spiking layers must equal the silicon tally exactly."""
     from repro.core import isa
-    cfg, params, x = _make((100, 128, 128, 1), neuron, 2, 3, seed=11)
+    cfg, params, x = _make(layer_sizes, neuron, 2, 3, seed=11)
     program = pipeline.compile_network(cfg, params, domain="int",
                                        clamp_mode="wrap")
     xs = pipeline.present_words(x, cfg.timesteps)
@@ -175,6 +275,42 @@ def test_instruction_counts_match_bitmacro_counts(neuron):
     counts += isa.count_layer_instructions(
         np.asarray(res.rasters[-1]), readout.n_in, readout.n_out, "none")
     assert total == counts
+
+
+@pytest.mark.parametrize("neuron", ["if", "lif", "rmp"])
+def test_bitmacro_accv2v_reduction_golden(neuron):
+    """The multi-macro golden test: a fan-in-split layer (200 -> 20, two row
+    tiles x two col tiles) executed on the bit-level macro bank — partial
+    sums reduced across macros with AccV2V — equals the single-accumulate
+    word-level semantics (isa.layer_timestep_int, one virtual 200-row
+    macro) bit for bit, and the executed cycle tally equals the analytic
+    `isa.count_layer_instructions` pass (its row_tiles-1 AccV2V reduction
+    term) exactly."""
+    from repro.core import isa
+    from repro.core.pipeline import _bitmacro_layer
+    rng = np.random.default_rng(5)
+    n_in, n_out, T, F = 200, 20, 4, 3
+    wq = rng.integers(-31, 32, (n_in, n_out)).astype(np.int8)
+    inp = (rng.random((T, F, n_in)) < 0.3)
+    th, leak = 60, 2
+    out, v, counts = _bitmacro_layer(inp, wq, th, leak, neuron)
+
+    v_ref = jnp.zeros((F, n_out), jnp.int32)
+    for t in range(T):
+        v_ref, s_ref = isa.layer_timestep_int(
+            v_ref, jnp.asarray(wq), jnp.asarray(inp[t], jnp.int32),
+            neuron=neuron, threshold=jnp.int32(th), leak=jnp.int32(leak),
+            reset=jnp.int32(0), clamp_mode="wrap")
+        np.testing.assert_array_equal(out[t], np.asarray(s_ref, np.int8),
+                                      err_msg=f"t={t}")
+    np.testing.assert_array_equal(v, np.asarray(v_ref))
+
+    analytic = isa.count_layer_instructions(inp.astype(np.int8),
+                                            n_in, n_out, neuron)
+    assert counts == analytic, (counts, analytic)
+    # the reduction term itself: 2 cycles * (row_tiles-1) * col_tiles * T*F
+    base = {"rmp": 2, "lif": 2, "if": 0}[neuron] * 2 * T * F
+    assert counts.acc_v2v == base + 2 * 1 * 2 * T * F
 
 
 def test_sparsity_report_counting_paths_agree():
@@ -228,6 +364,35 @@ def test_measured_edp_matches_analytic_on_single_macro(sparsity):
         energy.measured_edp_per_neuron_timestep(rep.instruction_counts(), 0)
 
 
+def test_conv_counting_paths_agree():
+    """Conv programs: raster counting == report counting == collect_sums
+    counting (patch events via im2col linearity), with per-layer frame
+    counts (T*B*P for convs) feeding the same instruction counter the
+    executors are checked against."""
+    cfg, params, x = _make_conv(LENET_S, "rmp", batch=2, seed=9)
+    program = pipeline.compile_network(cfg, params, domain="int")
+    xs = pipeline.present_static(x, cfg.timesteps)
+    res = pipeline.run_network(program, xs, "int_ref")
+    rep = pipeline.sparsity_report(program, res.rasters)
+    c_raster = pipeline.count_network_instructions(program, res.rasters)
+    assert pipeline.count_network_instructions(program, report=rep) == c_raster
+    # conv layers run one frame per (timestep, example, output position)
+    T, B = xs.shape[:2]
+    conv = program.int_conv_stack[0]
+    p = conv.state_shape[0] * conv.state_shape[1]
+    assert rep.frames_by_layer[0] == T * B * p
+    assert rep.frames_by_layer[-1] == T * B
+    assert rep.macro_timesteps > 0 and 0.0 <= rep.overall_sparsity <= 1.0
+    # raster-free path: float backend spike-count sums (maps for convs)
+    resf = pipeline.run_network(program, xs, "float", collect_sums=True)
+    rep_sums = pipeline.sparsity_report_from_sums(
+        program, resf.aux["spike_sums"], T)
+    assert rep_sums.events == rep.events
+    assert rep_sums.layer_frames == rep.layer_frames
+    assert pipeline.count_network_instructions(program,
+                                               report=rep_sums) == c_raster
+
+
 def test_sparsity_report_error_paths():
     cfg, params, _ = _make((37, 50, 20, 3), "rmp", 2, 2)
     program = pipeline.compile_network(cfg, params, domain="int")
@@ -237,6 +402,40 @@ def test_sparsity_report_error_paths():
         pipeline.count_network_instructions(program)
     with pytest.raises(ValueError):
         pipeline.sparsity_report_from_sums(program, [np.zeros((2, 50))], 3)
+    with pytest.raises(ValueError):
+        pipeline.count_network_instructions(program, [np.zeros((3, 2, 50))])
+
+
+def test_error_paths_name_the_config():
+    """The -O-safe ValueError convention on the former NotImplementedError
+    sites: a stack led by neither an encoder nor a conv names the offending
+    layer kind; the fc-only raster entry point rejects conv programs."""
+    cfg, params, x = _make((37, 50, 20, 3), "rmp", 2, 2)
+    program = pipeline.compile_network(cfg, params, domain="int")
+    headless = dataclasses.replace(program, layers=program.layers[1:])
+    with pytest.raises(ValueError, match="kind='fc'"):
+        pipeline.encode(headless, jnp.zeros((2, 2, 37)))
+    ccfg, cparams, cx = _make_conv(LENET_S, "rmp", batch=1)
+    cprogram = pipeline.compile_network(ccfg, cparams, domain="int")
+    with pytest.raises(ValueError, match="conv"):
+        pipeline.run_stack_from_raster(
+            cprogram, jnp.zeros((2, 1, 8, 8, 4), jnp.int8))
+    # conv stacks now COMPILE in the int domain (the former
+    # NotImplementedError at the compile gate) and execute end to end
+    assert cprogram.domain == "int" and len(cprogram.int_conv_stack) == 1
+
+
+def test_fused_net_readout_flag_validation():
+    from repro.kernels.fused_snn_net.ops import fused_snn_net
+    spikes = jnp.zeros((2, 2, 16), jnp.int8)
+    ws = [jnp.zeros((16, 8), jnp.int8)]
+    with pytest.raises(ValueError, match="threshold"):
+        fused_snn_net(spikes, ws, thresholds=(), leaks=(), readout=False,
+                      use_pallas=False)
+    # readout=False: one threshold per layer, all layers spiking
+    rasters, vs, _ = fused_snn_net(spikes, ws, thresholds=(5,), leaks=(0,),
+                                   readout=False, use_pallas=False)
+    assert len(rasters) == 1 and len(vs) == 1
 
 
 def test_rate_coded_program_matches_manual_loop():
