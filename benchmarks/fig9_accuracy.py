@@ -4,9 +4,10 @@ LSTM at 8.5x fewer parameters. Synthetic structure-matched data when real
 IMDB is absent (DESIGN.md §8.2)."""
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import emit, time_call
 from repro.configs.impulse_snn import IMDB
@@ -20,8 +21,6 @@ BATCH = 128
 WORDS = 12
 # DIET-SNN threshold init 0.5 (thresholds are trainable; lower init gives
 # finer rate coding over 10 timesteps)
-import dataclasses
-from repro.configs.base import SpikingConfig
 IMDB_T = dataclasses.replace(IMDB, spiking=dataclasses.replace(IMDB.spiking, threshold=0.5))
 
 

@@ -1,25 +1,31 @@
-"""Event-gated vs dense execution of the fused SNN network kernel.
+"""Event-gated vs dense execution of the fused SNN network kernel, across
+gating granularities.
 
 Sweeps synthetic input sparsity 0 -> 0.95 plus the trained IMDB encoder
-raster through both execution paths and reports wall-clock and the
-skipped-tile fraction (the fraction of (timestep, layer, batch-tile) MXU
-matmuls the gate eliminated).
+raster through the execution paths and reports wall-clock plus the
+skipped-work fraction at every gate granularity: whole-tile (`tile`,
+fraction of (timestep, layer, batch-tile) MXU matmuls eliminated),
+row-block (`blockG`, fraction of 128/G-lane partial matmuls eliminated),
+and the spike-list compaction executor (`events`, fraction of silent
+(frame, input-row) pairs — the upper bound any gate can reach, and what
+event-driven silicon skips).
 
-Granularity matters: the kernel gates whole (timestep, batch-tile) spike
-tiles, so unstructured (iid Bernoulli) sparsity almost never yields an
-all-silent 128-lane tile — a 0.85-sparse iid raster skips ~nothing. Real
-SNN rasters are temporally bursty (words arrive, then the net goes quiet),
-which is the structure the gate exploits. The synthetic generator therefore
-factors sparsity into (active-timestep probability) x (within-frame lane
-density): at 85% sparsity, 30% of timesteps carry spikes at 50% density —
-the same overall event count an iid raster would have, but event-driven
-hardware (and this kernel) can skip the silent 70%. A `bernoulli` row is
-emitted alongside as the honest granularity control.
+Granularity matters: a whole-tile gate needs an all-silent 128-lane tile,
+so unstructured (iid Bernoulli) sparsity at 0.85 skips ~nothing there —
+but the event-list executor skips exactly 85% of row work on the same
+raster, and row blocks recover most of the win whenever silence clusters
+in lanes. The synthetic generator therefore emits three structures:
+``temporal`` (silence concentrates in whole timesteps — the bursty shape
+trained SNN rasters exhibit; any granularity skips it), ``bernoulli``
+(iid events — only the event list exploits it), and ``spatial`` (activity
+clusters in a lane span, as in im2col patch rasters of dim image borders —
+row blocks exploit it, whole tiles cannot).
 
 Wall-clock notes: the `ref` rows time the jit'd lax.cond-gated scan on the
 host (real skipped work); `pallas` interpret-mode timing on a shared CPU is
 noisy and only the TPU target measures the kernel's real latency — the
-skipped-tile fraction is the stable, machine-independent signal.
+skipped-work fractions are the stable, machine-independent signals (pinned
+against a committed baseline by tools/bench_gate.py in CI).
 """
 from __future__ import annotations
 
@@ -28,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_call
+from repro.kernels.fused_snn_net.events import fused_snn_net_events
 from repro.kernels.fused_snn_net.ops import fused_snn_net
 
 SWEEP = (0.0, 0.25, 0.5, 0.75, 0.85, 0.95)
@@ -40,11 +47,19 @@ def synthetic_raster(rng, T: int, B: int, N: int, sparsity: float,
     ``temporal``: silence concentrates in whole timesteps (active-timestep
     probability p_t, within-frame density d, p_t * d = 1 - sparsity) — the
     bursty structure trained SNN rasters exhibit. ``bernoulli``: iid events
-    (the granularity control; tile-level gating cannot exploit it)."""
+    (the granularity control; tile-level gating cannot exploit it).
+    ``spatial``: events cluster in a leading lane span (span fraction p_l,
+    within-span density d, p_l * d = 1 - sparsity) — the structure row-
+    block gating exploits and whole-tile gating cannot."""
     occ = 1.0 - sparsity
     if structure == "bernoulli":
         return (rng.random((T, B, N)) < occ).astype(np.int8)
     density = max(occ, 0.5)
+    if structure == "spatial":
+        span = max(1, round(occ / density * N))
+        frames = np.zeros((T, B, N), np.int8)
+        frames[:, :, :span] = rng.random((T, B, span)) < density
+        return frames
     p_t = occ / density
     active_t = rng.random(T) < p_t
     frames = (rng.random((T, B, N)) < density).astype(np.int8)
@@ -57,8 +72,33 @@ def _stack(rng, n0: int = 128, hidden: int = 128, n_out: int = 2) -> list:
 
 
 def _skip_fraction(skips, timesteps: int) -> float:
+    """Fraction of gate sites skipped: (tile, layer) pairs at granularity 1
+    (one array), (tile, layer, block) triples at finer granularities (a
+    per-layer list of arrays — block sites weight by count, which tracks
+    work because blocks within a layer are equal-width)."""
+    if isinstance(skips, list):
+        total = sum(int(np.asarray(s).sum()) for s in skips)
+        sites = sum(np.asarray(s).shape[0] * np.asarray(s).shape[1]
+                    for s in skips)
+        return float(total) / float(timesteps * sites)
     s = np.asarray(skips)
     return float(s.sum()) / float(timesteps * s.shape[0] * s.shape[1])
+
+
+def _granularity_fractions(spikes, ws, kw, T: int, block_b: int,
+                           grans: tuple) -> str:
+    """One raster, every gate granularity: tile (G=1), row blocks, and the
+    event-list executor's skipped-row fraction (the upper bound)."""
+    parts = []
+    for g in (1,) + tuple(grans):
+        _, _, skips = fused_snn_net(spikes, ws, interpret=True,
+                                    block_b=block_b, use_sparse=True,
+                                    gate_granularity=g, **kw)
+        name = "tile" if g == 1 else f"block{g}"
+        parts.append(f"{name}={_skip_fraction(skips, T):.3f}")
+    _, _, stats = fused_snn_net_events(np.asarray(spikes), ws, **kw)
+    parts.append(f"events={stats.skipped_row_fraction:.3f}")
+    return " ".join(parts)
 
 
 def run(quick: bool = False) -> list[str]:
@@ -92,13 +132,19 @@ def run(quick: bool = False) -> list[str]:
             f"dense_us={us_d:.1f} speedup={us_d/us_g:.2f}x "
             f"skipped_tiles={frac:.3f} measured_sparsity={meas:.3f}"))
 
-    # granularity control: iid events at 85% sparsity gate ~nothing
-    spikes = jnp.asarray(synthetic_raster(rng, T, B, 128, 0.85, "bernoulli"))
-    _, _, skips = fused_snn_net(spikes, ws, interpret=True, block_b=block_b,
-                                use_sparse=True, **kw)
-    rows.append(emit("gating_bernoulli_85", 0.0,
-                     f"skipped_tiles={_skip_fraction(skips, T):.3f} "
-                     "(iid events defeat tile-level gating)"))
+    # granularity sweep at 85% sparsity: tile vs row-block vs event-list
+    # across the three raster structures. ``bernoulli`` (iid) is the
+    # acceptance row: tile gating skips ~nothing, the event list skips the
+    # full 0.85 of row work; ``spatial`` is where row blocks recover most
+    # of the event-list bound; ``temporal`` is skippable at any
+    # granularity.
+    grans = (8,) if quick else (2, 4, 8)
+    for structure in ("temporal", "bernoulli", "spatial"):
+        spikes = jnp.asarray(synthetic_raster(rng, T, B, 128, 0.85,
+                                              structure))
+        rows.append(emit(
+            f"gating_granularity_{structure}_85", 0.0,
+            _granularity_fractions(spikes, ws, kw, T, block_b, grans)))
 
     # pallas interpret wall-clock (noisy on CPU; TPU is the target)
     if not quick:
@@ -188,12 +234,25 @@ def _imdb_rows(quick: bool) -> list[str]:
     res = pipeline.run_network(program, xs, "pallas_sparse", interpret=True,
                                block_b=4)
     rep = pipeline.sparsity_report(program, res.rasters)
-    return [emit(
+    rows = [emit(
         "gating_imdb_trained", 0.0,
         f"skipped_tiles={res.aux['skipped_tile_fraction']:.3f} "
         f"input_sparsity={rep.layer_sparsity[0]:.3f} "
         f"overall_sparsity={rep.overall_sparsity:.3f} "
         f"silent_steps={rep.silent_timestep_fraction[0]:.3f}")]
+    # the same trained raster under the finer gates: row blocks vs the
+    # event-list bound (== the report's skipped-row fraction) — the row
+    # that motivated sub-tile gating in the first place
+    res8 = pipeline.run_network(program, xs, "pallas_sparse",
+                                interpret=True, block_b=4,
+                                gate_granularity=8)
+    ev = pipeline.run_network(program, xs, "ref_events")
+    rows.append(emit(
+        "gating_imdb_granularity", 0.0,
+        f"tile={res.aux['skipped_tile_fraction']:.3f} "
+        f"block8={res8.aux['skipped_block_fraction']:.3f} "
+        f"events={ev.aux['skipped_row_fraction']:.3f}"))
+    return rows
 
 
 if __name__ == "__main__":

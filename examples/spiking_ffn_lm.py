@@ -22,7 +22,6 @@ from repro.core import energy, mapping
 from repro.core.isa import InstrCount
 from repro.data import lm_batch_fn
 from repro.models import lm
-from repro.optim import make_optimizer
 from repro.train import init_train_state, make_train_step
 
 

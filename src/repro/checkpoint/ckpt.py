@@ -149,10 +149,10 @@ class CheckpointManager:
             assert like_keys == manifest["keys"], "checkpoint/tree mismatch"
             if shardings is not None:
                 _, shard_leaves, _ = _flatten_with_paths(shardings)
-                leaves = [jax.device_put(x.astype(l.dtype), s)
-                          for x, l, s in zip(leaves, like_leaves, shard_leaves)]
+                leaves = [jax.device_put(x.astype(lk.dtype), s)
+                          for x, lk, s in zip(leaves, like_leaves, shard_leaves)]
             else:
-                leaves = [jax.device_put(x.astype(l.dtype))
-                          for x, l in zip(leaves, like_leaves)]
+                leaves = [jax.device_put(x.astype(lk.dtype))
+                          for x, lk in zip(leaves, like_leaves)]
             return step, jax.tree_util.tree_unflatten(treedef, leaves)
         return step, leaves

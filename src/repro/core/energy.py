@@ -20,8 +20,6 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
-import numpy as np
-
 from repro.core.isa import MACRO_IN, MACRO_OUT, InstrCount
 
 PJ = 1e-12
@@ -137,6 +135,24 @@ def measured_edp_per_neuron_timestep(counts: InstrCount, macro_timesteps: int,
         raise ValueError("macro_timesteps must be positive")
     avg = InstrCount(*(c / macro_timesteps for c in counts))
     return sequence_edp(avg, point) / MACRO_OUT
+
+
+def measured_edp_reduction(executed: InstrCount, skipped: InstrCount,
+                           point: OperatingPoint = POINT_D) -> float:
+    """Fractional EDP reduction a measured workload realized through
+    event-driven skipping, at row granularity: ``executed`` is the tally
+    the pipeline counted (`SparsityReport.instruction_counts`), ``skipped``
+    the silent-row AccW2V cycles it never issued
+    (`SparsityReport.skipped_instruction_counts` /
+    `isa.count_skipped_instructions_from_events`). Their sum is the dense
+    zero-sparsity tally, so this is the measured counterpart of
+    `edp_reduction(s)` — Fig. 11b from executed event counts rather than a
+    swept parameter, and tracking *row* skips (what the silicon skips)
+    rather than tile-gate statistics."""
+    dense = executed + skipped
+    if dense.total == 0:
+        raise ValueError("empty instruction tally (executed + skipped == 0)")
+    return 1.0 - sequence_edp(executed, point) / sequence_edp(dense, point)
 
 
 def tops_per_watt(point: OperatingPoint) -> float:

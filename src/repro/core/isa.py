@@ -16,14 +16,14 @@ Macro geometry (the fabricated 65nm instance):
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.quant import V_MAX, V_MIN, clamp_v, spike_compare
+from repro.core.quant import clamp_v, spike_compare
 
 MACRO_IN = 128          # input rows
 MACRO_OUT = 12          # weights (output neurons) per row
@@ -256,6 +256,29 @@ def count_layer_instructions_from_events(total_events: int, batch_t: int,
                   "none": InstrCount()}[neuron]
     upd = InstrCount(*(x * tiles.col_tiles * batch_t for x in per_update))
     return cnt + upd
+
+
+def count_skipped_instructions_from_events(total_events: int, batch_t: int,
+                                           n_in: int, n_out: int
+                                           ) -> InstrCount:
+    """Instruction cycles event-driven execution *never issues* for a
+    (n_in -> n_out) FC layer: every silent (frame, input-row) pair would
+    have cost 2 AccW2V cycles per column tile on a dense scan. This is the
+    row-granular skip model of Fig. 11b — the complement of
+    `count_layer_instructions_from_events`, so
+
+        executed + skipped == the dense tally at sparsity 0
+
+    holds exactly (neuron-update and AccV2V-reduction cycles are
+    unconditional and appear only on the executed side)."""
+    from repro.core import mapping
+    silent = batch_t * n_in - int(total_events)
+    if silent < 0:
+        raise ValueError(f"event count {total_events} exceeds the "
+                         f"{batch_t * n_in} (frame, row) sites of a "
+                         f"{n_in}->{n_out} layer over {batch_t} frames")
+    tiles = mapping.fc_tiling(n_in, n_out)
+    return InstrCount(acc_w2v=2 * silent * tiles.col_tiles)
 
 
 def count_layer_instructions(spike_raster: np.ndarray, n_in: int, n_out: int,

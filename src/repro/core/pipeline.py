@@ -94,15 +94,15 @@ class SNNProgram:
     @property
     def fc_stack(self) -> tuple:
         """The FC part of the on-macro stack: spiking FCs + readout."""
-        return tuple(l for l in self.layers if l.kind in ("fc", "readout"))
+        return tuple(ly for ly in self.layers if ly.kind in ("fc", "readout"))
 
     @property
     def int_conv_stack(self) -> tuple:
         """On-macro conv layers (int domain only: quantized, scale set).
         The first conv of a stack is the off-macro encoder and never
         appears here."""
-        return tuple(l for l in self.layers
-                     if l.kind == "conv" and l.scale is not None)
+        return tuple(ly for ly in self.layers
+                     if ly.kind == "conv" and ly.scale is not None)
 
     @property
     def macro_stack(self) -> tuple:
@@ -114,7 +114,7 @@ class SNNProgram:
     @property
     def neuron_layers(self) -> tuple:
         """Layers with membrane dynamics that emit spikes."""
-        return tuple(l for l in self.layers if l.kind != "readout")
+        return tuple(ly for ly in self.layers if ly.kind != "readout")
 
     def logits(self, v_out: jax.Array) -> jax.Array:
         """Readout V -> float logits (undo the last layer's weight scale)."""
@@ -460,19 +460,26 @@ def _stack_kernel_args(program: SNNProgram) -> dict:
 
 def _run_fc_stack(program: SNNProgram, spikes: jax.Array, *, use_pallas: bool,
                   use_sparse: bool, block_b: int, interpret: bool,
-                  emit_rasters: bool):
-    from repro.kernels.fused_snn_net.ops import fused_snn_net
+                  emit_rasters: bool, gate_granularity: int = 1,
+                  use_events: bool = False):
     kw = _stack_kernel_args(program)
+    if use_events:
+        from repro.kernels.fused_snn_net.events import fused_snn_net_events
+        return fused_snn_net_events(spikes, kw.pop("ws"),
+                                    emit_rasters=emit_rasters, **kw)
+    from repro.kernels.fused_snn_net.ops import fused_snn_net
     return fused_snn_net(
         spikes, kw.pop("ws"), use_pallas=use_pallas,
-        use_sparse=use_sparse, block_b=block_b, interpret=interpret,
+        use_sparse=use_sparse, gate_granularity=gate_granularity,
+        block_b=block_b, interpret=interpret,
         emit_rasters=emit_rasters, **kw)
 
 
 def run_stack_from_raster(program: SNNProgram, spikes_enc: jax.Array, *,
                           use_pallas: bool = False, use_sparse: bool = False,
                           block_b: int = 8, interpret: bool = False,
-                          emit_rasters: bool = True):
+                          emit_rasters: bool = True,
+                          gate_granularity: int = 1):
     """Execute only the on-macro fc stack on a supplied encoder spike raster
     (T_total, B, d) int8 — the public raster-in entry point that
     raster-driven benchmarks (synthetic sparsity sweeps) share with the
@@ -487,24 +494,28 @@ def run_stack_from_raster(program: SNNProgram, spikes_enc: jax.Array, *,
                          "through run_network (int_ref/pallas backends)")
     rasters, v_stack, skips = _run_fc_stack(
         program, spikes_enc, use_pallas=use_pallas, use_sparse=use_sparse,
-        block_b=block_b, interpret=interpret, emit_rasters=emit_rasters)
+        gate_granularity=gate_granularity, block_b=block_b,
+        interpret=interpret, emit_rasters=emit_rasters)
     full = [spikes_enc] + list(rasters) if emit_rasters else None
     return full, list(v_stack), skips
 
 
 def _conv_front_end(program: SNNProgram, spikes_enc: jax.Array, *,
                     use_pallas: bool, use_sparse: bool, block_b: int,
-                    interpret: bool):
+                    interpret: bool, gate_granularity: int = 1,
+                    use_events: bool = False):
     """Run the on-macro int conv layers on encoder spike maps. Each conv
     layer lowers onto the macro grid via im2col (mapping.py): its
     (T, B, H, W, C) input maps become a (T, B*P, k*k*C) patch raster —
     one frame per (example, output position), each claiming a V_MEM neuron
     set — executed by the same fused_snn_net machinery as the fc stack
-    (readout=False), so the Pallas kernel, the jnp reference, and event
-    gating all serve conv programs unchanged. Returns (maps, v_convs,
-    conv_skips): per-layer output spike maps (T, B, H_out, W_out, C_out)
-    int8, final V maps, and per-layer gate counts (None entries when
-    dense)."""
+    (readout=False), so the Pallas kernel, the jnp reference, event gating
+    at any granularity, and the event-list executor all serve conv
+    programs unchanged. Returns (maps, v_convs, conv_skips): per-layer
+    output spike maps (T, B, H_out, W_out, C_out) int8, final V maps, and
+    per-layer gate counts (None entries when dense; `events.EventStats`
+    entries on the event-list path)."""
+    from repro.kernels.fused_snn_net.events import fused_snn_net_events
     from repro.kernels.fused_snn_net.ops import fused_snn_net
     maps, v_convs, conv_skips = [], [], []
     cur = spikes_enc
@@ -513,56 +524,108 @@ def _conv_front_end(program: SNNProgram, spikes_enc: jax.Array, *,
         patches = mapping.im2col_raster(cur, spec.w.shape[0], spec.stride)
         out_hw = mapping.conv_out_hw(cur.shape[2:4], spec.w.shape[0],
                                      spec.stride)
-        rasters, v, skips = fused_snn_net(
-            patches.astype(jnp.int8),
-            [jnp.asarray(mapping.pack_conv_weights(spec.w))],
-            thresholds=(int(spec.threshold),), leaks=(int(spec.leak),),
-            neuron=program.neuron, clamp_mode=program.clamp_mode,
-            readout=False, use_pallas=use_pallas, use_sparse=use_sparse,
-            block_b=block_b, interpret=interpret, emit_rasters=True)
+        kw = dict(thresholds=(int(spec.threshold),), leaks=(int(spec.leak),),
+                  neuron=program.neuron, clamp_mode=program.clamp_mode,
+                  readout=False, emit_rasters=True)
+        if use_events:
+            rasters, v, skips = fused_snn_net_events(
+                patches.astype(jnp.int8),
+                [np.asarray(mapping.pack_conv_weights(spec.w))], **kw)
+            rasters = [jnp.asarray(r) for r in rasters]
+        else:
+            rasters, v, skips = fused_snn_net(
+                patches.astype(jnp.int8),
+                [jnp.asarray(mapping.pack_conv_weights(spec.w))],
+                use_pallas=use_pallas, use_sparse=use_sparse,
+                gate_granularity=gate_granularity, block_b=block_b,
+                interpret=interpret, **kw)
         cur = rasters[0].reshape(t_total, batch, *out_hw, spec.n_out)
         maps.append(cur)
-        v_convs.append(v[0].reshape(batch, *out_hw, spec.n_out))
+        v_convs.append(jnp.asarray(v[0]).reshape(batch, *out_hw, spec.n_out))
         conv_skips.append(skips)
     return maps, v_convs, conv_skips
 
 
 def _run_macro_stack(program: SNNProgram, xs: jax.Array, *, use_pallas: bool,
                      use_sparse: bool, block_b: int = 8,
-                     interpret: bool = False, emit_rasters: bool = True
+                     interpret: bool = False, emit_rasters: bool = True,
+                     gate_granularity: int = 1, use_events: bool = False
                      ) -> NetResult:
-    """Shared int_ref/pallas executor: float encoder pass, then the on-macro
-    conv front-end (when present), then the fused fc stack."""
+    """Shared int_ref/pallas/ref_events executor: float encoder pass, then
+    the on-macro conv front-end (when present), then the fused fc stack."""
     spikes_enc, v_enc = encode(program, xs)
     conv_maps, v_convs, conv_skips = _conv_front_end(
         program, spikes_enc, use_pallas=use_pallas, use_sparse=use_sparse,
+        gate_granularity=gate_granularity, use_events=use_events,
         block_b=block_b, interpret=interpret)
     last = conv_maps[-1] if conv_maps else spikes_enc
     flat = last.reshape(*last.shape[:2], -1) if last.ndim > 3 else last
     rasters_fc, v_stack, skips = _run_fc_stack(
         program, flat, use_pallas=use_pallas, use_sparse=use_sparse,
+        gate_granularity=gate_granularity, use_events=use_events,
         block_b=block_b, interpret=interpret, emit_rasters=emit_rasters)
     # rasters[i] = the input raster of macro-stack layer i: spike maps for
     # the conv part (the last conv's map doubles, flattened, as fc input)
     full = ([spikes_enc] + conv_maps + list(rasters_fc)
             if emit_rasters else None)
-    res = _assemble(program, full, v_enc, list(v_convs) + list(v_stack))
-    res = _attach_skips(res, skips, xs.shape[0])
+    res = _assemble(program, full, v_enc,
+                    list(v_convs) + [jnp.asarray(v) for v in v_stack])
+    if use_events:
+        return _attach_event_stats(res, conv_skips, skips)
+    res = _attach_skips(res, skips, xs.shape[0], gate_granularity)
     if use_sparse and conv_skips:
-        res.aux["conv_skip_counts"] = [np.asarray(s) for s in conv_skips]
+        res.aux["conv_skip_counts"] = [
+            [np.asarray(b) for b in s] if isinstance(s, list)
+            else np.asarray(s) for s in conv_skips]
     return res
 
 
-def _attach_skips(res: NetResult, skips, timesteps: int) -> NetResult:
-    """Stash event-gating statistics on a result: raw per-(tile, layer)
-    skipped-matmul counts plus the aggregate skipped-tile fraction (each of
-    the n_tiles * n_layers gate sites fires once per timestep)."""
+def _site_count(s: np.ndarray) -> int:
+    """Gate sites per timestep of one skip-count array: tiles x columns."""
+    return s.shape[0] * s.shape[1]
+
+
+def _attach_skips(res: NetResult, skips, timesteps: int,
+                  granularity: int = 1) -> NetResult:
+    """Stash event-gating statistics on a result: raw skipped-matmul counts
+    plus the aggregate skipped-gate fraction (every gate site fires once
+    per timestep). At granularity 1 sites are (tile, layer) pairs and the
+    fraction keeps its historical name ``skipped_tile_fraction``; at finer
+    granularities sites are (tile, layer, row-block) triples, counts come
+    as a per-layer list, and the aggregate is ``skipped_block_fraction``."""
     if skips is None:
         return res
-    skips = np.asarray(skips)
+    if granularity == 1:
+        skips = np.asarray(skips)
+        res.aux["skip_counts"] = skips
+        res.aux["skipped_tile_fraction"] = float(skips.sum()) / float(
+            timesteps * _site_count(skips))
+        return res
+    skips = [np.asarray(s) for s in skips]
     res.aux["skip_counts"] = skips
-    res.aux["skipped_tile_fraction"] = float(skips.sum()) / float(
-        timesteps * skips.shape[0] * skips.shape[1])
+    sites = sum(_site_count(s) for s in skips)
+    res.aux["skipped_block_fraction"] = float(
+        sum(int(s.sum()) for s in skips)) / float(timesteps * sites)
+    return res
+
+
+def _attach_event_stats(res: NetResult, conv_stats: list, fc_stats
+                        ) -> NetResult:
+    """Fold the per-layer `events.EventStats` of the conv front-end and the
+    fc stack into result aux: per-row event counts, silent-row counts, and
+    the overall skipped-row fraction — the event-list executor's skipped
+    work is exactly its silent (frame, row) pairs."""
+    row_events = [r for st in conv_stats for r in st.row_events]
+    row_events += list(fc_stats.row_events)
+    frames = [st.frames for st in conv_stats for _ in st.row_events]
+    frames += [fc_stats.frames] * len(fc_stats.row_events)
+    skipped = [f * len(r) - int(r.sum()) for f, r in zip(frames, row_events)]
+    possible = sum(f * len(r) for f, r in zip(frames, row_events))
+    res.aux["row_events"] = row_events
+    res.aux["row_event_frames"] = frames
+    res.aux["row_skip_counts"] = skipped
+    res.aux["skipped_row_fraction"] = (sum(skipped) / possible
+                                       if possible else 0.0)
     return res
 
 
@@ -585,10 +648,11 @@ def run_int_ref(program: SNNProgram, xs: jax.Array, *,
 # ---------------------------------------------------------------------------
 
 def _run_pallas(program: SNNProgram, xs: jax.Array, *, block_b: int,
-                interpret: bool, emit_rasters: bool, use_sparse: bool
-                ) -> NetResult:
+                interpret: bool, emit_rasters: bool, use_sparse: bool,
+                gate_granularity: int = 1) -> NetResult:
     return _run_macro_stack(program, xs, use_pallas=True,
                             use_sparse=use_sparse, block_b=block_b,
+                            gate_granularity=gate_granularity,
                             interpret=interpret, emit_rasters=emit_rasters)
 
 
@@ -601,16 +665,37 @@ def run_pallas(program: SNNProgram, xs: jax.Array, *, block_b: int = 8,
 
 @register_backend("pallas_sparse")
 def run_pallas_sparse(program: SNNProgram, xs: jax.Array, *, block_b: int = 8,
-                      interpret: bool = False, emit_rasters: bool = True
-                      ) -> NetResult:
+                      interpret: bool = False, emit_rasters: bool = True,
+                      gate_granularity: int = 1) -> NetResult:
     """Event-gated fused kernel: per (timestep, layer, batch-tile) the MXU
     matmul is predicated on tile occupancy (`@pl.when`), realizing the
-    paper's event-driven AccW2V at tile granularity; the neuron update is
-    unconditional, so results stay bit-identical to every dense backend.
-    aux carries ``skip_counts`` ((B_tiles, n_layers) skipped matmuls) and
-    ``skipped_tile_fraction``."""
+    paper's event-driven AccW2V; the neuron update is unconditional, so
+    results stay bit-identical to every dense backend.
+
+    ``gate_granularity`` is the sub-tile resolution knob: at 1 each layer's
+    whole input tile is one gate (aux: ``skip_counts`` (B_tiles, n_layers)
+    and ``skipped_tile_fraction``); at G in {2, 4, 8} each 128-lane
+    macro-row tile splits into G independently predicated row blocks (aux:
+    ``skip_counts`` as a per-layer list of (B_tiles, n_blocks) arrays and
+    ``skipped_block_fraction``)."""
     return _run_pallas(program, xs, block_b=block_b, interpret=interpret,
-                       emit_rasters=emit_rasters, use_sparse=True)
+                       emit_rasters=emit_rasters, use_sparse=True,
+                       gate_granularity=gate_granularity)
+
+
+@register_backend("ref_events")
+def run_ref_events(program: SNNProgram, xs: jax.Array) -> NetResult:
+    """Spike-list compaction reference (`kernels/fused_snn_net/events`):
+    every (timestep, example) frame is compacted to (indices, count) and
+    AccW2V becomes a gather-matvec over active rows only — work exactly
+    proportional to events, the honest upper bound on skippable work (iid
+    sparsity that defeats tile/block gates is fully exploited) and the
+    word-level contract for per-row skip accounting. Bit-identical to all
+    other backends; aux carries ``row_events`` (per-layer per-input-row
+    event counts), ``row_skip_counts`` (silent (frame, row) pairs), and
+    ``skipped_row_fraction``."""
+    return _run_macro_stack(program, xs, use_pallas=False, use_sparse=False,
+                            use_events=True)
 
 
 # ---------------------------------------------------------------------------
@@ -765,6 +850,10 @@ class SparsityReport:
                                           # layers run T*B*P frames (one per
                                           # output position). None = every
                                           # layer runs ``frames``
+    row_events: Optional[tuple] = None    # per layer: (n_in,) int64 events
+                                          # per input row over all frames —
+                                          # the per-row event columns the
+                                          # ref_events backend also reports
 
     @property
     def frames_by_layer(self) -> tuple:
@@ -806,6 +895,53 @@ class SparsityReport:
                    for ni, no, f in zip(self.n_in, self.n_out,
                                         self.frames_by_layer))
 
+    @property
+    def row_skip_counts(self) -> tuple:
+        """Per layer: silent (frame, input-row) pairs — the AccW2V gate
+        sites an event-driven (row-granular) executor skips. This is the
+        count `ref_events` measures during execution; here it falls out of
+        the raster statistics, and the two are tested equal."""
+        return tuple(f * n - e
+                     for e, n, f in zip(self.events, self.n_in,
+                                        self.frames_by_layer))
+
+    @property
+    def skipped_row_fraction(self) -> float:
+        """Fraction of all (frame, row) gate sites that were silent —
+        numerically ``overall_sparsity``, surfaced under the gating name
+        so benchmark rows and the CI gate read as work skipped."""
+        return self.overall_sparsity
+
+    def block_event_counts(self, granularity: int) -> tuple:
+        """Per layer: (n_blocks,) input-event totals per row block at the
+        requested gate granularity — the same counted blocks
+        `kernel.skip_layout` assigns skip columns to (128/G lanes each at
+        G > 1; the whole input width at 1). A block the kernel's gate ever
+        skipped for the full batch necessarily has zero events here, and
+        each layer's blocks sum back to its total event count."""
+        if self.row_events is None:
+            raise ValueError("block_event_counts needs per-row event "
+                             "columns; build the report from rasters or "
+                             "collect_sums (row_events=None)")
+        from repro.kernels.fused_snn_net.kernel import (GATE_GRANULARITIES,
+                                                        LANE)
+        if granularity not in GATE_GRANULARITIES:
+            raise ValueError(f"gate granularity must be one of "
+                             f"{GATE_GRANULARITIES}, got {granularity}")
+        # per-layer block counts, NOT the joint skip_layout: the kernel
+        # lays out skip columns per fused_snn_net call (each conv layer is
+        # its own call), so the MAX_SKIP_COLS cap must not apply across
+        # the whole macro stack here
+        out = []
+        for rows in self.row_events:
+            rows = np.asarray(rows)
+            bw = len(rows) if granularity == 1 else LANE // granularity
+            nb = -(-len(rows) // bw)
+            padded = np.zeros(nb * bw, rows.dtype)
+            padded[:len(rows)] = rows
+            out.append(padded.reshape(nb, bw).sum(axis=1))
+        return tuple(out)
+
     def instruction_counts(self) -> isa.InstrCount:
         """Event statistics -> instruction cycles (identical to counting the
         rasters directly: both route through
@@ -817,12 +953,24 @@ class SparsityReport:
                 ev, f, ni, no, neuron)
         return counts
 
+    def skipped_instruction_counts(self) -> isa.InstrCount:
+        """Instruction cycles event-driven execution never issued: the
+        AccW2V cycles of every silent (frame, input-row) pair — the
+        row-granular skip model behind the Fig. 11b curve (executed +
+        skipped == the dense tally at sparsity 0)."""
+        counts = isa.InstrCount()
+        for ni, no, ev, f in zip(self.n_in, self.n_out, self.events,
+                                 self.frames_by_layer):
+            counts += isa.count_skipped_instructions_from_events(
+                ev, f, ni, no)
+        return counts
+
 
 def _report_geometry(program: SNNProgram) -> tuple:
     stack = program.macro_stack
-    return (tuple(l.n_in for l in stack), tuple(l.n_out for l in stack),
-            tuple("none" if l.kind == "readout" else program.neuron
-                  for l in stack))
+    return (tuple(ly.n_in for ly in stack), tuple(ly.n_out for ly in stack),
+            tuple("none" if ly.kind == "readout" else program.neuron
+                  for ly in stack))
 
 
 def _stack_input_rasters(program: SNNProgram, rasters: list) -> list:
@@ -865,7 +1013,8 @@ def sparsity_report(program: SNNProgram, rasters: list) -> SparsityReport:
         events=tuple(int(r.sum()) for r in rs),
         frames=T * B, timesteps=T, batch=B,
         occupancy_t=tuple(r.mean(axis=(1, 2)) for r in rs),
-        layer_frames=tuple(T * r.shape[1] for r in rs))
+        layer_frames=tuple(T * r.shape[1] for r in rs),
+        row_events=tuple(r.astype(np.int64).sum(axis=(0, 1)) for r in rs))
 
 
 def sparsity_report_from_sums(program: SNNProgram, spike_sums: list,
@@ -884,7 +1033,7 @@ def sparsity_report_from_sums(program: SNNProgram, spike_sums: list,
         raise ValueError(f"need one spike-sum per macro-stack layer input "
                          f"({len(n_in)}), got {len(spike_sums)}")
     B = int(np.asarray(sums[0]).shape[0])
-    events, layer_frames = [], []
+    events, layer_frames, row_events = [], [], []
     for spec, s in zip(stack, sums):
         s = np.asarray(s)
         if spec.kind == "conv":
@@ -892,16 +1041,18 @@ def sparsity_report_from_sums(program: SNNProgram, spike_sums: list,
                                                 spec.stride))
             # int64 element-wise cast before summing: the f32 counts are
             # integer-valued, but f32 *accumulation* loses exactness > 2^24
-            events.append(int(patches.sum(dtype=np.int64)))
+            rows = patches.astype(np.int64).reshape(-1, spec.n_in).sum(axis=0)
             layer_frames.append(timesteps * B
                                 * patches.shape[1] * patches.shape[2])
         else:
-            events.append(int(s.sum(dtype=np.int64)))
+            rows = s.astype(np.int64).reshape(-1, spec.n_in).sum(axis=0)
             layer_frames.append(timesteps * B)
+        row_events.append(rows)
+        events.append(int(rows.sum()))
     return SparsityReport(
         n_in=n_in, n_out=n_out, neurons=neurons, events=tuple(events),
         frames=timesteps * B, timesteps=timesteps, batch=B,
-        layer_frames=tuple(layer_frames))
+        layer_frames=tuple(layer_frames), row_events=tuple(row_events))
 
 
 def count_network_instructions(program: SNNProgram, rasters: list = None, *,

@@ -46,7 +46,7 @@ def init_fc_snn(key: jax.Array, cfg: SNNModelConfig) -> dict:
 
 
 def param_count(params: dict) -> int:
-    return sum(int(np.prod(l["w"].shape)) for l in params["layers"])
+    return sum(int(np.prod(ly["w"].shape)) for ly in params["layers"])
 
 
 # ---------------------------------------------------------------------------

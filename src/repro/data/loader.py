@@ -14,7 +14,6 @@ import queue
 import threading
 from typing import Callable, Iterator
 
-import numpy as np
 
 
 class ShardedLoader:

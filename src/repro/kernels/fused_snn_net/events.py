@@ -1,0 +1,130 @@
+"""Spike-list compaction reference: the fully event-driven executor.
+
+Event-based CIM designs (and the IMPULSE macro itself, at word level:
+`isa.timestep` walks `np.nonzero(in_spikes)`) do not scan dense frames —
+they consume a compacted event list. This module is that execution model
+for the whole fused stack: every (timestep, example) frame is compacted to
+``(indices, count)`` and the AccW2V accumulate becomes a gather-matvec
+over the **active rows only** — work is exactly proportional to the event
+count, which makes this backend the honest upper bound on skippable work
+(iid-Bernoulli sparsity that defeats tile- and block-level gates is fully
+exploited here) and the word-level contract for per-row skip accounting
+(`isa.count_skipped_instructions_from_events`).
+
+Host/numpy on purpose: the compaction is data-dependent (ragged event
+lists do not jit), and the per-event arithmetic mirrors `quant.clamp_v` /
+`quant.spike_compare` exactly in int32, so results are bit-identical to
+every other backend. Use it for accounting and verification, not
+throughput.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+from repro.core.quant import V_MAX, V_MIN, V_SPAN
+
+
+class EventStats(NamedTuple):
+    """Per-layer event statistics of one event-driven execution."""
+    row_events: tuple          # per layer: (n_in,) int64 events per input row
+    frames: int                # (timestep, example) frames each layer ran
+
+    @property
+    def events(self) -> tuple:
+        """Total input events (== active compacted rows) per layer."""
+        return tuple(int(r.sum()) for r in self.row_events)
+
+    @property
+    def skipped_rows(self) -> tuple:
+        """Silent (frame, input-row) pairs per layer — AccW2V work an
+        event-driven macro never issues."""
+        return tuple(self.frames * len(r) - int(r.sum())
+                     for r in self.row_events)
+
+    @property
+    def skipped_row_fraction(self) -> float:
+        """Fraction of all (frame, row) gate sites that were silent."""
+        possible = sum(self.frames * len(r) for r in self.row_events)
+        return sum(self.skipped_rows) / possible if possible else 0.0
+
+
+def _clamp(v: np.ndarray, mode: str) -> np.ndarray:
+    if mode == "saturate":
+        return np.clip(v, V_MIN, V_MAX)
+    if mode == "wrap":
+        return ((v - V_MIN) % V_SPAN) + V_MIN
+    raise ValueError(f"unknown clamp mode {mode!r}")
+
+
+def _spike(v: np.ndarray, threshold: int, mode: str) -> np.ndarray:
+    if mode == "wrap":             # the comparison itself wraps on silicon
+        return _clamp(v - threshold, "wrap") >= 0
+    return v >= threshold
+
+
+def fused_snn_net_events(spikes, ws, *, thresholds: tuple, leaks: tuple,
+                         neuron: str = "rmp", clamp_mode: str = "saturate",
+                         emit_rasters: bool = True, readout: bool = True):
+    """Event-list execution of the fused stack — same contract as
+    `ops.fused_snn_net` (rasters, v_finals, stats), but the third element
+    is an `EventStats` (per-row event counts) instead of gate-site skip
+    counts: the event list has no tiles or blocks to skip; *every* silent
+    row is skipped by construction.
+
+    Bit-identity argument: the gather-matvec over active rows equals the
+    dense matmul exactly (silent rows multiply weight rows by zero), the
+    accumulate clamps once after the full per-frame sum — the same single
+    clamp-after-accumulate every other backend applies — and the neuron
+    update runs unconditionally every timestep.
+    """
+    spikes = np.asarray(spikes).astype(np.int8)
+    if spikes.ndim != 3:
+        raise ValueError(f"spikes must be (T, B, N), got {spikes.shape}")
+    ws = [np.asarray(w, np.int32) for w in ws]
+    prev = spikes.shape[2]
+    for i, w in enumerate(ws):
+        if w.ndim != 2 or w.shape[0] != prev:
+            raise ValueError(f"layer chain misaligned at ws[{i}]: "
+                             f"{w.shape} after {prev} lanes")
+        prev = w.shape[1]
+    T, B, _ = spikes.shape
+    n_spiking = len(ws) - 1 if readout else len(ws)
+    if len(thresholds) != n_spiking or len(leaks) != n_spiking:
+        raise ValueError(f"need {n_spiking} thresholds/leaks, got "
+                         f"{len(thresholds)}/{len(leaks)}")
+    vs = [np.zeros((B, w.shape[1]), np.int32) for w in ws]
+    row_events = [np.zeros(w.shape[0], np.int64) for w in ws]
+    rasters = [np.zeros((T, B, w.shape[1]), np.int8)
+               for w in ws[:n_spiking]] if emit_rasters else []
+    for t in range(T):
+        cur = spikes[t]
+        for i, w in enumerate(ws):
+            row_events[i] += cur.astype(np.int64).sum(axis=0)
+            acc = np.zeros((B, w.shape[1]), np.int32)
+            for b in range(B):
+                idx = np.flatnonzero(cur[b])        # the compacted frame
+                if idx.size:                        # gather-matvec: work
+                    acc[b] = w[idx].sum(axis=0)     # proportional to events
+            v = vs[i] + acc                         # readout stays unclamped
+            if i >= n_spiking:
+                vs[i] = v
+                continue
+            v = _clamp(v, clamp_mode)
+            th, lk = int(thresholds[i]), int(leaks[i])
+            if neuron == "lif":
+                v = _clamp(v - lk, clamp_mode)
+            fired = _spike(v, th, clamp_mode)
+            if neuron == "rmp":                     # soft reset, gated
+                v = _clamp(np.where(fired, v - th, v), clamp_mode)
+            elif neuron in ("if", "lif"):
+                v = np.where(fired, 0, v)
+            else:
+                raise ValueError(f"unknown neuron {neuron!r}")
+            vs[i] = v.astype(np.int32)
+            cur = fired.astype(np.int8)
+            if emit_rasters:
+                rasters[i][t] = cur
+    stats = EventStats(row_events=tuple(row_events), frames=T * B)
+    return rasters, vs, stats

@@ -21,17 +21,26 @@ output spike stores back — serving uses emit_rasters=False.
 
 Event-gated mode (``sparse=True``) is the execution-side realization of the
 paper's sparsity claim (Fig. 11): per (timestep, layer, batch-tile) the
-kernel reduces the in-VMEM int8 spike tile to an occupancy count and wraps
+kernel reduces the in-VMEM int8 spike tile to occupancy counts and wraps
 the MXU matmul + V accumulate in `@pl.when(count > 0)` — an all-silent tile
 issues zero AccW2V work, exactly like silent input rows issue no AccW2V
-cycles on silicon. The *neuron update* (leak / SpikeCheck / reset) still
-runs every timestep: LIF leaks and RMP can re-fire with zero input, and the
-macro's update sequence is unconditional too (the `u` term in the Fig. 11b
-EDP model) — which is why gating stays bit-identical to the dense kernel.
-Padded lanes/rows are zero-masked before occupancy is taken (their junk
-spikes multiply zero weight rows, so masking changes no visible output but
-keeps silence detection on logical lanes). Skipped-matmul counts per
-(batch-tile, layer) come back as an extra output for the accounting layer.
+cycles on silicon. ``granularity`` selects the gate's sub-tile resolution:
+at 1 a layer's whole input tile is one gate (the original tile gate); at
+G in {2, 4, 8} each 128-lane macro-row tile splits into G row blocks of
+128/G lanes and every block's *partial* matmul is predicated independently.
+Partial sums accumulate unclamped into the same V scratch and the 11-bit
+clamp is applied once after the last block — exactly the dense kernel's
+single clamp-after-accumulate, so row-block gating stays bit-identical in
+both clamp modes (intermediate saturation would not commute). The *neuron
+update* (leak / SpikeCheck / reset) still runs every timestep: LIF leaks
+and RMP can re-fire with zero input, and the macro's update sequence is
+unconditional too (the `u` term in the Fig. 11b EDP model). Padded
+lanes/rows are zero-masked before occupancy is taken (their junk spikes
+multiply zero weight rows, so masking changes no visible output but keeps
+silence detection on logical lanes); row blocks made entirely of padding
+are not emitted at all (a masked block contributes zero) and are excluded
+from the skip count. Skipped-matmul counts per (batch-tile, gate site)
+come back as an extra output — `skip_layout` defines the column map.
 
 Grid: (B // block_b,). The network dimension is NOT gridded: layer widths
 are padded to the 128-lane MXU tile and the whole stack fits VMEM (the
@@ -49,21 +58,60 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.quant import clamp_v, spike_compare
 
-SKIP_LANES = 128    # skip-count output lane width (layer i in column i)
+LANE = 128              # MXU lane tile == the macro's 128-row fan-in
+GATE_GRANULARITIES = (1, 2, 4, 8)
+MAX_SKIP_COLS = 1024    # gate-site columns the skip output will carry
+
+
+def skip_layout(in_widths: tuple, granularity: int
+                ) -> tuple[tuple, tuple, int]:
+    """Column map of the skip-count output: gate site (layer i, block g)
+    reports in column ``offsets[i] + g``.
+
+    ``in_widths``: per-layer *logical* (pre-padding) input widths. At
+    granularity 1 every layer is one gate (whole input tile — the legacy
+    layout, one column per layer); at G > 1 each layer has
+    ceil(width / (128/G)) counted blocks — blocks living entirely in lane
+    padding are never emitted, so they hold no column. Returns
+    (n_cols per layer, column offsets per layer, padded lane width of the
+    output). Raises a ValueError when the layout exceeds ``MAX_SKIP_COLS``
+    (the former fixed 128-lane output silently truncated instead)."""
+    if granularity not in GATE_GRANULARITIES:
+        raise ValueError(f"gate granularity must be one of "
+                         f"{GATE_GRANULARITIES}, got {granularity}")
+    if granularity == 1:
+        n_cols = tuple(1 for _ in in_widths)
+    else:
+        bw = LANE // granularity
+        n_cols = tuple(-(-w // bw) for w in in_widths)
+    total = sum(n_cols)
+    if total > MAX_SKIP_COLS:
+        raise ValueError(
+            f"skip-count layout needs {total} gate columns "
+            f"({len(in_widths)} layers at granularity {granularity}) but the "
+            f"output carries at most MAX_SKIP_COLS={MAX_SKIP_COLS}; lower "
+            "the granularity or split the stack")
+    offsets, off = [], 0
+    for n in n_cols:
+        offsets.append(off)
+        off += n
+    lanes = max(LANE, -(-total // LANE) * LANE)
+    return n_cols, tuple(offsets), lanes
 
 
 def _net_kernel(*refs, n_spiking: int, has_readout: bool, neuron: str,
                 clamp_mode: str, timesteps: int, emit_rasters: bool,
-                sparse: bool, logical_widths: tuple, batch_logical: int,
-                block_b: int):
+                sparse: bool, granularity: int, logical_widths: tuple,
+                batch_logical: int, block_b: int):
     """Ref layout (inputs, outputs, scratch):
       inputs : spikes_ref (T, Bt, N0p) int8; w_refs[i] (Nip, Nop) int8 for
                the n_spiking FCs (+ readout when has_readout); params_ref
                (n_spiking, 2) int32 rows of [threshold, leak];
       outputs: raster_refs[i] (T, Bt, Nop) int8 per spiking FC (only when
                emit_rasters); v_out_refs[i] (Bt, Nop) int32 per layer
-               (readout last); skip_ref (1, SKIP_LANES) int32 (only when
-               sparse) — skipped-matmul count of layer i in column i;
+               (readout last); skip_ref (1, skip_lanes) int32 (only when
+               sparse) — gate site (layer i, block g) counts skipped
+               matmuls in column skip_layout offsets[i] + g;
       scratch: v_refs[i] (Bt, Nop) int32 per layer — the fused V_MEM tiles.
 
     ``has_readout=False`` runs an all-spiking stack (no accumulate-only
@@ -88,6 +136,8 @@ def _net_kernel(*refs, n_spiking: int, has_readout: bool, neuron: str,
     if sparse:
         skip_ref[...] = jnp.zeros_like(skip_ref)
         b0 = pl.program_id(0) * block_b
+        n_cols, col_off, skip_lanes = skip_layout(
+            logical_widths[:n_w], granularity)
 
     def mask_pad(x, n_logical):
         """Zero padded lanes (>= n_logical) and padded batch rows. Padded
@@ -105,29 +155,41 @@ def _net_kernel(*refs, n_spiking: int, has_readout: bool, neuron: str,
         accumulated (clamped; readout unclamped) V value. Dense mode is
         pure compute — the caller stores V once after the neuron update.
         Sparse mode must go through the ref (only ref writes can be
-        predicated): silent tiles skip the matmul + write entirely and the
-        skip counter for layer i bumps instead."""
+        predicated): each of the layer's row blocks (one at granularity 1)
+        issues its partial matmul under `@pl.when(block occupied)`; silent
+        blocks skip the MXU work entirely and bump their skip column.
+        Partials add to V *unclamped*; one clamp after the last block
+        equals the dense single clamp-after-accumulate bit for bit (and a
+        fully silent layer reduces to clamp_v(v), which is idempotent)."""
         if not sparse:
             acc = jax.lax.dot_general(cur, ws[i], (((1,), (0,)), ((), ())),
                                       preferred_element_type=jnp.int32)
             v = v_refs[i][...] + acc
             return clamp_v(v, clamp_mode) if i < n_spiking else v
-        occupied = jnp.sum(cur.astype(jnp.int32)) > 0
+        bw = ws[i].shape[0] if granularity == 1 else LANE // granularity
+        upd = jnp.zeros_like(skip_ref)
+        lane_iota = jax.lax.broadcasted_iota(jnp.int32, (1, skip_lanes), 1)
+        for g in range(n_cols[i]):     # counted blocks cover logical lanes
+            blk = cur[:, g * bw:(g + 1) * bw]
+            occupied = jnp.sum(blk.astype(jnp.int32)) > 0
 
-        @pl.when(occupied)
-        def _do(i=i, cur=cur):
-            acc = jax.lax.dot_general(cur, ws[i], (((1,), (0,)), ((), ())),
-                                      preferred_element_type=jnp.int32)
-            v_refs[i][...] = clamp_v(v_refs[i][...] + acc, clamp_mode) \
-                if i < n_spiking else v_refs[i][...] + acc
+            @pl.when(occupied)
+            def _do(i=i, g=g, blk=blk):
+                acc = jax.lax.dot_general(
+                    blk, ws[i][g * bw:(g + 1) * bw, :],
+                    (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.int32)
+                v_refs[i][...] = v_refs[i][...] + acc
 
-        @pl.when(jnp.logical_not(occupied))
-        def _skip(i=i):
-            col = jax.lax.broadcasted_iota(
-                jnp.int32, (1, SKIP_LANES), 1) == i
-            skip_ref[...] = skip_ref[...] + col.astype(jnp.int32)
-
-        return v_refs[i][...]
+            upd = upd + jnp.where(lane_iota == col_off[i] + g,
+                                  jnp.logical_not(occupied).astype(jnp.int32),
+                                  0)
+        skip_ref[...] = skip_ref[...] + upd
+        v = v_refs[i][...]
+        if i < n_spiking:
+            v = clamp_v(v, clamp_mode)
+        v_refs[i][...] = v
+        return v
 
     def body(t, carry):
         cur = spikes_ref[t]                                    # (Bt, N0p) int8
@@ -166,7 +228,8 @@ def _net_kernel(*refs, n_spiking: int, has_readout: bool, neuron: str,
 def fused_snn_net_pallas(spikes: jax.Array, ws: list, params: jax.Array, *,
                          neuron: str, clamp_mode: str, block_b: int,
                          emit_rasters: bool, interpret: bool = False,
-                         sparse: bool = False, logical_widths: tuple = (),
+                         sparse: bool = False, granularity: int = 1,
+                         logical_widths: tuple = (),
                          batch_logical: int = 0, has_readout: bool = True):
     """Dispatch the network kernel. Shapes must be pre-padded: spikes
     (T, B, N0p) int8 with B % block_b == 0; ws[i] (Nip, Nop) int8 with every
@@ -177,12 +240,15 @@ def fused_snn_net_pallas(spikes: jax.Array, ws: list, params: jax.Array, *,
     ``sparse`` selects the event-gated kernel; it needs ``logical_widths``
     (the pre-padding width of the input raster and of every layer's output,
     len(ws)+1 entries) and ``batch_logical`` (pre-padding B) to mask padding
-    junk out of the occupancy test.
+    junk out of the occupancy test. ``granularity`` sets the gate's
+    sub-tile resolution (`skip_layout`): 1 gates whole input tiles, G in
+    {2, 4, 8} gates row blocks of 128/G lanes independently.
 
     Returns (rasters, v_finals, skips): rasters — list of (T, B, Nop) int8
     per spiking layer ([] when emit_rasters=False); v_finals — list of
-    (B, Nop) int32 per layer, readout last; skips — (B // block_b, len(ws))
-    int32 skipped-matmul counts per (batch tile, layer) in sparse mode,
+    (B, Nop) int32 per layer, readout last; skips — (B // block_b, n_sites)
+    int32 skipped-matmul counts per (batch tile, gate site) in sparse mode
+    (site columns per `skip_layout`; n_sites == len(ws) at granularity 1),
     None otherwise.
     """
     T, B, _ = spikes.shape
@@ -191,10 +257,13 @@ def fused_snn_net_pallas(spikes: jax.Array, ws: list, params: jax.Array, *,
     if sparse and len(logical_widths) != len(ws) + 1:
         raise ValueError("sparse mode needs len(ws)+1 logical widths, got "
                          f"{len(logical_widths)} for {len(ws)} layers")
+    if sparse:
+        n_cols, _, skip_lanes = skip_layout(tuple(logical_widths[:len(ws)]),
+                                            granularity)
     kernel = functools.partial(
         _net_kernel, n_spiking=n_spiking, has_readout=has_readout,
         neuron=neuron, clamp_mode=clamp_mode, timesteps=T,
-        emit_rasters=emit_rasters, sparse=sparse,
+        emit_rasters=emit_rasters, sparse=sparse, granularity=granularity,
         logical_widths=tuple(logical_widths),
         batch_logical=batch_logical, block_b=block_b)
 
@@ -213,8 +282,8 @@ def fused_snn_net_pallas(spikes: jax.Array, ws: list, params: jax.Array, *,
         out_specs.append(pl.BlockSpec((block_b, w.shape[1]), lambda b: (b, 0)))
         out_shape.append(jax.ShapeDtypeStruct((B, w.shape[1]), jnp.int32))
     if sparse:
-        out_specs.append(pl.BlockSpec((1, SKIP_LANES), lambda b: (b, 0)))
-        out_shape.append(jax.ShapeDtypeStruct((B // block_b, SKIP_LANES),
+        out_specs.append(pl.BlockSpec((1, skip_lanes), lambda b: (b, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((B // block_b, skip_lanes),
                                               jnp.int32))
 
     scratch = [pltpu.VMEM((block_b, w.shape[1]), jnp.int32) for w in ws]
@@ -229,7 +298,7 @@ def fused_snn_net_pallas(spikes: jax.Array, ws: list, params: jax.Array, *,
         interpret=interpret,
     )(spikes, *ws, params)
     outs = list(outs)
-    skips = outs.pop()[:, :len(ws)] if sparse else None
+    skips = outs.pop()[:, :sum(n_cols)] if sparse else None
     rasters = outs[:n_spiking] if emit_rasters else []
     v_finals = outs[n_spiking:] if emit_rasters else outs
     return rasters, v_finals, skips

@@ -10,9 +10,15 @@ before returning.
 ``use_sparse`` selects the event-gated execution path (see kernel.py): the
 AccW2V matmul of a layer is skipped whenever its input tile is all-silent,
 while the neuron update still runs every timestep — bit-identical to the
-dense path by construction. Both the Pallas kernel and the pure-jnp
-reference implement the gate (`@pl.when` / `lax.cond`), and both report
-skipped-matmul counts for the accounting layer.
+dense path by construction. ``gate_granularity`` refines the gate below
+the tile: at G in {2, 4, 8} each 128-lane macro-row tile splits into G row
+blocks whose partial matmuls are predicated independently (partials add
+unclamped, one clamp after the last block — still bit-identical). Both the
+Pallas kernel and the pure-jnp reference implement the gate (`@pl.when` /
+`lax.cond`), and both report skipped-matmul counts for the accounting
+layer: a (tiles, n_layers) array at granularity 1, a per-layer list of
+(tiles, n_blocks_i) arrays at finer granularities (block counts vary with
+each layer's fan-in — `kernel.skip_layout`).
 """
 from __future__ import annotations
 
@@ -21,9 +27,19 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.fused_snn_net.kernel import fused_snn_net_pallas
+from repro.kernels.fused_snn_net.kernel import (fused_snn_net_pallas,
+                                                skip_layout)
 
 LANE = 128
+
+
+def _ref_blocks(n_in: int, granularity: int) -> list:
+    """Lane-block spans of one layer's logical input width — the same
+    counted blocks `kernel.skip_layout` assigns skip columns to."""
+    if granularity == 1:
+        return [(0, n_in)]
+    bw = LANE // granularity
+    return [(lo, min(lo + bw, n_in)) for lo in range(0, n_in, bw)]
 
 
 def _pad_axis(x: jax.Array, axis: int, mult: int) -> jax.Array:
@@ -57,13 +73,13 @@ def _check_stack(spikes: jax.Array, ws: list) -> None:
 @partial(jax.jit, static_argnames=("thresholds", "leaks", "neuron",
                                    "clamp_mode", "block_b", "use_pallas",
                                    "interpret", "emit_rasters", "use_sparse",
-                                   "readout"))
+                                   "gate_granularity", "readout"))
 def fused_snn_net(spikes: jax.Array, ws: list, *, thresholds: tuple,
                   leaks: tuple, neuron: str = "rmp",
                   clamp_mode: str = "saturate", block_b: int = 8,
                   use_pallas: bool = True, interpret: bool = False,
                   emit_rasters: bool = True, use_sparse: bool = False,
-                  readout: bool = True):
+                  gate_granularity: int = 1, readout: bool = True):
     """Run a (T, B, N0) encoder spike raster through the whole fc stack.
 
     ``ws``: per-layer int8 weights, spiking FCs first, readout last;
@@ -74,15 +90,27 @@ def fused_snn_net(spikes: jax.Array, ws: list, *, thresholds: tuple,
     Returns (rasters, v_finals, skips): per-spiking-layer output rasters
     (T, B, N_i) int8 (empty list when emit_rasters=False), per-layer
     final V (B, N_i) int32 (readout last), and — in ``use_sparse`` mode —
-    skipped-matmul counts, (B_tiles, n_layers) int32 for the Pallas kernel
-    (one row per batch tile) or (1, n_layers) for the reference (whose
-    gate granularity is the whole batch); ``skips`` is None when dense.
+    skipped-matmul counts; at ``gate_granularity`` 1 a (B_tiles, n_layers)
+    int32 array for the Pallas kernel (one row per batch tile) or
+    (1, n_layers) for the reference (whose tile is the whole batch); at
+    granularity G in {2, 4, 8} a per-layer list of (B_tiles, n_blocks_i)
+    arrays, one column per 128/G-lane row block of that layer's fan-in;
+    ``skips`` is None when dense.
 
     ``use_pallas=False`` selects a pure-jnp reference with identical
     semantics (scan of isa.layer_timestep_int over the stack).
     """
     thresholds, leaks = tuple(thresholds), tuple(leaks)
     _check_stack(spikes, ws)
+    if gate_granularity != 1 and not use_sparse:
+        raise ValueError("gate_granularity is an event-gating knob; pass "
+                         "use_sparse=True to gate at granularity "
+                         f"{gate_granularity}")
+    # validates granularity and enforces the gate-column cap for BOTH
+    # execution paths (the reference mirrors the kernel's counted blocks)
+    widths = (spikes.shape[2],) + tuple(w.shape[1] for w in ws)
+    if use_sparse:
+        n_blocks, _, _ = skip_layout(widths[:len(ws)], gate_granularity)
     n_spiking = len(ws) - 1 if readout else len(ws)
     if len(thresholds) != n_spiking or len(leaks) != n_spiking:
         raise ValueError(
@@ -91,53 +119,69 @@ def fused_snn_net(spikes: jax.Array, ws: list, *, thresholds: tuple,
     if not use_pallas:
         return _fused_snn_net_ref(spikes, ws, thresholds, leaks, neuron,
                                   clamp_mode, emit_rasters, use_sparse,
-                                  readout)
+                                  readout, gate_granularity)
     T, B, N0 = spikes.shape
     s = _pad_axis(_pad_axis(spikes.astype(jnp.int8), 2, LANE), 1, block_b)
     ws_p = [_pad_axis(_pad_axis(w.astype(jnp.int8), 0, LANE), 1, LANE)
             for w in ws]
-    params = jnp.asarray([[t, l] for t, l in zip(thresholds, leaks)],
+    params = jnp.asarray([[t, lk] for t, lk in zip(thresholds, leaks)],
                          jnp.int32).reshape(len(thresholds), 2)
     rasters, v_finals, skips = fused_snn_net_pallas(
         s, ws_p, params, neuron=neuron, clamp_mode=clamp_mode,
         block_b=block_b, emit_rasters=emit_rasters, interpret=interpret,
-        sparse=use_sparse, has_readout=readout,
-        logical_widths=(N0,) + tuple(w.shape[1] for w in ws),
-        batch_logical=B)
+        sparse=use_sparse, granularity=gate_granularity, has_readout=readout,
+        logical_widths=widths, batch_logical=B)
     rasters = [r[:, :B, :w.shape[1]]
                for r, w in zip(rasters, ws[:n_spiking])]
     v_finals = [v[:B, :w.shape[1]] for v, w in zip(v_finals, ws)]
+    if use_sparse and gate_granularity != 1:
+        split, off = [], 0
+        for n in n_blocks:             # site columns -> per-layer arrays
+            split.append(skips[:, off:off + n])
+            off += n
+        skips = split
     return rasters, v_finals, skips
 
 
 def _fused_snn_net_ref(spikes, ws, thresholds, leaks, neuron, clamp_mode,
-                       emit_rasters, use_sparse=False, readout=True):
+                       emit_rasters, use_sparse=False, readout=True,
+                       gate_granularity=1):
     """Pure-jnp oracle: the word-level ISA scanned over the network. In
-    ``use_sparse`` mode the AccW2V matmul of each layer is wrapped in a
-    `lax.cond` on whole-batch occupancy (the reference's tile = the whole
-    batch) and per-layer skipped-step counts ride along."""
+    ``use_sparse`` mode the AccW2V matmul of each lane block (the whole
+    layer at granularity 1) is wrapped in a `lax.cond` on whole-batch
+    occupancy (the reference's tile = the whole batch) and per-(layer,
+    block) skipped-step counts ride along. Block partials accumulate
+    unclamped; one clamp after the last block matches the dense
+    clamp-after-accumulate bit for bit (clamp_v is idempotent when every
+    block is silent)."""
     from repro.core.isa import layer_timestep_int, neuron_dynamics_int
     from repro.core.quant import clamp_v
     B = spikes.shape[1]
-    n_w = len(ws)
     spiking_ws = ws[:-1] if readout else ws
+    blocks = [_ref_blocks(w.shape[0], gate_granularity) for w in ws]
 
-    def gated_acc(v, w, cur):
-        occupied = jnp.sum(cur) > 0
-        v = jax.lax.cond(
-            occupied,
-            lambda v: clamp_v(v + cur @ w.astype(jnp.int32), clamp_mode),
-            lambda v: v, v)
-        return v, jnp.logical_not(occupied).astype(jnp.int32)
+    def gated_acc(v, w, cur, spans, clamp):
+        skipped = []
+        for lo, hi in spans:
+            blk = cur[:, lo:hi]
+            occupied = jnp.sum(blk) > 0
+            v = jax.lax.cond(
+                occupied,
+                lambda v, blk=blk, lo=lo, hi=hi:
+                    v + blk @ w[lo:hi].astype(jnp.int32),
+                lambda v: v, v)
+            skipped.append(jnp.logical_not(occupied).astype(jnp.int32))
+        v = clamp_v(v, clamp_mode) if clamp else v
+        return v, jnp.stack(skipped)
 
     def step(carry, s_t):
-        vs, skips = list(carry[0]), carry[1]
+        vs, skips = list(carry[0]), list(carry[1])
         cur = s_t.astype(jnp.int32)
         rasters = []
         skipped = []
         for i, w in enumerate(spiking_ws):
             if use_sparse:
-                v, sk = gated_acc(vs[i], w, cur)
+                v, sk = gated_acc(vs[i], w, cur, blocks[i], clamp=True)
                 skipped.append(sk)
                 vs[i], cur = neuron_dynamics_int(
                     v, neuron=neuron, threshold=jnp.int32(thresholds[i]),
@@ -152,21 +196,23 @@ def _fused_snn_net_ref(spikes, ws, thresholds, leaks, neuron, clamp_mode,
             rasters.append(cur.astype(jnp.int8))
         if readout:
             if use_sparse:
-                occupied = jnp.sum(cur) > 0
-                vs[-1] = jax.lax.cond(
-                    occupied,
-                    lambda v: v + cur @ ws[-1].astype(jnp.int32),
-                    lambda v: v, vs[-1])
-                skipped.append(jnp.logical_not(occupied).astype(jnp.int32))
+                vs[-1], sk = gated_acc(vs[-1], ws[-1], cur, blocks[-1],
+                                       clamp=False)
+                skipped.append(sk)
             else:
                 vs[-1] = vs[-1] + cur @ ws[-1].astype(jnp.int32)
         if use_sparse:
-            skips = skips + jnp.stack(skipped)
-        return (tuple(vs), skips), tuple(rasters)
+            skips = [s + d for s, d in zip(skips, skipped)]
+        return (tuple(vs), tuple(skips)), tuple(rasters)
 
     vs0 = tuple(jnp.zeros((B, w.shape[1]), jnp.int32) for w in ws)
-    skips0 = jnp.zeros((n_w,), jnp.int32)
+    skips0 = tuple(jnp.zeros((len(b),), jnp.int32) for b in blocks)
     (vs, skips), rasters = jax.lax.scan(step, (vs0, skips0),
                                         spikes.astype(jnp.int8))
-    return ((list(rasters) if emit_rasters else []), list(vs),
-            skips[None] if use_sparse else None)
+    if not use_sparse:
+        out_skips = None
+    elif gate_granularity == 1:        # legacy (1, n_layers) layout
+        out_skips = jnp.stack([s[0] for s in skips])[None]
+    else:
+        out_skips = [s[None] for s in skips]
+    return ((list(rasters) if emit_rasters else []), list(vs), out_skips)

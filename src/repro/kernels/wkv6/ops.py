@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.wkv6.kernel import wkv6_pallas
-from repro.kernels.wkv6.ref import wkv6_chunked, wkv6_sequential
+from repro.kernels.wkv6.ref import wkv6_chunked
 
 
 @partial(jax.jit, static_argnames=("chunk", "use_pallas", "interpret", "unroll"))
@@ -30,7 +30,8 @@ def wkv6(r, k, v, w, u, s0=None, *, chunk: int = 64, use_pallas: bool = False,
 
     rb, kb, vb, wb = map(to_bh, (r, k, v, w))
     if pad:
-        zeros = lambda x, d: jnp.zeros((B * H, pad, d), x.dtype)
+        def zeros(x, d):
+            return jnp.zeros((B * H, pad, d), x.dtype)
         rb = jnp.concatenate([rb, zeros(rb, K)], axis=1)
         kb = jnp.concatenate([kb, zeros(kb, K)], axis=1)
         vb = jnp.concatenate([vb, zeros(vb, V)], axis=1)

@@ -10,11 +10,9 @@ only difference is make_production_mesh vs the host mesh and --reduced.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import (ParallelConfig, RunConfig, ShapeConfig,
                                 get_config, reduced_config)

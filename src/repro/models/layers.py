@@ -10,9 +10,7 @@ logits accumulate in fp32.
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -170,7 +168,7 @@ def blocked_attention(q, k, v, *, causal: bool, q_chunk: int,
         qpos = qs + jnp.arange(q_chunk)
 
         def body(carry, inp):
-            m, l, acc = carry
+            m, den, acc = carry
             bi, k_blk, v_blk = inp                           # (), (B,KB,KV,D)x2
             s = jnp.einsum("bqkrd,bskd->bkrqs", qc, k_blk)   # (B,KV,rep,QC,KB)
             if causal:
@@ -180,19 +178,19 @@ def blocked_attention(q, k, v, *, causal: bool, q_chunk: int,
             m_new = jnp.maximum(m, s.max(-1))
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m - m_new)
-            l_new = l * corr + p.sum(-1)
+            den_new = den * corr + p.sum(-1)
             acc_new = acc * corr[..., None] + jnp.einsum(
                 "bkrqs,bskd->bkrqd", p, v_blk)
-            return (m_new, l_new, acc_new), None
+            return (m_new, den_new, acc_new), None
 
         m0 = jnp.full((B, KV, rep, q_chunk), -1e30, jnp.float32)
         l0 = jnp.zeros((B, KV, rep, q_chunk), jnp.float32)
         a0 = jnp.zeros((B, KV, rep, q_chunk, D), jnp.float32)
-        (m, l, acc), _ = jax.lax.scan(
+        (m, den, acc), _ = jax.lax.scan(
             body, (m0, l0, a0),
             (jnp.arange(n_blocks), jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0)),
             unroll=n_blocks if unroll else 1)
-        o = acc / jnp.maximum(l[..., None], 1e-30)           # (B,KV,rep,QC,D)
+        o = acc / jnp.maximum(den[..., None], 1e-30)           # (B,KV,rep,QC,D)
         outs.append(jnp.moveaxis(o, 3, 1).reshape(B, q_chunk, H, D))
     return jnp.concatenate(outs, axis=1).astype(q.dtype)
 

@@ -15,14 +15,11 @@ scan. Remat is applied per super-block.
 """
 from __future__ import annotations
 
-import dataclasses
 import math
-from functools import partial
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig, ParallelConfig
 from repro.dist.sharding import constrain

@@ -138,7 +138,6 @@ def mamba_forward(x: jax.Array, p: dict, cfg: ModelConfig,
 def mamba_decode(x: jax.Array, p: dict, cfg: ModelConfig, state: dict):
     """One-token decode. x: (B, 1, d). O(1) state update."""
     s = cfg.ssm
-    B = x.shape[0]
     xz = x[:, 0] @ p["in_proj"]
     xs, z = jnp.split(xz, 2, axis=-1)
     conv = state["conv"]

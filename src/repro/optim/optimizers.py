@@ -10,12 +10,10 @@ API mirrors the (init, update) pair convention:
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 class Optimizer(NamedTuple):
@@ -61,7 +59,8 @@ def sgd(lr: float | Callable, momentum: float = 0.9) -> Optimizer:
 
 def _adam_core(lr, b1, b2, eps, weight_decay):
     def init(params):
-        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        def z(p):
+            return jnp.zeros_like(p, jnp.float32)
         return {"m": jax.tree_util.tree_map(z, params),
                 "v": jax.tree_util.tree_map(z, params),
                 "step": jnp.zeros((), jnp.int32)}

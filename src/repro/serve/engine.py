@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import queue
 from dataclasses import dataclass, field
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

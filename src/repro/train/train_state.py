@@ -2,13 +2,12 @@
 clipping, optional int8 gradient compression)."""
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig, ParallelConfig, RunConfig
+from repro.configs.base import RunConfig
 from repro.models import lm
 from repro.optim import apply_updates, clip_by_global_norm, make_optimizer
 from repro.optim.schedule import cosine_warmup
@@ -61,9 +60,8 @@ def make_train_step(run: RunConfig, opt, loss_fn: Callable | None = None,
             zero = jax.tree_util.tree_map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
             (loss, grads), _ = jax.lax.scan(acc_fn, (jnp.zeros(()), zero), batches)
-            aux = {}
         else:
-            loss, aux, grads = grads_of(state.params, batch)
+            loss, _aux, grads = grads_of(state.params, batch)
 
         if parallel.grad_compress:
             from repro.dist.compress import fake_compress

@@ -1,0 +1,113 @@
+"""The CI benchmark regression gate: parsing and gating policy.
+
+The gate's contract: skipped-work fractions may not drop (one-sided,
+absolute tolerance), instruction counts and calibrated energy numbers may
+not drift (two-sided, relative tolerance), wall-clock and workload stats
+never fail a run, and losing a baseline row is itself a failure.
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "tools"))
+
+import bench_gate  # noqa: E402
+
+
+def _payload(rows):
+    return {"mode": "quick", "failures": 0,
+            "rows": [{"name": n, "us_per_call": "0.0", "derived": d}
+                     for n, d in rows]}
+
+
+def test_parse_row_units_and_lists():
+    vals = bench_gate.parse_row(
+        "energy=1.80pJ err=0.5% speedup=3.21x conv_skipped_tiles=0.040/0.020 "
+        "flexible=IF+LIF+RMP na=n/a instr=49276")
+    assert vals["energy"] == 1.80 and vals["err"] == 0.5
+    assert vals["speedup"] == 3.21 and vals["instr"] == 49276
+    assert vals["conv_skipped_tiles"] == [0.040, 0.020]
+    assert "flexible" not in vals and "na" not in vals
+
+
+def test_skip_fraction_drop_fails_gain_notes():
+    base = _payload([("g", "tile=0.500 block8=0.300 events=0.850")])
+    ok = _payload([("g", "tile=0.480 block8=0.400 events=0.850")])
+    fails, notes = bench_gate.compare(ok, base)
+    assert not fails
+    assert any("block8 improved" in n for n in notes)
+    bad = _payload([("g", "tile=0.300 block8=0.300 events=0.850")])
+    fails, _ = bench_gate.compare(bad, base)
+    assert len(fails) == 1 and "tile" in fails[0]
+
+
+def test_instr_drift_two_sided_wallclock_ignored():
+    base = _payload([("w", "instr=10000 dense_us=100.0 measured_s=0.5")])
+    ok = _payload([("w", "instr=10100 dense_us=900.0 measured_s=0.9")])
+    fails, _ = bench_gate.compare(ok, base)
+    assert not fails                       # 1% instr, wall-clock/stats free
+    for drift in ("10300", "9700"):
+        bad = _payload([("w", f"instr={drift} dense_us=100.0 "
+                             "measured_s=0.5")])
+        fails, _ = bench_gate.compare(bad, base)
+        assert len(fails) == 1 and "instr" in fails[0]
+
+
+def test_missing_row_and_failed_row_fail():
+    base = _payload([("a", "tile=0.5"), ("b", "instr=5")])
+    cur = _payload([("a", "tile=0.5"), ("c_FAILED", "RuntimeError('x')"),
+                    ("new_row", "tile=0.9")])
+    fails, notes = bench_gate.compare(cur, base)
+    assert any("missing from current run" in f for f in fails)
+    assert any("crashed" in f for f in fails)
+    assert any("new row" in n for n in notes)
+
+
+def test_fig11_calibrated_keys_are_gated():
+    """The fig11 row spellings (measured_EDP / measured_reduction /
+    reduction_vs_dense) must hit the calibrated two-sided gate, not fall
+    through to report-only."""
+    base = _payload([("f11", "measured_EDP=7.301e-20Js "
+                             "measured_reduction=99.7% "
+                             "reduction_vs_dense=99.7%")])
+    ok = _payload([("f11", "measured_EDP=7.30e-20Js "
+                           "measured_reduction=99.5% "
+                           "reduction_vs_dense=99.7%")])
+    fails, _ = bench_gate.compare(ok, base)
+    assert not fails
+    bad = _payload([("f11", "measured_EDP=9.0e-20Js "
+                            "measured_reduction=80.0% "
+                            "reduction_vs_dense=99.7%")])
+    fails, _ = bench_gate.compare(bad, base)
+    assert {f.split()[1].split("=")[0] for f in fails} == {
+        "measured_EDP", "measured_reduction"}
+
+
+def test_slash_list_length_change_fails():
+    """Losing an element of a slash-list (a conv layer stopped reporting)
+    is a coverage regression, not a pass-by-truncation."""
+    base = _payload([("c", "conv_skipped_tiles=0.040/0.020")])
+    cur = _payload([("c", "conv_skipped_tiles=0.040")])
+    fails, _ = bench_gate.compare(cur, base)
+    assert len(fails) == 1 and "value count changed" in fails[0]
+
+
+def test_missing_key_fails():
+    base = _payload([("a", "tile=0.5 events=0.9")])
+    cur = _payload([("a", "tile=0.5")])
+    fails, _ = bench_gate.compare(cur, base)
+    assert len(fails) == 1 and "'events'" in fails[0]
+
+
+def test_write_baseline_refuses_crashed_payload(tmp_path):
+    """A run with crashed rows must never become the baseline — compare()
+    skips *_FAILED baseline rows, so adopting one would silently drop
+    coverage."""
+    import json
+    cur = tmp_path / "cur.json"
+    base = tmp_path / "base.json"
+    cur.write_text(json.dumps(_payload([("g_FAILED", "RuntimeError('x')")])))
+    rc = bench_gate.main([str(cur), str(base), "--write-baseline"])
+    assert rc == 1 and not base.exists()
+    cur.write_text(json.dumps(_payload([("g", "tile=0.5")])))
+    rc = bench_gate.main([str(cur), str(base), "--write-baseline"])
+    assert rc == 0 and base.exists()

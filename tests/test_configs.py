@@ -1,6 +1,4 @@
 """Config-system invariants (hypothesis property tests + registry checks)."""
-import dataclasses
-
 import pytest
 from hypothesis import given, settings, strategies as st
 

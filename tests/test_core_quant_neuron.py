@@ -6,7 +6,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import quant
-from repro.core.neuron import NeuronState, init_state, neuron_step, spike
+from repro.core.neuron import init_state, neuron_step, spike
 
 
 # ---------------------------------------------------------------------------

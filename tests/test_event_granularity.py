@@ -1,0 +1,213 @@
+"""Event-accounting contracts across gating granularities.
+
+Three independently produced statistics must agree on what "skippable
+work" is:
+
+  * `ref_events` (spike-list compaction executor) measures per-row event
+    counts *during* execution — work proportional to events;
+  * `pipeline.SparsityReport` derives the same per-row columns from the
+    rasters (or collect_sums aggregates) after the fact;
+  * the row-block kernel's skip counters record which (layer, block,
+    batch-tile, timestep) gate sites were silent.
+
+The property tests pin: ref_events row counts == report row counts; each
+layer's block event columns sum back to its total events for every
+granularity (padded-lane shapes included); a block the kernel skipped for
+the full batch at every timestep has zero events; and the row-granular
+skipped-instruction tally closes with the executed tally to the dense
+zero-sparsity count, which is what lets `energy.measured_edp_reduction`
+land exactly on the analytic Fig. 11b curve.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import SpikingConfig
+from repro.configs.impulse_snn import SNNModelConfig
+from repro.core import energy, isa, pipeline, snn
+from repro.kernels.fused_snn_net.events import fused_snn_net_events
+from repro.kernels.fused_snn_net.ops import fused_snn_net
+
+# padded-lane everything: 40/24/16 pad to 128 lanes, 130 row-tiles past one
+# macro; T/B stay fixed so the pallas interpret jit cache is shared
+WS_SHAPES = [(40, 24), (24, 16), (16, 3)]
+WS_SHAPES_WIDE = [(130, 24), (24, 3)]
+T, B, BLOCK_B = 6, 4, 2
+
+
+def _ws(shapes, seed=0):
+    rng = np.random.default_rng(seed)
+    return [jnp.asarray(rng.integers(-31, 32, s).astype(np.int8))
+            for s in shapes]
+
+
+def _layer_inputs(spikes, rasters):
+    """Input raster of every layer: the encoder raster, then each spiking
+    layer's output (the readout consumes the last spiking raster)."""
+    return [np.asarray(spikes)] + [np.asarray(r) for r in rasters[:-1]] \
+        + [np.asarray(rasters[-1])]
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([1, 2, 4, 8]),
+       st.sampled_from(["if", "lif", "rmp"]),
+       st.floats(min_value=0.02, max_value=0.6))
+def test_row_and_block_event_columns_agree(seed, granularity, neuron,
+                                           density):
+    rng = np.random.default_rng(seed)
+    wide = bool(rng.integers(0, 2))
+    shapes = WS_SHAPES_WIDE if wide else WS_SHAPES
+    ws = _ws(shapes, seed=seed + 1)
+    n_spiking = len(ws) - 1
+    ths = tuple([9, 5][:n_spiking])
+    lks = tuple([1, 1][:n_spiking])
+    spikes = (rng.random((T, B, shapes[0][0])) < density).astype(np.int8)
+    kw = dict(thresholds=ths, leaks=lks, neuron=neuron,
+              clamp_mode="saturate")
+    rasters, vs, stats = fused_snn_net_events(spikes, ws, **kw)
+    # bit-identity with the dense word-level reference
+    r_ref, v_ref, _ = fused_snn_net(jnp.asarray(spikes), ws,
+                                    use_pallas=False, **kw)
+    for a, b in zip(list(rasters) + list(vs), list(r_ref) + list(v_ref)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # per-row events measured during event-driven execution == counted
+    # from the rasters after the fact
+    inputs = _layer_inputs(spikes, r_ref)
+    for li, (inp, rows) in enumerate(zip(inputs, stats.row_events)):
+        np.testing.assert_array_equal(
+            np.asarray(rows), inp.astype(np.int64).sum(axis=(0, 1)),
+            err_msg=f"layer {li}")
+    assert stats.frames == T * B
+    # block columns sum-match the row columns at every granularity
+    from repro.kernels.fused_snn_net.kernel import LANE, skip_layout
+    n_blocks, _, _ = skip_layout(tuple(s[0] for s in shapes), granularity)
+    for rows, nb, (n_in, _) in zip(stats.row_events, n_blocks, shapes):
+        bw = n_in if granularity == 1 else LANE // granularity
+        padded = np.zeros(nb * bw, np.int64)
+        padded[:n_in] = rows
+        blocks = padded.reshape(nb, bw).sum(axis=1)
+        assert int(blocks.sum()) == int(np.asarray(rows).sum())
+        # a block the kernel may skip every (tile, timestep) has no events
+        if granularity > 1:
+            _, _, sk = fused_snn_net(
+                jnp.asarray(spikes), ws, interpret=True, block_b=BLOCK_B,
+                use_sparse=True, gate_granularity=granularity, **kw)
+            for s, rows2, (n_in2, _) in zip(sk, stats.row_events, shapes):
+                s = np.asarray(s)
+                bw2 = LANE // granularity
+                for g in range(s.shape[1]):
+                    if s[:, g].sum() == T * (B // BLOCK_B):   # always silent
+                        assert rows2[g * bw2:(g + 1) * bw2].sum() == 0
+            break                      # one kernel run per example is enough
+
+
+@pytest.mark.parametrize("sparsity", [0.0, 0.5, 0.85])
+def test_measured_edp_reduction_matches_fig11b(sparsity):
+    """executed + skipped == dense closes the row-skip model: on a single
+    full macro at exactly (1-s)*128 events/frame the measured reduction is
+    the analytic Fig. 11b point."""
+    events_per_frame = round((1.0 - sparsity) * 128)
+    rep = pipeline.SparsityReport(
+        n_in=(128,), n_out=(12,), neurons=("rmp",),
+        events=(events_per_frame * T * B,), frames=T * B,
+        timesteps=T, batch=B)
+    executed = rep.instruction_counts()
+    skipped = rep.skipped_instruction_counts()
+    dense = isa.InstrCount(*(a + b for a, b in zip(executed, skipped)))
+    assert dense == pipeline.SparsityReport(
+        n_in=(128,), n_out=(12,), neurons=("rmp",),
+        events=(128 * T * B,), frames=T * B, timesteps=T,
+        batch=B).instruction_counts()
+    red = energy.measured_edp_reduction(executed, skipped)
+    assert red == pytest.approx(energy.edp_reduction(sparsity), rel=1e-9)
+
+
+def test_skipped_instruction_counts_error_paths():
+    with pytest.raises(ValueError, match="exceeds"):
+        isa.count_skipped_instructions_from_events(10_000, 2, 16, 4)
+    with pytest.raises(ValueError, match="empty"):
+        energy.measured_edp_reduction(isa.InstrCount(), isa.InstrCount())
+    rep = pipeline.SparsityReport(n_in=(128,), n_out=(12,),
+                                  neurons=("rmp",), events=(0,), frames=4,
+                                  timesteps=2, batch=2)
+    with pytest.raises(ValueError, match="row_events"):
+        rep.block_event_counts(4)
+
+
+def _program(seed=5):
+    cfg = SNNModelConfig(
+        arch_id="ev", layer_sizes=(37, 50, 20, 3),
+        spiking=SpikingConfig(neuron="rmp", timesteps=3, threshold=1.0,
+                              leak=0.0625, w_bits=6, v_bits=11),
+        timesteps=3)
+    params = snn.init_fc_snn(jax.random.PRNGKey(seed), cfg)
+    rng = np.random.default_rng(seed + 2)
+    x = jnp.asarray(rng.standard_normal((2, 3, 37)).astype(np.float32))
+    program = pipeline.compile_network(cfg, params, domain="int")
+    return program, pipeline.present_words(x, cfg.timesteps)
+
+
+def test_ref_events_backend_contract():
+    """The registered backend: bit-identical results, and its measured
+    per-row skip statistics equal the SparsityReport columns (which the
+    raster-free collect_sums path reproduces too)."""
+    program, xs = _program()
+    ref = pipeline.run_network(program, xs, "int_ref")
+    ev = pipeline.run_network(program, xs, "ref_events")
+    for a, b in zip(ev.rasters, ref.rasters):
+        np.testing.assert_array_equal(np.asarray(a).astype(np.int8),
+                                      np.asarray(b).astype(np.int8))
+    for a, b in zip(ev.v_final[1:], ref.v_final[1:]):
+        np.testing.assert_array_equal(np.asarray(a).astype(np.int64),
+                                      np.asarray(b).astype(np.int64))
+    rep = pipeline.sparsity_report(program, ref.rasters)
+    assert rep.row_events is not None
+    for a, b in zip(ev.aux["row_events"], rep.row_events):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert tuple(ev.aux["row_skip_counts"]) == rep.row_skip_counts
+    assert ev.aux["skipped_row_fraction"] == pytest.approx(
+        rep.skipped_row_fraction)
+    assert rep.skipped_row_fraction == pytest.approx(rep.overall_sparsity)
+    assert tuple(ev.aux["row_event_frames"]) == rep.frames_by_layer
+    # sums path carries the same row columns
+    resf = pipeline.run_network(program, xs, "float", collect_sums=True)
+    rep_sums = pipeline.sparsity_report_from_sums(
+        program, resf.aux["spike_sums"], xs.shape[0])
+    for a, b in zip(rep_sums.row_events, rep.row_events):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # block columns at every granularity sum back to the event totals
+    for g in (1, 2, 4, 8):
+        blocks = rep.block_event_counts(g)
+        assert tuple(int(b.sum()) for b in blocks) == rep.events
+
+
+def test_ref_events_backend_conv_program():
+    """Conv programs run the event-list executor on their im2col patch
+    rasters: per-row columns cover k*k*c_in patch rows and frame counts
+    follow the (timestep, example, position) lowering."""
+    cfg = SNNModelConfig(
+        arch_id="lenet-ev", conv_spec=((4, 3, 1), (6, 3, 2)),
+        in_shape=(8, 8, 1), layer_sizes=(4 * 4 * 6, 10, 3),
+        spiking=SpikingConfig(neuron="rmp", timesteps=2, threshold=1.0,
+                              leak=0.0625, w_bits=6, v_bits=11),
+        timesteps=2, task="multiclass")
+    params = snn.init_lenet_snn(jax.random.PRNGKey(1), cfg)
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.standard_normal((2, *cfg.in_shape))
+                    .astype(np.float32)) * 2.0
+    program = pipeline.compile_network(cfg, params, domain="int")
+    xs = pipeline.present_static(x, cfg.timesteps)
+    ref = pipeline.run_network(program, xs, "int_ref")
+    ev = pipeline.run_network(program, xs, "ref_events")
+    for a, b in zip(ev.rasters, ref.rasters):
+        np.testing.assert_array_equal(np.asarray(a).astype(np.int8),
+                                      np.asarray(b).astype(np.int8))
+    rep = pipeline.sparsity_report(program, ref.rasters)
+    for a, b in zip(ev.aux["row_events"], rep.row_events):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert tuple(ev.aux["row_event_frames"]) == rep.frames_by_layer
+    assert tuple(ev.aux["row_skip_counts"]) == rep.row_skip_counts
+    conv = program.int_conv_stack[0]
+    assert len(ev.aux["row_events"][0]) == conv.n_in     # k*k*c_in rows

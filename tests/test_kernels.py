@@ -1,6 +1,5 @@
 """Per-kernel validation: shape/dtype sweeps against the pure-jnp oracles,
 all Pallas kernels in interpret mode (CPU container; TPU is the target)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -8,7 +7,7 @@ import pytest
 from repro.kernels.fused_snn_step.ops import fused_snn_layer
 from repro.kernels.fused_snn_step.ref import fused_snn_layer_ref
 from repro.kernels.wkv6.ops import wkv6, wkv6_decode_step
-from repro.kernels.wkv6.ref import wkv6_chunked, wkv6_sequential
+from repro.kernels.wkv6.ref import wkv6_sequential
 
 
 # ---------------------------------------------------------------------------

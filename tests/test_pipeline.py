@@ -84,6 +84,10 @@ def _run_all(cfg, params, x, clamp_mode, with_bitmacro=True):
                                        block_b=4),
         "pallas_sparse": pipeline.run_network(program, xs, "pallas_sparse",
                                               interpret=True, block_b=4),
+        "pallas_sparse_rb4": pipeline.run_network(
+            program, xs, "pallas_sparse", interpret=True, block_b=4,
+            gate_granularity=4),
+        "ref_events": pipeline.run_network(program, xs, "ref_events"),
     }
     if clamp_mode == "wrap" and with_bitmacro:
         results["bitmacro"] = pipeline.run_network(program, xs, "bitmacro")
@@ -152,9 +156,9 @@ def test_mnist_lenet5_mod_int_all_backends():
     cfg, params, x = _make_conv(cfg, "rmp", batch=1, seed=2)
     program, results = _run_all(cfg, params, x, "wrap")
     assert set(results) == {"float", "int_ref", "pallas", "pallas_sparse",
-                            "bitmacro"}
-    assert [l.tiling.row_tiles for l in program.fc_stack] == [6, 1, 1]
-    assert [l.n_in for l in program.int_conv_stack] == [126, 126]
+                            "pallas_sparse_rb4", "ref_events", "bitmacro"}
+    assert [ly.tiling.row_tiles for ly in program.fc_stack] == [6, 1, 1]
+    assert [ly.n_in for ly in program.int_conv_stack] == [126, 126]
     counts = _assert_equivalent(program, results, "mnist-lenet5-mod")
     assert counts.acc_v2v > 0                     # reduction term executed
 
@@ -170,7 +174,7 @@ def test_imdb_all_backends_bit_identical():
     x = jnp.asarray(rng.standard_normal((2, 3, 100)).astype(np.float32))
     program, results = _run_all(cfg, params, x, "wrap")
     assert set(results) == {"float", "int_ref", "pallas", "pallas_sparse",
-                            "bitmacro"}
+                            "pallas_sparse_rb4", "ref_events", "bitmacro"}
     ref = results["int_ref"]
     counts = {n: pipeline.count_network_instructions(program, r.rasters)
               for n, r in results.items()}
@@ -262,7 +266,7 @@ def test_instruction_counts_match_bitmacro_counts(neuron, layer_sizes):
                                        clamp_mode="wrap")
     xs = pipeline.present_words(x, cfg.timesteps)
     res = pipeline.run_network(program, xs, "bitmacro")
-    spiking = [l for l in program.fc_stack if l.kind == "fc"]
+    spiking = [ly for ly in program.fc_stack if ly.kind == "fc"]
     counts = isa.InstrCount()
     for spec, raster in zip(spiking, res.rasters):
         counts += isa.count_layer_instructions(

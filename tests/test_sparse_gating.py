@@ -85,6 +85,107 @@ def test_gated_paths_bit_identical(structure, neuron, clamp_mode):
             assert sk_p.sum() == T * len(ws) * n_tiles
 
 
+@pytest.mark.parametrize("clamp_mode", ["saturate", "wrap"])
+@pytest.mark.parametrize("granularity", [2, 4, 8])
+@pytest.mark.parametrize("structure", ["bursty", "sparse_iid"])
+def test_row_block_gating_bit_identical(structure, granularity, clamp_mode):
+    """Sub-tile (row-block) gating must stay bit-identical to dense for
+    every granularity: partial sums accumulate unclamped and the 11-bit
+    clamp applies once after the last block — the wrap rows would expose
+    any intermediate clamp (saturation does not commute with the split)."""
+    spikes = jnp.asarray(_raster(structure))
+    ws = _ws()
+    kw = dict(thresholds=THS, leaks=LKS, neuron="rmp", clamp_mode=clamp_mode)
+    r_ref, v_ref, _ = fused_snn_net(spikes, ws, use_pallas=False, **kw)
+    runs = {
+        "ref": fused_snn_net(spikes, ws, use_pallas=False, use_sparse=True,
+                             gate_granularity=granularity, **kw),
+        "pallas": fused_snn_net(spikes, ws, interpret=True, block_b=2,
+                                use_sparse=True,
+                                gate_granularity=granularity, **kw),
+    }
+    for name, (r, v, sk) in runs.items():
+        for li, (a, b) in enumerate(zip(r + v, r_ref + v_ref)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=f"{name} G={granularity} "
+                                                  f"out {li}")
+        # per-layer block columns: ceil(n_in / (128/G)) counted blocks
+        assert isinstance(sk, list) and len(sk) == len(ws)
+        bw = 128 // granularity
+        for (n_in, _), s in zip(WS_SHAPES, sk):
+            assert np.asarray(s).shape[1] == -(-n_in // bw)
+    # finer granularity can only skip more MXU work per lane: total skipped
+    # lanes (blocks x width) is monotone vs the whole-tile gate
+    _, _, sk1 = fused_snn_net(spikes, ws, use_pallas=False, use_sparse=True,
+                              **kw)
+    lanes_g = sum(np.asarray(s).sum() * (128 // granularity)
+                  for s in runs["ref"][2])
+    lanes_1 = sum(int(n) * int(c) for (n, _), c in
+                  zip(WS_SHAPES, np.asarray(sk1)[0]))
+    assert lanes_g >= lanes_1
+
+
+def test_row_block_skip_counts_match_raster():
+    """Kernel gate decisions are exact: for every (layer, block, batch
+    tile), the skip count equals the number of timesteps whose logical
+    lanes in that block are silent for the whole tile — computed here
+    independently from the raster (including the padded-lane tail of the
+    40-wide input)."""
+    T, B, block_b, G = 9, 4, 2, 4
+    rng = np.random.default_rng(8)
+    spikes = (rng.random((T, B, 40)) < 0.06).astype(np.int8)
+    ws = _ws()
+    kw = dict(thresholds=THS, leaks=LKS, neuron="if", clamp_mode="saturate")
+    r_dense, _, _ = fused_snn_net(jnp.asarray(spikes), ws, use_pallas=False,
+                                  **kw)
+    _, _, sk = fused_snn_net(jnp.asarray(spikes), ws, interpret=True,
+                             block_b=block_b, use_sparse=True,
+                             gate_granularity=G, **kw)
+    inputs = [spikes] + [np.asarray(r) for r in r_dense[:-1]]
+    bw = 128 // G
+    for li, (inp, s) in enumerate(zip(inputs, sk)):
+        s = np.asarray(s)
+        n_in = inp.shape[2]
+        assert s.shape == (B // block_b, -(-n_in // bw))
+        for tile in range(B // block_b):
+            rows = inp[:, tile * block_b:(tile + 1) * block_b, :]
+            for g in range(s.shape[1]):
+                blk = rows[:, :, g * bw:min((g + 1) * bw, n_in)]
+                expect = int((blk.reshape(T, -1).sum(axis=1) == 0).sum())
+                assert s[tile, g] == expect, (li, tile, g)
+
+
+def test_skip_layout_contract():
+    """The skip output is sized from the stack, not a fixed 128 lanes: the
+    former SKIP_LANES cap silently truncated counts past 128 layers."""
+    from repro.kernels.fused_snn_net.kernel import (MAX_SKIP_COLS,
+                                                    skip_layout)
+    n_cols, offsets, lanes = skip_layout((40, 24, 16), 1)
+    assert n_cols == (1, 1, 1) and offsets == (0, 1, 2) and lanes == 128
+    n_cols, offsets, lanes = skip_layout((130, 24, 16), 8)
+    assert n_cols == (9, 2, 1) and offsets == (0, 9, 11)
+    # past the cap: a named error instead of silent truncation
+    many = tuple(128 for _ in range(MAX_SKIP_COLS + 1))
+    with pytest.raises(ValueError, match="MAX_SKIP_COLS"):
+        skip_layout(many, 1)
+    with pytest.raises(ValueError, match="granularity"):
+        skip_layout((40,), 3)
+    # lane padding covers layouts past one 128-lane tile
+    wide = tuple(128 for _ in range(130))
+    assert skip_layout(wide, 1)[2] == 256
+
+
+def test_gate_granularity_validation():
+    spikes = jnp.zeros((2, 2, 40), jnp.int8)
+    ws = _ws()
+    kw = dict(thresholds=THS, leaks=LKS)
+    with pytest.raises(ValueError, match="use_sparse"):
+        fused_snn_net(spikes, ws, gate_granularity=4, **kw)
+    with pytest.raises(ValueError, match="granularity"):
+        fused_snn_net(spikes, ws, use_sparse=True, gate_granularity=5,
+                      use_pallas=False, **kw)
+
+
 def test_chain_misalignment_raises_not_asserts():
     """The stack contract survives ``python -O``: misaligned chains and
     empty stacks raise ValueError (previously an assert)."""

@@ -1,8 +1,5 @@
 """Substrate tests: optimizers, checkpointing (+restart), data pipeline,
 train loop fault tolerance, serving engine."""
-import os
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -13,8 +10,8 @@ from repro.configs.base import (ParallelConfig, RunConfig, ShapeConfig,
                                 get_config, reduced_config)
 from repro.data import ShardedLoader, lm_batch_fn, make_sentiment_vocab, sentiment_batch
 from repro.models import lm
-from repro.optim import (adafactor, adamw, apply_updates, clip_by_global_norm,
-                         make_optimizer, sgd)
+from repro.optim import (adafactor, apply_updates, clip_by_global_norm,
+                         make_optimizer)
 from repro.serve import Request, ServeEngine
 from repro.train import LoopConfig, init_train_state, make_train_step, train_loop
 

@@ -26,10 +26,10 @@ def trained_sentiment():
 
     @jax.jit
     def step(p, o, x, y):
-        (l, aux), g = jax.value_and_grad(snn.sentiment_loss, has_aux=True)(
+        (loss, aux), g = jax.value_and_grad(snn.sentiment_loss, has_aux=True)(
             p, x, y, cfg)
         u, o = opt.update(g, o, p)
-        return apply_updates(p, u), o, l
+        return apply_updates(p, u), o, loss
 
     for s in range(60):
         xb, yb = sentiment_batch(ds, 64, 10, seed=s)
