@@ -1,0 +1,74 @@
+"""Streaming SNN serving throughput: the continuous-batching engine over
+persistent V_MEM slots, swept over offered input sparsity.
+
+Per offered sparsity the row reports tick wall-clock plus:
+
+  * ``frames_per_s`` / ``words_per_s`` — engine throughput (report-only:
+    CI CPUs are noisy; the TPU target is where the fused kernel's latency
+    matters);
+  * ``skipped_rows`` — the pooled per-slot skipped-work fraction (silent
+    (frame, input-row) pairs over all gate sites), accumulated tick by
+    tick from the engine's per-request event accounting. Deterministic:
+    the request rasters are seeded and the encoder reproduces them
+    exactly (currents scaled by the encoder threshold), so this is the
+    executed sparsity win — pinned by tools/bench_gate.py;
+  * ``instr`` — pooled executed instruction cycles (exact function of the
+    rasters; two-sided gate);
+  * ``offered`` — the input sparsity the requests were generated at
+    (workload statistic, report-only).
+
+The skipped fraction tracks offered sparsity at the input layer and
+regresses toward the trained-activity level in deeper layers — same
+structure as benchmarks/sparsity_gating.py measures, here produced by the
+*serving* path (per-slot accounting summed over staggered requests) rather
+than a monolithic batch run.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import emit
+from repro.configs.impulse_snn import get_snn_config
+from repro.core import pipeline, snn
+from repro.launch.serve_snn import make_requests
+from repro.serve import SNNServeEngine
+
+SWEEP = (0.5, 0.85)
+
+
+def _serve_row(program, cfg, sparsity: float, *, n_requests: int,
+               n_words: int, slots: int, seed: int = 0) -> str:
+    eng = SNNServeEngine(program, batch_slots=slots, backend="int_ref",
+                         step_kw={"use_sparse": True})
+    for req in make_requests(program, n_requests, n_words, cfg.timesteps,
+                             sparsity, seed):
+        eng.submit(req)
+    t0 = time.perf_counter()
+    done = eng.run_until_drained()
+    dt = time.perf_counter() - t0
+    frames = sum(r.ticks for r in done)
+    rep = eng.aggregate_report()
+    counts = rep.instruction_counts()
+    tag = f"{int(round(sparsity * 100)):02d}"
+    return emit(
+        f"serve_snn_s{tag}", dt / max(eng.ticks, 1) * 1e6,
+        f"frames_per_s={frames / dt:.1f} "
+        f"words_per_s={frames / cfg.timesteps / dt:.1f} "
+        f"skipped_rows={rep.skipped_row_fraction:.3f} "
+        f"instr={counts.total} offered={sparsity:.2f} reqs={len(done)}")
+
+
+def run(quick: bool = False):
+    cfg = get_snn_config("impulse-imdb")
+    params = snn.init_fc_snn(jax.random.PRNGKey(0), cfg)
+    program = pipeline.compile_network(cfg, params, domain="int")
+    n_requests, n_words, slots = (4, 2, 2) if quick else (12, 6, 4)
+    rows = [_serve_row(program, cfg, s, n_requests=n_requests,
+                       n_words=n_words, slots=slots) for s in SWEEP]
+    return rows
+
+
+if __name__ == "__main__":
+    run()

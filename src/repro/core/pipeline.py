@@ -36,7 +36,7 @@ argument.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Callable, Optional
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -121,6 +121,17 @@ class SNNProgram:
         if self.domain == "int":
             return v_out.astype(jnp.float32) * self.layers[-1].scale
         return v_out
+
+    # -- streaming execution (DESIGN.md §3 "Streaming execution & serving")
+    def init_state(self, batch: int, backend: str = "float") -> "StreamState":
+        """Fresh per-layer membrane state for ``batch`` streams."""
+        return init_stream_state(self, batch, backend)
+
+    def step(self, state: "StreamState", frame: jax.Array,
+             backend: str = "float", **kw
+             ) -> "tuple[StreamState, StreamOut]":
+        """Advance every stream one tick on a (B, ...) current frame."""
+        return stream_step(self, state, frame, backend, **kw)
 
 
 @dataclass
@@ -401,6 +412,34 @@ def run_float(program: SNNProgram, xs: jax.Array, *, return_trace: bool = False,
 # shared float encoder for the integer backends (off-macro input layer)
 # ---------------------------------------------------------------------------
 
+def _encoder_weight(program: SNNProgram, enc: LayerSpec):
+    """The conv encoder's effective weight (fake-quant in QAT programs)."""
+    return enc.w if not (program.quantize and enc.quantize) \
+        else fake_quant_w(enc.w)
+
+
+def encoder_step(program: SNNProgram, v_enc: jax.Array, frame: jax.Array
+                 ) -> tuple[jax.Array, jax.Array]:
+    """One tick of the off-macro encoder layer: carried membrane V plus a
+    (B, ...) current frame -> (new V, (B, ...) int8 spikes). `encode` scans
+    exactly this function, so frame-by-frame streaming reproduces the
+    batch raster bit for bit."""
+    enc = program.layers[0]
+    if enc.kind == "encoder":
+        current = frame
+    elif enc.kind == "conv":
+        current = conv2d(frame, _encoder_weight(program, enc), enc.stride)
+    else:
+        raise ValueError(
+            f"integer backends need an encoder- or conv-led stack, but this "
+            f"program's first layer is kind={enc.kind!r} "
+            f"({enc.n_in}x{enc.n_out}); FC programs start with an 'encoder' "
+            f"layer and conv programs with the conv spike encoder")
+    st, s = neuron_step(NeuronState(v_enc), current, neuron=program.neuron,
+                        threshold=enc.threshold, leak=enc.leak)
+    return st.v, s.astype(jnp.int8)
+
+
 def encode(program: SNNProgram, xs: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Run the off-macro encoder layer alone: (T_total, B, ...) currents ->
     ((T_total, B, ...) int8 spikes, final encoder V). Bitwise identical to
@@ -408,32 +447,14 @@ def encode(program: SNNProgram, xs: jax.Array) -> tuple[jax.Array, jax.Array]:
     conv stacks the encoder is the first conv (float weights, spike maps
     out); for FC stacks it is the identity-weight input layer."""
     enc = program.layers[0]
-    if enc.kind == "encoder":
-        def step(v, xt):
-            st, s = neuron_step(NeuronState(v), xt, neuron=program.neuron,
-                                threshold=enc.threshold, leak=enc.leak)
-            return st.v, s.astype(jnp.int8)
-
-        v_enc, spikes = jax.lax.scan(step, jnp.zeros(xs.shape[1:]), xs)
-        return spikes, v_enc
-    if enc.kind == "conv":
-        w = enc.w if not (program.quantize and enc.quantize) \
-            else fake_quant_w(enc.w)
-
-        def step(v, xt):
-            st, s = neuron_step(NeuronState(v), conv2d(xt, w, enc.stride),
-                                neuron=program.neuron, threshold=enc.threshold,
-                                leak=enc.leak)
-            return st.v, s.astype(jnp.int8)
-
-        v0 = jnp.zeros((xs.shape[1], *enc.state_shape))
-        v_enc, spikes = jax.lax.scan(step, v0, xs)
-        return spikes, v_enc
-    raise ValueError(
-        f"integer backends need an encoder- or conv-led stack, but this "
-        f"program's first layer is kind={enc.kind!r} "
-        f"({enc.n_in}x{enc.n_out}); FC programs start with an 'encoder' "
-        f"layer and conv programs with the conv spike encoder")
+    if enc.kind not in ("encoder", "conv"):
+        # same error as the per-tick entry; raise eagerly, not inside scan
+        encoder_step(program, None, None)
+    v0 = jnp.zeros((xs.shape[1], *enc.state_shape)) if enc.kind == "conv" \
+        else jnp.zeros(xs.shape[1:])
+    v_enc, spikes = jax.lax.scan(
+        lambda v, xt: encoder_step(program, v, xt), v0, xs)
+    return spikes, v_enc
 
 
 def _assemble(program: SNNProgram, rasters: list, v_enc, v_stack: list
@@ -461,18 +482,19 @@ def _stack_kernel_args(program: SNNProgram) -> dict:
 def _run_fc_stack(program: SNNProgram, spikes: jax.Array, *, use_pallas: bool,
                   use_sparse: bool, block_b: int, interpret: bool,
                   emit_rasters: bool, gate_granularity: int = 1,
-                  use_events: bool = False):
+                  use_events: bool = False, v_init: Optional[list] = None):
     kw = _stack_kernel_args(program)
     if use_events:
         from repro.kernels.fused_snn_net.events import fused_snn_net_events
         return fused_snn_net_events(spikes, kw.pop("ws"),
-                                    emit_rasters=emit_rasters, **kw)
+                                    emit_rasters=emit_rasters,
+                                    v_init=v_init, **kw)
     from repro.kernels.fused_snn_net.ops import fused_snn_net
     return fused_snn_net(
         spikes, kw.pop("ws"), use_pallas=use_pallas,
         use_sparse=use_sparse, gate_granularity=gate_granularity,
         block_b=block_b, interpret=interpret,
-        emit_rasters=emit_rasters, **kw)
+        emit_rasters=emit_rasters, v_init=v_init, **kw)
 
 
 def run_stack_from_raster(program: SNNProgram, spikes_enc: jax.Array, *,
@@ -503,7 +525,7 @@ def run_stack_from_raster(program: SNNProgram, spikes_enc: jax.Array, *,
 def _conv_front_end(program: SNNProgram, spikes_enc: jax.Array, *,
                     use_pallas: bool, use_sparse: bool, block_b: int,
                     interpret: bool, gate_granularity: int = 1,
-                    use_events: bool = False):
+                    use_events: bool = False, v_init: Optional[list] = None):
     """Run the on-macro int conv layers on encoder spike maps. Each conv
     layer lowers onto the macro grid via im2col (mapping.py): its
     (T, B, H, W, C) input maps become a (T, B*P, k*k*C) patch raster —
@@ -519,7 +541,7 @@ def _conv_front_end(program: SNNProgram, spikes_enc: jax.Array, *,
     from repro.kernels.fused_snn_net.ops import fused_snn_net
     maps, v_convs, conv_skips = [], [], []
     cur = spikes_enc
-    for spec in program.int_conv_stack:
+    for ci, spec in enumerate(program.int_conv_stack):
         t_total, batch = cur.shape[:2]
         patches = mapping.im2col_raster(cur, spec.w.shape[0], spec.stride)
         out_hw = mapping.conv_out_hw(cur.shape[2:4], spec.w.shape[0],
@@ -527,10 +549,16 @@ def _conv_front_end(program: SNNProgram, spikes_enc: jax.Array, *,
         kw = dict(thresholds=(int(spec.threshold),), leaks=(int(spec.leak),),
                   neuron=program.neuron, clamp_mode=program.clamp_mode,
                   readout=False, emit_rasters=True)
+        vi = None
+        if v_init is not None:
+            # conv V state is a (B, H_out, W_out, C) map; the macro executes
+            # one frame per (example, output position) — flatten to match
+            vi = [jnp.asarray(v_init[ci]).reshape(-1, spec.n_out)]
         if use_events:
             rasters, v, skips = fused_snn_net_events(
                 patches.astype(jnp.int8),
-                [np.asarray(mapping.pack_conv_weights(spec.w))], **kw)
+                [np.asarray(mapping.pack_conv_weights(spec.w))],
+                v_init=vi, **kw)
             rasters = [jnp.asarray(r) for r in rasters]
         else:
             rasters, v, skips = fused_snn_net(
@@ -538,7 +566,7 @@ def _conv_front_end(program: SNNProgram, spikes_enc: jax.Array, *,
                 [jnp.asarray(mapping.pack_conv_weights(spec.w))],
                 use_pallas=use_pallas, use_sparse=use_sparse,
                 gate_granularity=gate_granularity, block_b=block_b,
-                interpret=interpret, **kw)
+                interpret=interpret, v_init=vi, **kw)
         cur = rasters[0].reshape(t_total, batch, *out_hw, spec.n_out)
         maps.append(cur)
         v_convs.append(jnp.asarray(v[0]).reshape(batch, *out_hw, spec.n_out))
@@ -699,8 +727,130 @@ def run_ref_events(program: SNNProgram, xs: jax.Array) -> NetResult:
 
 
 # ---------------------------------------------------------------------------
-# bitmacro backend — silicon oracle (numpy, bit-level, wrap arithmetic)
+# streaming execution — the program-level step API
+#
+# IMPULSE's deployment mode is *streaming*: membrane potential is persistent
+# per-neuron state fused next to the weights, so sequential inputs arrive
+# frame by frame and V simply stays resident. `run_network` consumes a whole
+# (T, B, ...) presentation in one call; `init_stream_state` / `stream_step`
+# expose the same backends one tick at a time, carrying every layer's V as
+# an explicit state tree. Because all on-macro arithmetic is integer (exact)
+# and the float encoder executes the identical per-tick ops the batch scan
+# executes, driving the batch raster frame-by-frame through `stream_step`
+# reproduces `run_network` bit for bit — the contract tests/test_stream.py
+# sweeps. serve/snn_engine.py builds continuous batching on top: slot lanes
+# of one StreamState tree are the V_MEM analogue of LM KV-cache lanes.
 # ---------------------------------------------------------------------------
+
+STREAM_BACKENDS = ("float", "int_ref", "pallas", "pallas_sparse",
+                   "ref_events")
+
+
+class StreamState(NamedTuple):
+    """Carried membrane state of a streaming execution: one V leaf per
+    program layer in `program.layers` order (encoder first, readout last),
+    each (B, *state_shape). Dtypes are backend-native: all-f32 on the float
+    backend, f32 encoder V + int32 macro-stack V on the integer backends.
+    A NamedTuple — hence a pytree — so serving engines can tree-map lane
+    copies over it when admitting/evicting requests."""
+    vs: tuple
+    t: int = 0           # ticks executed (bookkeeping; dynamics are
+                         # time-invariant, so t never enters the math)
+
+
+@dataclass
+class StreamOut:
+    """What one `stream_step` tick produces. ``rasters[i]`` is the input
+    spike raster of macro-stack layer i for THIS tick, (B, n) flat /
+    (B, H, W, C) maps with the T axis squeezed — stacking them over ticks
+    rebuilds `NetResult.rasters` exactly (None when emit_rasters=False).
+    ``skips``/``conv_skips`` carry the event-gating counts of this tick in
+    the same layouts `run_network` aux uses: per-call skip-count arrays on
+    the gated paths (summing over ticks equals the batch-run counts) or
+    `events.EventStats` on the ref_events path."""
+    v_out: Any
+    logits: Any
+    rasters: Optional[list] = None
+    skips: Any = None
+    conv_skips: Any = None
+
+
+def _check_stream_backend(program: SNNProgram, backend: str) -> None:
+    if backend not in STREAM_BACKENDS:
+        raise KeyError(
+            f"unknown streaming backend {backend!r}; have "
+            f"{STREAM_BACKENDS} (bitmacro is a host-side verification "
+            "oracle whose state lives in BitMacro objects, not a pytree — "
+            "it has no streaming entry)")
+    if backend != "float" and program.domain != "int":
+        raise ValueError(f"backend {backend!r} needs an int-domain program "
+                         "(compile_network(..., domain='int'))")
+
+
+def init_stream_state(program: SNNProgram, batch: int,
+                      backend: str = "float") -> StreamState:
+    """Fresh (all-zero V) state for ``batch`` independent streams."""
+    _check_stream_backend(program, backend)
+    vs = []
+    for i, spec in enumerate(program.layers):
+        dtype = jnp.float32 if (backend == "float" or i == 0) else jnp.int32
+        vs.append(jnp.zeros((batch, *spec.state_shape), dtype))
+    return StreamState(vs=tuple(vs), t=0)
+
+
+def stream_step(program: SNNProgram, state: StreamState, frame: jax.Array,
+                backend: str = "float", *, emit_rasters: bool = True,
+                use_sparse: bool = False, block_b: int = 8,
+                interpret: bool = False, gate_granularity: int = 1
+                ) -> tuple[StreamState, StreamOut]:
+    """Advance every stream one tick: (state, (B, ...) input currents) ->
+    (new state, StreamOut). Batch lanes never interact — every op is
+    per-lane — so a lane's trajectory is independent of what the other
+    lanes serve, which is what makes continuous batching exact.
+
+    Backend kwargs mirror `run_network`: ``use_sparse`` gates the int_ref
+    tick, ``block_b``/``interpret`` configure the pallas kernel,
+    ``gate_granularity`` refines the pallas_sparse gate. The integer
+    backends reuse the fused kernels' one-timestep entry (``v_init``), so
+    per-layer V tiles stay VMEM-resident within the tick and only cross
+    the call boundary between ticks."""
+    _check_stream_backend(program, backend)
+    if backend == "float":
+        vs, spikes = _float_step(program, list(state.vs), frame)
+        v_out = vs[-1]
+        return (StreamState(vs=tuple(vs), t=state.t + 1),
+                StreamOut(v_out=v_out, logits=program.logits(v_out),
+                          rasters=list(spikes) if emit_rasters else None))
+    use_pallas = backend in ("pallas", "pallas_sparse")
+    use_events = backend == "ref_events"
+    if backend == "pallas_sparse":
+        use_sparse = True
+    v_enc, spikes_enc = encoder_step(program, state.vs[0], frame)
+    cur = spikes_enc[None]                       # (1, B, ...) one-frame raster
+    n_convs = len(program.int_conv_stack)
+    conv_maps, v_convs, conv_skips = _conv_front_end(
+        program, cur, use_pallas=use_pallas, use_sparse=use_sparse,
+        gate_granularity=gate_granularity, use_events=use_events,
+        block_b=block_b, interpret=interpret,
+        v_init=list(state.vs[1:1 + n_convs]) if n_convs else None)
+    last = conv_maps[-1] if conv_maps else cur
+    flat = last.reshape(*last.shape[:2], -1) if last.ndim > 3 else last
+    rasters_fc, v_stack, skips = _run_fc_stack(
+        program, flat, use_pallas=use_pallas, use_sparse=use_sparse,
+        gate_granularity=gate_granularity, use_events=use_events,
+        block_b=block_b, interpret=interpret, emit_rasters=emit_rasters,
+        v_init=list(state.vs[1 + n_convs:]))
+    new_vs = ((v_enc,) + tuple(v_convs)
+              + tuple(jnp.asarray(v) for v in v_stack))
+    rasters = None
+    if emit_rasters:
+        rasters = ([spikes_enc] + [m[0] for m in conv_maps]
+                   + [jnp.asarray(r)[0] for r in rasters_fc])
+    v_out = jnp.asarray(v_stack[-1])
+    return (StreamState(vs=new_vs, t=state.t + 1),
+            StreamOut(v_out=v_out, logits=program.logits(v_out),
+                      rasters=rasters, skips=skips,
+                      conv_skips=conv_skips if conv_skips else None))
 
 def _bitmacro_layer(inp: np.ndarray, wq: np.ndarray, threshold: int,
                     leak: int, neuron: str):
@@ -862,16 +1012,20 @@ class SparsityReport:
 
     @property
     def layer_sparsity(self) -> tuple:
-        """1 - (events / possible events), per macro-stack layer input."""
-        return tuple(1.0 - e / (f * n)
+        """1 - (events / possible events), per macro-stack layer input.
+        A zero-frame execution (e.g. an empty serving request) has no gate
+        sites; report sparsity 0 — no skip is claimed — rather than
+        dividing by zero."""
+        return tuple(1.0 - e / (f * n) if f * n else 0.0
                      for e, n, f in zip(self.events, self.n_in,
                                         self.frames_by_layer))
 
     @property
     def overall_sparsity(self) -> float:
-        """Event-weighted network input sparsity (all layers pooled)."""
+        """Event-weighted network input sparsity (all layers pooled; 0.0
+        for a zero-frame execution — see layer_sparsity)."""
         possible = sum(f * n for n, f in zip(self.n_in, self.frames_by_layer))
-        return 1.0 - sum(self.events) / possible
+        return 1.0 - sum(self.events) / possible if possible else 0.0
 
     @property
     def silent_timestep_fraction(self) -> tuple:

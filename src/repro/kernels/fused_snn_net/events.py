@@ -66,7 +66,8 @@ def _spike(v: np.ndarray, threshold: int, mode: str) -> np.ndarray:
 
 def fused_snn_net_events(spikes, ws, *, thresholds: tuple, leaks: tuple,
                          neuron: str = "rmp", clamp_mode: str = "saturate",
-                         emit_rasters: bool = True, readout: bool = True):
+                         emit_rasters: bool = True, readout: bool = True,
+                         v_init: list = None):
     """Event-list execution of the fused stack — same contract as
     `ops.fused_snn_net` (rasters, v_finals, stats), but the third element
     is an `EventStats` (per-row event counts) instead of gate-site skip
@@ -78,6 +79,10 @@ def fused_snn_net_events(spikes, ws, *, thresholds: tuple, leaks: tuple,
     accumulate clamps once after the full per-frame sum — the same single
     clamp-after-accumulate every other backend applies — and the neuron
     update runs unconditionally every timestep.
+
+    ``v_init`` (streaming entry): per-layer (B, n_out) membrane state
+    resuming a previous call instead of zeros — integer arithmetic makes
+    chunked calls that thread V back in equal one long call exactly.
     """
     spikes = np.asarray(spikes).astype(np.int8)
     if spikes.ndim != 3:
@@ -94,7 +99,13 @@ def fused_snn_net_events(spikes, ws, *, thresholds: tuple, leaks: tuple,
     if len(thresholds) != n_spiking or len(leaks) != n_spiking:
         raise ValueError(f"need {n_spiking} thresholds/leaks, got "
                          f"{len(thresholds)}/{len(leaks)}")
-    vs = [np.zeros((B, w.shape[1]), np.int32) for w in ws]
+    if v_init is not None:
+        if len(v_init) != len(ws):
+            raise ValueError(f"v_init needs one (B, n_out) state per layer "
+                             f"({len(ws)}), got {len(v_init)}")
+        vs = [np.array(v, np.int32, copy=True) for v in v_init]
+    else:
+        vs = [np.zeros((B, w.shape[1]), np.int32) for w in ws]
     row_events = [np.zeros(w.shape[0], np.int64) for w in ws]
     rasters = [np.zeros((T, B, w.shape[1]), np.int8)
                for w in ws[:n_spiking]] if emit_rasters else []

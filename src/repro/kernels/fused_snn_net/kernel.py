@@ -46,6 +46,16 @@ Grid: (B // block_b,). The network dimension is NOT gridded: layer widths
 are padded to the 128-lane MXU tile and the whole stack fits VMEM (the
 macro's 128x12 geometry guarantees layer tiles are tiny). The timestep loop
 is an in-kernel fori_loop — a grid dimension over T would evict V.
+
+Streaming entry (``v_init``): the V scratch tiles normally initialize to
+zero — one call owns the whole presentation. For streaming execution
+(core/pipeline `stream_step`, serve/snn_engine) the caller passes the
+per-layer membrane state carried from the previous tick as extra inputs;
+the kernel seeds its VMEM V tiles from them and runs the same loop for a
+one-timestep (or any chunk-length) call. Because integer accumulation is
+exact, chunked calls that thread V compose bit-identically with one full-T
+call — the macro's "V_MEM never leaves the array" claim, restated at the
+call boundary as "V leaves VMEM only between ticks".
 """
 from __future__ import annotations
 
@@ -102,11 +112,14 @@ def skip_layout(in_widths: tuple, granularity: int
 def _net_kernel(*refs, n_spiking: int, has_readout: bool, neuron: str,
                 clamp_mode: str, timesteps: int, emit_rasters: bool,
                 sparse: bool, granularity: int, logical_widths: tuple,
-                batch_logical: int, block_b: int):
+                batch_logical: int, block_b: int, has_v_init: bool):
     """Ref layout (inputs, outputs, scratch):
       inputs : spikes_ref (T, Bt, N0p) int8; w_refs[i] (Nip, Nop) int8 for
                the n_spiking FCs (+ readout when has_readout); params_ref
                (n_spiking, 2) int32 rows of [threshold, leak];
+               v_init_refs[i] (Bt, Nop) int32 per layer (only when
+               has_v_init) — membrane state carried in from a previous
+               streaming tick;
       outputs: raster_refs[i] (T, Bt, Nop) int8 per spiking FC (only when
                emit_rasters); v_out_refs[i] (Bt, Nop) int32 per layer
                (readout last); skip_ref (1, skip_lanes) int32 (only when
@@ -122,6 +135,8 @@ def _net_kernel(*refs, n_spiking: int, has_readout: bool, neuron: str,
     w_refs = refs[1:1 + n_w]
     params_ref = refs[1 + n_w]
     pos = 2 + n_w
+    v_init_refs = refs[pos:pos + n_w] if has_v_init else ()
+    pos += n_w if has_v_init else 0
     raster_refs = refs[pos:pos + n_spiking] if emit_rasters else ()
     pos += n_spiking if emit_rasters else 0
     v_out_refs = refs[pos:pos + n_w]
@@ -131,8 +146,8 @@ def _net_kernel(*refs, n_spiking: int, has_readout: bool, neuron: str,
     v_refs = refs[pos:]
 
     ws = [w_refs[i][...] for i in range(n_w)]     # VMEM-resident weights
-    for vref in v_refs:
-        vref[...] = jnp.zeros_like(vref)
+    for i, vref in enumerate(v_refs):
+        vref[...] = v_init_refs[i][...] if has_v_init else jnp.zeros_like(vref)
     if sparse:
         skip_ref[...] = jnp.zeros_like(skip_ref)
         b0 = pl.program_id(0) * block_b
@@ -230,7 +245,8 @@ def fused_snn_net_pallas(spikes: jax.Array, ws: list, params: jax.Array, *,
                          emit_rasters: bool, interpret: bool = False,
                          sparse: bool = False, granularity: int = 1,
                          logical_widths: tuple = (),
-                         batch_logical: int = 0, has_readout: bool = True):
+                         batch_logical: int = 0, has_readout: bool = True,
+                         v_init: list = None):
     """Dispatch the network kernel. Shapes must be pre-padded: spikes
     (T, B, N0p) int8 with B % block_b == 0; ws[i] (Nip, Nop) int8 with every
     dim a 128 multiple and Nip == previous Nop; params (n_spiking, 2) int32.
@@ -243,6 +259,10 @@ def fused_snn_net_pallas(spikes: jax.Array, ws: list, params: jax.Array, *,
     junk out of the occupancy test. ``granularity`` sets the gate's
     sub-tile resolution (`skip_layout`): 1 gates whole input tiles, G in
     {2, 4, 8} gates row blocks of 128/G lanes independently.
+
+    ``v_init`` (streaming entry): per-layer (B, Nop) int32 membrane state,
+    pre-padded like ws, seeding the VMEM V scratch instead of zeros — the
+    carried state of a `stream_step` tick.
 
     Returns (rasters, v_finals, skips): rasters — list of (T, B, Nop) int8
     per spiking layer ([] when emit_rasters=False); v_finals — list of
@@ -265,12 +285,19 @@ def fused_snn_net_pallas(spikes: jax.Array, ws: list, params: jax.Array, *,
         neuron=neuron, clamp_mode=clamp_mode, timesteps=T,
         emit_rasters=emit_rasters, sparse=sparse, granularity=granularity,
         logical_widths=tuple(logical_widths),
-        batch_logical=batch_logical, block_b=block_b)
+        batch_logical=batch_logical, block_b=block_b,
+        has_v_init=v_init is not None)
 
     in_specs = [pl.BlockSpec((T, block_b, spikes.shape[2]),
                              lambda b: (0, b, 0))]
     in_specs += [pl.BlockSpec(w.shape, lambda b: (0, 0)) for w in ws]
     in_specs += [pl.BlockSpec(params.shape, lambda b: (0, 0))]
+    if v_init is not None:
+        if len(v_init) != len(ws):
+            raise ValueError(f"v_init needs one (B, Nop) state per layer "
+                             f"({len(ws)}), got {len(v_init)}")
+        in_specs += [pl.BlockSpec((block_b, w.shape[1]), lambda b: (b, 0))
+                     for w in ws]
 
     out_specs, out_shape = [], []
     if emit_rasters:
@@ -296,7 +323,7 @@ def fused_snn_net_pallas(spikes: jax.Array, ws: list, params: jax.Array, *,
         out_shape=out_shape,
         scratch_shapes=scratch,
         interpret=interpret,
-    )(spikes, *ws, params)
+    )(spikes, *ws, params, *(v_init if v_init is not None else ()))
     outs = list(outs)
     skips = outs.pop()[:, :sum(n_cols)] if sparse else None
     rasters = outs[:n_spiking] if emit_rasters else []

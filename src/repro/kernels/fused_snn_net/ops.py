@@ -79,7 +79,8 @@ def fused_snn_net(spikes: jax.Array, ws: list, *, thresholds: tuple,
                   clamp_mode: str = "saturate", block_b: int = 8,
                   use_pallas: bool = True, interpret: bool = False,
                   emit_rasters: bool = True, use_sparse: bool = False,
-                  gate_granularity: int = 1, readout: bool = True):
+                  gate_granularity: int = 1, readout: bool = True,
+                  v_init: list = None):
     """Run a (T, B, N0) encoder spike raster through the whole fc stack.
 
     ``ws``: per-layer int8 weights, spiking FCs first, readout last;
@@ -99,9 +100,19 @@ def fused_snn_net(spikes: jax.Array, ws: list, *, thresholds: tuple,
 
     ``use_pallas=False`` selects a pure-jnp reference with identical
     semantics (scan of isa.layer_timestep_int over the stack).
+
+    ``v_init`` (streaming entry): per-layer (B, n_out) int32 membrane state
+    (logical widths, readout last) resuming a previous call instead of
+    starting from V = 0. Integer accumulation is exact, so splitting a
+    presentation into chunks that thread final V back in as ``v_init``
+    reproduces the single-call result bit for bit — the contract
+    `core.pipeline.stream_step` is built on.
     """
     thresholds, leaks = tuple(thresholds), tuple(leaks)
     _check_stack(spikes, ws)
+    if v_init is not None and len(v_init) != len(ws):
+        raise ValueError(f"v_init needs one (B, n_out) state per layer "
+                         f"({len(ws)}), got {len(v_init)}")
     if gate_granularity != 1 and not use_sparse:
         raise ValueError("gate_granularity is an event-gating knob; pass "
                          "use_sparse=True to gate at granularity "
@@ -119,18 +130,24 @@ def fused_snn_net(spikes: jax.Array, ws: list, *, thresholds: tuple,
     if not use_pallas:
         return _fused_snn_net_ref(spikes, ws, thresholds, leaks, neuron,
                                   clamp_mode, emit_rasters, use_sparse,
-                                  readout, gate_granularity)
+                                  readout, gate_granularity, v_init)
     T, B, N0 = spikes.shape
     s = _pad_axis(_pad_axis(spikes.astype(jnp.int8), 2, LANE), 1, block_b)
     ws_p = [_pad_axis(_pad_axis(w.astype(jnp.int8), 0, LANE), 1, LANE)
             for w in ws]
+    v_init_p = None
+    if v_init is not None:
+        # padded batch rows / lanes resume from 0 V, exactly as a
+        # from-scratch call initializes them — padding junk stays invisible
+        v_init_p = [_pad_axis(_pad_axis(v.astype(jnp.int32), 1, LANE),
+                              0, block_b) for v in v_init]
     params = jnp.asarray([[t, lk] for t, lk in zip(thresholds, leaks)],
                          jnp.int32).reshape(len(thresholds), 2)
     rasters, v_finals, skips = fused_snn_net_pallas(
         s, ws_p, params, neuron=neuron, clamp_mode=clamp_mode,
         block_b=block_b, emit_rasters=emit_rasters, interpret=interpret,
         sparse=use_sparse, granularity=gate_granularity, has_readout=readout,
-        logical_widths=widths, batch_logical=B)
+        logical_widths=widths, batch_logical=B, v_init=v_init_p)
     rasters = [r[:, :B, :w.shape[1]]
                for r, w in zip(rasters, ws[:n_spiking])]
     v_finals = [v[:B, :w.shape[1]] for v, w in zip(v_finals, ws)]
@@ -145,7 +162,7 @@ def fused_snn_net(spikes: jax.Array, ws: list, *, thresholds: tuple,
 
 def _fused_snn_net_ref(spikes, ws, thresholds, leaks, neuron, clamp_mode,
                        emit_rasters, use_sparse=False, readout=True,
-                       gate_granularity=1):
+                       gate_granularity=1, v_init=None):
     """Pure-jnp oracle: the word-level ISA scanned over the network. In
     ``use_sparse`` mode the AccW2V matmul of each lane block (the whole
     layer at granularity 1) is wrapped in a `lax.cond` on whole-batch
@@ -205,7 +222,10 @@ def _fused_snn_net_ref(spikes, ws, thresholds, leaks, neuron, clamp_mode,
             skips = [s + d for s, d in zip(skips, skipped)]
         return (tuple(vs), tuple(skips)), tuple(rasters)
 
-    vs0 = tuple(jnp.zeros((B, w.shape[1]), jnp.int32) for w in ws)
+    if v_init is not None:
+        vs0 = tuple(v.astype(jnp.int32) for v in v_init)
+    else:
+        vs0 = tuple(jnp.zeros((B, w.shape[1]), jnp.int32) for w in ws)
     skips0 = tuple(jnp.zeros((len(b),), jnp.int32) for b in blocks)
     (vs, skips), rasters = jax.lax.scan(step, (vs0, skips0),
                                         spikes.astype(jnp.int8))

@@ -238,9 +238,12 @@ def attention_decode(x: jax.Array, p: dict, cfg: ModelConfig, cache: dict,
     if use_rope and cfg.rope_theta > 0:
         q = apply_rope(q, pos[:, None], cfg.rope_theta)
         k_new = apply_rope(k_new, pos[:, None], cfg.rope_theta)
-    # write at position pos (same for all batch lanes in the dry-run driver)
-    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), pos[0], axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), pos[0], axis=1)
+    # per-lane scatter at each lane's own position: continuous-batching
+    # slots sit at different sequence lengths, so a shared pos[0] write
+    # (the old dynamic_update_slice) would corrupt every other lane's cache
+    b_idx = jnp.arange(B)
+    k_cache = cache["k"].at[b_idx, pos].set(k_new[:, 0].astype(cache["k"].dtype))
+    v_cache = cache["v"].at[b_idx, pos].set(v_new[:, 0].astype(cache["v"].dtype))
     out = _sdpa(q, k_cache, v_cache, causal=False, kv_len=pos + 1)
     return out.reshape(B, T, -1) @ p["wo"], {"k": k_cache, "v": v_cache}
 
@@ -287,8 +290,10 @@ def mla_attention(x: jax.Array, p: dict, cfg: ModelConfig, positions: jax.Array,
         q_pos = positions
     else:
         upd = jnp.concatenate([c_kv, k_rope_new[:, :, 0]], axis=-1)
-        latent_all = jax.lax.dynamic_update_slice_in_dim(
-            latent_cache, upd.astype(latent_cache.dtype), pos[0], axis=1)
+        # per-lane scatter (decode is T == 1): same heterogeneous-length
+        # continuous-batching fix as attention_decode
+        latent_all = latent_cache.at[jnp.arange(B), pos].set(
+            upd[:, 0].astype(latent_cache.dtype))
         kv_len, causal = pos + 1, False
         q_pos = positions
 

@@ -463,8 +463,18 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
 
 
 def prefill(params, batch: dict, cfg: ModelConfig, max_len: int,
-            parallel: Optional[ParallelConfig] = None):
-    """Process the prompt; return (last-token logits, populated cache)."""
+            parallel: Optional[ParallelConfig] = None, length=None):
+    """Process the prompt; return (last-token logits, populated cache).
+
+    ``length`` (scalar int32, may be traced): the true prompt length when
+    ``batch["tokens"]`` is right-padded to a compile-shape bucket. Logits
+    are read at position length-1 and ``cache["len"]`` is set to length, so
+    one compiled variant serves every prompt length in the bucket. Exact
+    for causal-attention stacks: position length-1 never attends the
+    padding (causality), padded K/V slots beyond length are masked out of
+    decode by ``kv_len`` and overwritten as decode advances. NOT valid for
+    recurrent mixers (ssm/rwkv), whose state would integrate the padding —
+    callers gate on the config (see ServeEngine._bucket_prompts)."""
     parallel = parallel or ParallelConfig()
     x, positions, enc_src = _embed_inputs(params, batch, cfg)
     enc_out = None
@@ -476,8 +486,14 @@ def prefill(params, batch: dict, cfg: ModelConfig, max_len: int,
     x, cache, _ = _run_stack(params, x, cfg, positions, cache=cache,
                              enc_out=enc_out, parallel=parallel)
     x = _norm(x, params["final_norm"], cfg)
-    logits = _logits(params, x[:, -1:], cfg)[:, 0]
-    cache["len"] = jnp.full((x.shape[0],), x.shape[1], jnp.int32)
+    if length is None:
+        last = x[:, -1:]
+        n = jnp.int32(x.shape[1])
+    else:
+        n = jnp.asarray(length, jnp.int32)
+        last = jax.lax.dynamic_slice_in_dim(x, n - 1, 1, axis=1)
+    logits = _logits(params, last, cfg)[:, 0]
+    cache["len"] = jnp.full((x.shape[0],), n, jnp.int32)
     return logits, cache
 
 

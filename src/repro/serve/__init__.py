@@ -1,1 +1,5 @@
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import EngineUndrained, Request, ServeEngine
+from repro.serve.snn_engine import SNNRequest, SNNServeEngine
+
+__all__ = ["EngineUndrained", "Request", "ServeEngine", "SNNRequest",
+           "SNNServeEngine"]

@@ -6,14 +6,24 @@ Real-system behaviours kept:
     queue by prefilling into per-slot cache lanes;
   * one jit'd decode_step for the whole batch every tick (padded slots decode
     garbage that is masked out — standard continuous-batching trade);
-  * per-slot stop conditions (max tokens / eos).
+  * per-slot stop conditions (max tokens / eos);
+  * prompt lengths bucket to powers of two (pad + true-length mask) so the
+    prefill jit cache stays bounded instead of compiling one variant per
+    distinct length.
 
 serve_step (= lm.decode_step under jit) is exactly what the dry-run lowers
 for the decode_* shapes.
+
+Dispatch discipline: the engine issues exactly one device decode and one
+host->device token-buffer upload per tick. ``last_tokens`` lives on the
+host (per-slot writes are free numpy stores) and crosses to the device
+once, in `_token_batch` — the former per-slot ``.at[i, 0].set`` pattern
+dispatched one scatter kernel per active slot per tick.
 """
 from __future__ import annotations
 
 import queue
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -23,6 +33,83 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, ParallelConfig
 from repro.models import lm
+
+# prompt-length bucketing: smallest pad-to size, and the most compiled
+# prefill variants kept live (LRU) — N distinct prompt lengths cost at most
+# log2(max_len) compilations, and at most this many stay cached
+PREFILL_BUCKET_MIN = 8
+PREFILL_CACHE_MAX = 8
+
+
+class EngineUndrained(RuntimeError):
+    """`run_until_drained` hit its tick cap with work still queued/active.
+
+    Carries what DID finish (``finished``) and how many requests are still
+    pending (``pending`` = queued + occupying a slot), so callers can
+    distinguish a partial drain from a complete one instead of silently
+    treating the truncated ``finished`` list as the full result."""
+
+    def __init__(self, finished: list, pending: int, max_ticks: int):
+        # snapshot, not the engine's live list: the engine may keep
+        # draining after the raise, and a caught exception must keep
+        # describing the state it was raised in
+        self.finished = list(finished)
+        self.pending = pending
+        self.max_ticks = max_ticks
+        super().__init__(
+            f"engine undrained after max_ticks={max_ticks}: "
+            f"{len(finished)} request(s) finished, {pending} still pending")
+
+
+def probe_batch_axes(state, probe):
+    """Per-leaf batch axis of a state tree, determined structurally: the
+    unique axis whose extent follows the batch argument, found by comparing
+    against a B+1 probe tree. Probing (rather than shape-guessing) stays
+    unambiguous even when B coincides with another dimension (B == 1 would
+    make every size-1 axis a candidate). Leaves without a batch axis map
+    to None."""
+    return jax.tree_util.tree_map(
+        lambda full, grown: next(
+            (ax for ax in range(getattr(full, "ndim", 0))
+             if full.shape[ax] != grown.shape[ax]), None),
+        state, probe)
+
+
+def lane_scatter(lane_tree, full_tree, axes, i: int):
+    """Scatter a single-lane state tree into batch lane i of the full tree
+    along each leaf's batch axis (axes from `probe_batch_axes`; ax-None
+    leaves are shared and left untouched). The admit-by-lane-copy primitive
+    both serving engines use — on the LM engine the lanes are KV-cache
+    slots, on the SNN engine they are membrane-potential slots."""
+    def put(lane, full, ax):
+        if ax is None:
+            return full
+        idx = [slice(None)] * full.ndim
+        idx[ax] = slice(i, i + 1)
+        return full.at[tuple(idx)].set(jnp.asarray(lane).astype(full.dtype))
+    return jax.tree_util.tree_map(put, lane_tree, full_tree, axes)
+
+
+class SlotEngine:
+    """Shared continuous-batching mechanics: the drain loop and its
+    undrained contract. Subclasses provide ``step() -> int`` (active slots
+    after the tick), ``queue``, ``slots`` (entries with a ``req`` field),
+    and ``finished``."""
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> list:
+        """Tick until queue and slots are empty. Raises `EngineUndrained`
+        (carrying the partial ``finished`` list) when the tick cap is hit
+        with work still pending — a truncated run never masquerades as a
+        complete one."""
+        for _ in range(max_ticks):
+            n = self.step()
+            if n == 0 and self.queue.empty():
+                return self.finished
+        if self.queue.empty() and all(s.req is None for s in self.slots):
+            return self.finished
+        pending = self.queue.qsize() + sum(
+            1 for s in self.slots if s.req is not None)
+        raise EngineUndrained(self.finished, pending, max_ticks)
 
 
 @dataclass
@@ -40,7 +127,7 @@ class _Slot:
     remaining: int = 0
 
 
-class ServeEngine:
+class ServeEngine(SlotEngine):
     def __init__(self, params, cfg: ModelConfig, *, batch_slots: int = 4,
                  max_len: int = 256, parallel: Optional[ParallelConfig] = None):
         self.params = params
@@ -52,34 +139,56 @@ class ServeEngine:
         self.queue: "queue.Queue[Request]" = queue.Queue()
         self.finished: list[Request] = []
         self.cache = lm.init_cache(cfg, batch_slots, max_len)
-        self.last_tokens = jnp.zeros((batch_slots, 1), jnp.int32)
-        # Per-leaf batch axis of the cache tree, determined structurally: the
-        # unique axis whose extent follows the batch argument. Probing with
-        # batch_slots + 1 makes the comparison unambiguous even when
-        # batch_slots coincides with another dimension (batch_slots == 1
-        # would make a shape-based guess ambiguous on every size-1 axis).
+        # host-resident token buffer; uploaded once per tick (_token_batch)
+        self.last_tokens = np.zeros((batch_slots, 1), np.int32)
         probe = jax.eval_shape(lambda: lm.init_cache(cfg, batch_slots + 1,
                                                      max_len))
-        self._batch_axes = jax.tree_util.tree_map(
-            lambda full, grown: next(
-                (ax for ax in range(full.ndim)
-                 if full.shape[ax] != grown.shape[ax]), None),
-            self.cache, probe)
+        self._batch_axes = probe_batch_axes(self.cache, probe)
 
         self._decode = jax.jit(
             lambda p, t, c: lm.decode_step(p, t, c, cfg, self.parallel))
-        self._prefill_cache = {}    # per prompt length bucket
+        self._prefill_cache = OrderedDict()   # per prompt-length bucket (LRU)
+        # Length bucketing (pad + mask in lm.prefill) is exact only when no
+        # mixer integrates the padded positions into recurrent state:
+        # causal attention ignores them at the true last position, and the
+        # kv_len decode mask hides their cache slots. Recurrent families
+        # (ssm / rwkv), MLA, and enc-dec fall back to exact-length variants
+        # (still LRU-capped).
+        self._bucket_prompts = (
+            cfg.mla is None and not cfg.is_encoder_decoder
+            and all(cfg.is_attention_layer(i) for i in range(cfg.n_layers)))
 
     # -- request intake ------------------------------------------------------
     def submit(self, req: Request) -> None:
         self.queue.put(req)
 
-    def _prefill_fn(self, plen: int):
-        if plen not in self._prefill_cache:
-            self._prefill_cache[plen] = jax.jit(
-                lambda p, b: lm.prefill(p, b, self.cfg, self.max_len,
-                                        self.parallel))
-        return self._prefill_cache[plen]
+    def _prefill_bucket(self, plen: int) -> int:
+        """Compile-shape bucket for a prompt length: next power of two (at
+        least PREFILL_BUCKET_MIN, at most max_len) when the config admits
+        pad+mask prefill; the exact length otherwise."""
+        if not self._bucket_prompts:
+            return plen
+        bucket = max(PREFILL_BUCKET_MIN, 1 << max(plen - 1, 0).bit_length())
+        return max(plen, min(bucket, self.max_len))
+
+    def _prefill_fn(self, bucket: int):
+        if bucket in self._prefill_cache:
+            self._prefill_cache.move_to_end(bucket)
+        else:
+            self._prefill_cache[bucket] = jax.jit(
+                lambda p, b, n: lm.prefill(p, b, self.cfg, self.max_len,
+                                           self.parallel, length=n))
+            while len(self._prefill_cache) > PREFILL_CACHE_MAX:
+                self._prefill_cache.popitem(last=False)
+        return self._prefill_cache[bucket]
+
+    def _prefill(self, prompt: np.ndarray):
+        plen = len(prompt)
+        bucket = self._prefill_bucket(plen)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :plen] = prompt
+        return self._prefill_fn(bucket)(
+            self.params, {"tokens": jnp.asarray(toks)}, jnp.int32(plen))
 
     def _admit(self) -> None:
         for i, slot in enumerate(self.slots):
@@ -94,10 +203,7 @@ class ServeEngine:
                 if req.max_new_tokens <= 0:      # nothing to generate
                     self.finished.append(req)
                     continue
-                plen = len(req.prompt)
-                logits, cache1 = self._prefill_fn(plen)(
-                    self.params,
-                    {"tokens": jnp.asarray(req.prompt[None], jnp.int32)})
+                logits, cache1 = self._prefill(np.asarray(req.prompt))
                 tok = int(jnp.argmax(logits[0]))
                 req.out_tokens.append(tok)
                 if req.max_new_tokens <= 1 or tok == req.eos_id:
@@ -105,27 +211,26 @@ class ServeEngine:
                     continue
                 # copy the single-lane cache into slot lane i, along each
                 # leaf's structurally-determined batch axis
-                def put(lane, full, ax):
-                    if ax is None:
-                        return full
-                    idx = [slice(None)] * full.ndim
-                    idx[ax] = slice(i, i + 1)
-                    return full.at[tuple(idx)].set(lane.astype(full.dtype))
-                self.cache = jax.tree_util.tree_map(
-                    put, cache1, self.cache, self._batch_axes)
-                self.last_tokens = self.last_tokens.at[i, 0].set(tok)
+                self.cache = lane_scatter(cache1, self.cache,
+                                          self._batch_axes, i)
+                self.last_tokens[i, 0] = tok     # host write, no dispatch
                 slot.req = req
                 slot.remaining = req.max_new_tokens - 1
                 break
 
     # -- decode tick ----------------------------------------------------------
+    def _token_batch(self) -> jax.Array:
+        """The single host->device token upload of a tick."""
+        return jnp.asarray(self.last_tokens)
+
     def step(self) -> int:
         """One engine tick: admit + batched decode. Returns #active slots."""
         self._admit()
         active = [s.req is not None for s in self.slots]
         if not any(active):
             return 0
-        logits, self.cache = self._decode(self.params, self.last_tokens, self.cache)
+        logits, self.cache = self._decode(self.params, self._token_batch(),
+                                          self.cache)
         next_tokens = np.asarray(jnp.argmax(logits, axis=-1))
         for i, slot in enumerate(self.slots):
             if slot.req is None:
@@ -133,15 +238,8 @@ class ServeEngine:
             tok = int(next_tokens[i])
             slot.req.out_tokens.append(tok)
             slot.remaining -= 1
-            self.last_tokens = self.last_tokens.at[i, 0].set(tok)
+            self.last_tokens[i, 0] = tok         # host write, no dispatch
             if slot.remaining <= 0 or tok == slot.req.eos_id:
                 self.finished.append(slot.req)
                 self.slots[i] = _Slot()
         return sum(1 for s in self.slots if s.req is not None)
-
-    def run_until_drained(self, max_ticks: int = 10_000) -> list[Request]:
-        for _ in range(max_ticks):
-            n = self.step()
-            if n == 0 and self.queue.empty():
-                break
-        return self.finished

@@ -1,0 +1,258 @@
+"""Streaming SNN serving engine: continuous batching over persistent
+membrane-potential slots.
+
+The LM engine's per-slot state is a KV-cache lane; IMPULSE's per-slot state
+is the membrane-potential tree — V_MEM fused next to the weights is exactly
+the state that makes streaming serving natural on this architecture. This
+engine mirrors `ServeEngine`:
+
+  * fixed B decode slots, each owning one batch lane of a single
+    `pipeline.StreamState` tree (every layer's V for that stream);
+  * admit-by-lane-copy: a fresh request's zero state is scattered into the
+    slot's lane along each leaf's structurally-determined batch axis (the
+    same B-vs-B+1 probe the LM engine uses on its cache tree);
+  * one `stream_step` per tick for the whole batch — idle lanes integrate
+    zero current and are masked out, the standard continuous-batching
+    trade. Batch lanes never interact (every op is per-lane), so each
+    request's output is bit-identical to serving it alone;
+  * per-slot stop conditions: fixed tick budget (the frame sequence runs
+    out) or readout-threshold early exit (|logit| confidence);
+  * per-slot event accounting: input events per macro-stack layer row are
+    accumulated from each tick's rasters and finalize into a per-request
+    `pipeline.SparsityReport` — the skipped-work fractions and instruction
+    counts feed `energy.measured_edp` exactly like the batch path's
+    reports do (tests close the loop against isolated runs).
+
+Event-gated ticks come from the backend choice: ``pallas_sparse`` /
+``int_ref(use_sparse=True)`` skip silent-tile work inside the tick, and
+``ref_events`` executes the spike-list upper bound; the per-slot row-skip
+accounting is backend-independent (it reads the rasters).
+"""
+from __future__ import annotations
+
+import queue
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pipeline
+from repro.core.pipeline import SNNProgram, SparsityReport
+from repro.serve.engine import SlotEngine, lane_scatter, probe_batch_axes
+
+
+@dataclass
+class SNNRequest:
+    rid: int
+    frames: np.ndarray                    # (T, *in_shape) input currents
+    max_ticks: Optional[int] = None       # default: len(frames)
+    stop_threshold: Optional[float] = None  # early exit when max|logit| >= thr
+    # -- filled at finish ----------------------------------------------------
+    logits: Optional[np.ndarray] = None
+    v_out: Optional[np.ndarray] = None
+    ticks: int = 0
+    report: Optional[SparsityReport] = None
+
+
+@dataclass
+class _Slot:
+    req: Optional[SNNRequest] = None
+    cursor: int = 0                       # next frame index to present
+    ticks: int = 0
+    row_events: list = field(default_factory=list)
+
+
+def merge_reports(reports: list) -> SparsityReport:
+    """Pool per-request reports (batch=1 each) into one workload report:
+    events/row_events/frame counts add; the merged report's instruction
+    counts equal the sum of the parts (counting is linear in events and
+    frames), so engine-level EDP accounting stays exact."""
+    if not reports:
+        raise ValueError("merge_reports needs at least one report")
+    head = reports[0]
+    for r in reports[1:]:
+        if (r.n_in, r.n_out, r.neurons) != (head.n_in, head.n_out,
+                                            head.neurons):
+            raise ValueError("cannot merge reports of different programs")
+    return SparsityReport(
+        n_in=head.n_in, n_out=head.n_out, neurons=head.neurons,
+        events=tuple(sum(r.events[i] for r in reports)
+                     for i in range(len(head.n_in))),
+        frames=sum(r.frames for r in reports),
+        timesteps=sum(r.timesteps for r in reports),
+        batch=1,
+        layer_frames=tuple(sum(r.frames_by_layer[i] for r in reports)
+                           for i in range(len(head.n_in))),
+        row_events=tuple(
+            sum(np.asarray(r.row_events[i], np.int64) for r in reports)
+            for i in range(len(head.n_in))))
+
+
+class SNNServeEngine(SlotEngine):
+    """Continuous batching for streaming SNN inference (see module docs).
+
+    ``backend`` is any `pipeline.STREAM_BACKENDS` entry; ``step_kw`` passes
+    through to `stream_step` (block_b / interpret / gate_granularity /
+    use_sparse). ``track_events=False`` disables raster emission and
+    per-slot accounting — the pure-serving configuration in which
+    inter-layer spikes never leave the kernel."""
+
+    def __init__(self, program: SNNProgram, *, batch_slots: int = 4,
+                 backend: str = "int_ref", track_events: bool = True,
+                 step_kw: Optional[dict] = None):
+        self.program = program
+        self.backend = backend
+        self.B = batch_slots
+        self.track_events = track_events
+        self.step_kw = dict(step_kw or {})
+        self.state = pipeline.init_stream_state(program, batch_slots, backend)
+        self._fresh = pipeline.init_stream_state(program, 1, backend)
+        # structurally-determined batch axis per state leaf (same B-vs-B+1
+        # probe ServeEngine runs on its cache tree, shapes only — no
+        # device allocation); leaves without a batch axis (the tick
+        # counter) map to None and stay shared
+        probe = jax.eval_shape(lambda: pipeline.init_stream_state(
+            program, batch_slots + 1, backend))
+        self._batch_axes = probe_batch_axes(self.state, probe)
+        self.slots = [_Slot() for _ in range(batch_slots)]
+        self.queue: "queue.Queue[SNNRequest]" = queue.Queue()
+        self.finished: list[SNNRequest] = []
+        self._n_in, self._n_out, self._neurons = \
+            pipeline._report_geometry(program)
+        # frames each macro-stack layer runs per engine tick and per lane:
+        # 1 for FC layers, H_out*W_out output positions for im2col'd convs
+        self._lane_frames = tuple(
+            int(np.prod(ly.state_shape[:-1])) if ly.kind == "conv" else 1
+            for ly in program.macro_stack)
+        # per-tick input frame shape: the conv encoder consumes cfg.in_shape
+        # images; FC/encoder-led programs consume their input-layer currents
+        self._frame_shape = (tuple(program.cfg.in_shape)
+                             if program.layers[0].kind == "conv"
+                             else tuple(program.layers[0].state_shape))
+        self.ticks = 0                    # engine ticks executed
+
+    # -- request intake ------------------------------------------------------
+    def submit(self, req: SNNRequest) -> None:
+        if req.frames.shape[1:] != tuple(self._frame_shape):
+            raise ValueError(
+                f"request {req.rid}: frame shape {req.frames.shape[1:]} "
+                f"does not match the program input {self._frame_shape}")
+        self.queue.put(req)
+
+    @staticmethod
+    def _tick_budget(req: SNNRequest) -> int:
+        """Ticks this request may stream: its frame count, clipped by an
+        explicit non-negative max_ticks."""
+        if req.max_ticks is None:
+            return len(req.frames)
+        return min(len(req.frames), max(req.max_ticks, 0))
+
+    def _admit(self) -> None:
+        for i, slot in enumerate(self.slots):
+            if slot.req is not None:
+                continue
+            # like the LM engine's finish-at-admit: a request with nothing
+            # to stream (no frames, or max_ticks <= 0) never occupies a
+            # slot or runs a spurious tick — keep draining the queue until
+            # one actually needs ticks
+            while not self.queue.empty():
+                req = self.queue.get()
+                if self._tick_budget(req) == 0:
+                    req.logits = np.zeros(self._n_out[-1], np.float32)
+                    if self.track_events:   # reports only when accounting
+                        req.report = self._finalize_report(_Slot(
+                            req=req, row_events=[np.zeros(n, np.int64)
+                                                 for n in self._n_in]))
+                    self.finished.append(req)
+                    continue
+                # admit-by-lane-copy: the fresh request's (zero) V tree
+                # enters the slot's lane; the V_MEM lane is the KV-cache
+                # analogue
+                self.state = lane_scatter(self._fresh, self.state,
+                                          self._batch_axes, i)
+                slot.req = req
+                slot.cursor = 0
+                slot.ticks = 0
+                slot.row_events = [np.zeros(n, np.int64)
+                                   for n in self._n_in]
+                break
+
+    # -- per-slot event accounting ------------------------------------------
+    def _account(self, rasters: list, active: list) -> None:
+        """Fold this tick's macro-stack input rasters into the active
+        slots' per-row event tallies. `_stack_input_rasters` lowers conv
+        spike maps to their im2col patch rasters, so conv layers count
+        events per (output position, patch row) — exactly as the macro
+        issues them; lane i owns the i-th block of P contiguous frames."""
+        rs = pipeline._stack_input_rasters(
+            self.program, [np.asarray(r)[None] for r in rasters])
+        for li, (r, p) in enumerate(zip(rs, self._lane_frames)):
+            counts = r[0].astype(np.int64)        # (B * P_l, n_in_l)
+            for i in active:
+                self.slots[i].row_events[li] += \
+                    counts[i * p:(i + 1) * p].sum(axis=0)
+
+    def _finalize_report(self, slot: _Slot) -> SparsityReport:
+        """The per-request SparsityReport: batch 1, one timestep per served
+        tick — same geometry/accounting as `pipeline.sparsity_report` on an
+        isolated run of the request's frames."""
+        t = slot.ticks
+        row_events = tuple(np.asarray(r, np.int64) for r in slot.row_events)
+        return SparsityReport(
+            n_in=self._n_in, n_out=self._n_out, neurons=self._neurons,
+            events=tuple(int(r.sum()) for r in row_events),
+            frames=t, timesteps=t, batch=1,
+            layer_frames=tuple(t * p for p in self._lane_frames),
+            row_events=row_events)
+
+    # -- engine tick ---------------------------------------------------------
+    def step(self) -> int:
+        """One engine tick: admit + one batched stream_step. Returns #active
+        slots remaining after evictions."""
+        self._admit()
+        active = [i for i, s in enumerate(self.slots) if s.req is not None]
+        if not active:
+            return 0
+        frame = np.zeros((self.B, *self._frame_shape), np.float32)
+        for i in active:
+            slot = self.slots[i]
+            frame[i] = slot.req.frames[slot.cursor]
+        self.state, out = pipeline.stream_step(
+            self.program, self.state, jnp.asarray(frame), self.backend,
+            emit_rasters=self.track_events, **self.step_kw)
+        self.ticks += 1
+        if self.track_events and out.rasters is not None:
+            self._account(out.rasters, active)
+        logits = np.asarray(out.logits)
+        v_out = np.asarray(out.v_out)
+        for i in active:
+            slot = self.slots[i]
+            req = slot.req
+            slot.cursor += 1
+            slot.ticks += 1
+            done = slot.cursor >= self._tick_budget(req)
+            if (req.stop_threshold is not None
+                    and float(np.max(np.abs(logits[i])))
+                    >= req.stop_threshold):
+                done = True                       # confident readout: stop
+            if done:
+                req.logits = logits[i].copy()
+                req.v_out = v_out[i].copy()
+                req.ticks = slot.ticks
+                if self.track_events:
+                    req.report = self._finalize_report(slot)
+                self.finished.append(req)
+                self.slots[i] = _Slot()
+        return sum(1 for s in self.slots if s.req is not None)
+
+    # run_until_drained (and its EngineUndrained contract) comes from
+    # SlotEngine — one drain loop shared with the LM engine.
+
+    # -- workload accounting -------------------------------------------------
+    def aggregate_report(self) -> SparsityReport:
+        """Pooled SparsityReport over every finished request — the
+        engine-level skipped-work/EDP accounting input."""
+        reps = [r.report for r in self.finished if r.report is not None]
+        return merge_reports(reps)

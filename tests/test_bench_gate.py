@@ -111,3 +111,22 @@ def test_write_baseline_refuses_crashed_payload(tmp_path):
     cur.write_text(json.dumps(_payload([("g", "tile=0.5")])))
     rc = bench_gate.main([str(cur), str(base), "--write-baseline"])
     assert rc == 0 and base.exists()
+
+
+def test_serve_skip_fraction_is_gated():
+    """The serving benchmark's pooled row-skip fraction (skipped_rows) is a
+    one-sided gated key like the other skip fractions; its throughput
+    numbers stay report-only."""
+    base = _payload([("serve_snn_s85",
+                      "frames_per_s=500.0 words_per_s=50.0 "
+                      "skipped_rows=0.850 instr=67054 offered=0.85 reqs=4")])
+    ok = _payload([("serve_snn_s85",
+                    "frames_per_s=100.0 words_per_s=10.0 "
+                    "skipped_rows=0.900 instr=67054 offered=0.85 reqs=4")])
+    fails, _ = bench_gate.compare(ok, base)
+    assert not fails                      # slower wall-clock never fails
+    bad = _payload([("serve_snn_s85",
+                     "frames_per_s=500.0 words_per_s=50.0 "
+                     "skipped_rows=0.700 instr=67054 offered=0.85 reqs=4")])
+    fails, _ = bench_gate.compare(bad, base)
+    assert len(fails) == 1 and "skipped_rows" in fails[0]

@@ -288,3 +288,89 @@ def test_serve_engine_single_slot_lane_scatter():
     assert len(done) == 2
     for r in done:
         assert r.out_tokens == toks
+
+
+def test_serve_engine_one_dispatch_per_tick():
+    """Regression (dispatch storm): a tick must issue exactly one device
+    decode and one host->device token-buffer upload, independent of how
+    many slots are active — the old per-slot ``.at[i, 0].set`` pattern
+    dispatched one scatter per active slot per tick."""
+    cfg = reduced_config(get_config("llama3.2-1b"))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(params, cfg, batch_slots=3, max_len=64)
+    counts = {"decode": 0, "upload": 0}
+    decode, token_batch = eng._decode, eng._token_batch
+
+    def counting_decode(*a):
+        counts["decode"] += 1
+        return decode(*a)
+
+    def counting_token_batch():
+        counts["upload"] += 1
+        return token_batch()
+
+    eng._decode = counting_decode
+    eng._token_batch = counting_token_batch
+    rng = np.random.default_rng(2)
+    for rid in range(3):                         # all slots active
+        eng.submit(Request(rid=rid, prompt=rng.integers(0, 64, 5),
+                           max_new_tokens=6))
+    for tick in range(1, 4):                     # slots stay active: 3 full
+        assert eng.step() == 3                   # 3-slot decode ticks
+        assert counts["decode"] == tick
+        assert counts["upload"] == tick
+    eng.run_until_drained()
+    assert all(len(r.out_tokens) == 6 for r in eng.finished)
+    # the token buffer itself is host memory: slot updates are free stores
+    assert isinstance(eng.last_tokens, np.ndarray)
+
+
+def test_serve_engine_undrained_raises():
+    """Regression: hitting max_ticks with work still queued/active must not
+    return a silently-partial finished list."""
+    from repro.serve import EngineUndrained
+    cfg = reduced_config(get_config("llama3.2-1b"))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(params, cfg, batch_slots=1, max_len=64)
+    rng = np.random.default_rng(3)
+    for rid in range(3):
+        eng.submit(Request(rid=rid, prompt=rng.integers(0, 64, 4),
+                           max_new_tokens=8))
+    with pytest.raises(EngineUndrained) as ei:
+        eng.run_until_drained(max_ticks=3)
+    assert ei.value.pending >= 1
+    assert len(ei.value.finished) < 3
+    # the engine is resumable: a fresh drain finishes the remaining work
+    done = eng.run_until_drained()
+    assert sorted(r.rid for r in done) == [0, 1, 2]
+    assert all(len(r.out_tokens) == 8 for r in done)
+
+
+def test_serve_engine_prefill_length_bucketing():
+    """Regression (unbounded jit cache): 20 distinct prompt lengths must
+    compile at most 6 prefill variants (power-of-two buckets, pad + true-
+    length mask), and bucketed prefill must stay exact — engine output
+    equals manual unpadded prefill + decode."""
+    cfg = reduced_config(get_config("llama3.2-1b"))
+    params = lm.init_params(jax.random.PRNGKey(1), cfg, dtype=jnp.float32)
+    assert all(cfg.is_attention_layer(i) for i in range(cfg.n_layers))
+    eng = ServeEngine(params, cfg, batch_slots=2, max_len=64)
+    rng = np.random.default_rng(4)
+    prompts = {plen: rng.integers(0, 64, plen) for plen in range(1, 21)}
+    for rid, (plen, prompt) in enumerate(prompts.items()):
+        eng.submit(Request(rid=rid, prompt=prompt, max_new_tokens=3))
+    done = eng.run_until_drained()
+    assert len(done) == 20
+    assert len(eng._prefill_cache) <= 6
+    par = ParallelConfig(remat="none")
+    for rid, plen in [(0, 1), (6, 7), (19, 20)]:   # spot-check exactness
+        r = next(d for d in done if d.rid == rid)
+        logits, cache = lm.prefill(
+            params, {"tokens": jnp.asarray(prompts[plen][None], jnp.int32)},
+            cfg, 64, par)
+        toks = [int(jnp.argmax(logits[0]))]
+        for _ in range(2):
+            logits, cache = lm.decode_step(
+                params, jnp.asarray([[toks[-1]]], jnp.int32), cache, cfg, par)
+            toks.append(int(jnp.argmax(logits[0])))
+        assert r.out_tokens == toks, (rid, plen)

@@ -44,9 +44,12 @@ import shutil
 import sys
 
 # keys whose drop below baseline - abs_tol fails the gate (prefix match for
-# block2/block4/block8)
+# block2/block4/block8). skipped_rows is the serving engines' pooled
+# per-slot row-skip fraction (benchmarks/serve_snn.py) — deterministic on
+# the pin for the same reason the gating rows are (seeded rasters).
 SKIP_FRACTION_KEYS = ("skipped_tiles", "fc_skipped_tiles",
-                      "conv_skipped_tiles", "tile", "events")
+                      "conv_skipped_tiles", "tile", "events",
+                      "skipped_rows")
 SKIP_FRACTION_PREFIXES = ("block",)
 # keys gated two-sided at rel_tol_instr / rel_tol. The measured_* /
 # *_vs_dense spellings are the fig11 row keys — exact names, because
