@@ -39,9 +39,12 @@ SWEEP = (0.5, 0.85)
 
 
 def _serve_row(program, cfg, sparsity: float, *, n_requests: int,
-               n_words: int, slots: int, seed: int = 0) -> str:
-    eng = SNNServeEngine(program, batch_slots=slots, backend="int_ref",
-                         step_kw={"use_sparse": True})
+               n_words: int, slots: int, seed: int = 0,
+               backend: str = "int_ref", step_kw: dict = None,
+               key: str = None) -> str:
+    eng = SNNServeEngine(program, batch_slots=slots, backend=backend,
+                         step_kw=({"use_sparse": True} if step_kw is None
+                                  else step_kw))
     for req in make_requests(program, n_requests, n_words, cfg.timesteps,
                              sparsity, seed):
         eng.submit(req)
@@ -52,11 +55,17 @@ def _serve_row(program, cfg, sparsity: float, *, n_requests: int,
     rep = eng.aggregate_report()
     counts = rep.instruction_counts()
     tag = f"{int(round(sparsity * 100)):02d}"
+    extra = ""
+    if eng.device_row_events is not None:
+        # the kernel's own executed-skip ledger (equal-length request
+        # batches keep every lane occupied, so it closes against the
+        # per-slot raster accounting) — gated like the granularity rows
+        extra = f"pallas_events={eng.device_skipped_row_fraction():.3f} "
     return emit(
-        f"serve_snn_s{tag}", dt / max(eng.ticks, 1) * 1e6,
+        key or f"serve_snn_s{tag}", dt / max(eng.ticks, 1) * 1e6,
         f"frames_per_s={frames / dt:.1f} "
         f"words_per_s={frames / cfg.timesteps / dt:.1f} "
-        f"skipped_rows={rep.skipped_row_fraction:.3f} "
+        f"skipped_rows={rep.skipped_row_fraction:.3f} {extra}"
         f"instr={counts.total} offered={sparsity:.2f} reqs={len(done)}")
 
 
@@ -67,6 +76,14 @@ def run(quick: bool = False):
     n_requests, n_words, slots = (4, 2, 2) if quick else (12, 6, 4)
     rows = [_serve_row(program, cfg, s, n_requests=n_requests,
                        n_words=n_words, slots=slots) for s in SWEEP]
+    # the device event-list backend serving the same 0.85 workload: the
+    # engine's kernel-counter ledger rides along as the gated
+    # ``pallas_events`` fraction (interpret mode; wall-clock is TPU-only)
+    rows.append(_serve_row(
+        program, cfg, 0.85, n_requests=n_requests, n_words=n_words,
+        slots=slots, backend="pallas_events",
+        step_kw={"interpret": True, "block_b": slots},
+        key="serve_snn_events_s85"))
     return rows
 
 

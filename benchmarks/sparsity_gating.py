@@ -35,7 +35,8 @@ import numpy as np
 
 from benchmarks.common import emit, time_call
 from repro.kernels.fused_snn_net.events import fused_snn_net_events
-from repro.kernels.fused_snn_net.ops import fused_snn_net
+from repro.kernels.fused_snn_net.ops import (fused_snn_net,
+                                             fused_snn_net_device_events)
 
 SWEEP = (0.0, 0.25, 0.5, 0.75, 0.85, 0.95)
 
@@ -87,8 +88,10 @@ def _skip_fraction(skips, timesteps: int) -> float:
 
 def _granularity_fractions(spikes, ws, kw, T: int, block_b: int,
                            grans: tuple) -> str:
-    """One raster, every gate granularity: tile (G=1), row blocks, and the
-    event-list executor's skipped-row fraction (the upper bound)."""
+    """One raster, every gate granularity: tile (G=1), row blocks, the host
+    event-list executor's skipped-row fraction (the upper bound), and the
+    device event-list kernel's executed skip fraction (`pallas_events`,
+    from the kernel's own per-row counters — must equal the host bound)."""
     parts = []
     for g in (1,) + tuple(grans):
         _, _, skips = fused_snn_net(spikes, ws, interpret=True,
@@ -98,6 +101,9 @@ def _granularity_fractions(spikes, ws, kw, T: int, block_b: int,
         parts.append(f"{name}={_skip_fraction(skips, T):.3f}")
     _, _, stats = fused_snn_net_events(np.asarray(spikes), ws, **kw)
     parts.append(f"events={stats.skipped_row_fraction:.3f}")
+    _, _, dstats = fused_snn_net_device_events(spikes, ws, interpret=True,
+                                               block_b=block_b, **kw)
+    parts.append(f"pallas_events={dstats.skipped_row_fraction:.3f}")
     return " ".join(parts)
 
 
@@ -247,11 +253,14 @@ def _imdb_rows(quick: bool) -> list[str]:
                                 interpret=True, block_b=4,
                                 gate_granularity=8)
     ev = pipeline.run_network(program, xs, "ref_events")
+    evd = pipeline.run_network(program, xs, "pallas_events",
+                               interpret=True, block_b=4)
     rows.append(emit(
         "gating_imdb_granularity", 0.0,
         f"tile={res.aux['skipped_tile_fraction']:.3f} "
         f"block8={res8.aux['skipped_block_fraction']:.3f} "
-        f"events={ev.aux['skipped_row_fraction']:.3f}"))
+        f"events={ev.aux['skipped_row_fraction']:.3f} "
+        f"pallas_events={evd.aux['skipped_row_fraction']:.3f}"))
     return rows
 
 

@@ -482,9 +482,16 @@ def _stack_kernel_args(program: SNNProgram) -> dict:
 def _run_fc_stack(program: SNNProgram, spikes: jax.Array, *, use_pallas: bool,
                   use_sparse: bool, block_b: int, interpret: bool,
                   emit_rasters: bool, gate_granularity: int = 1,
-                  use_events: bool = False, v_init: Optional[list] = None):
+                  use_events: bool = False, v_init: Optional[list] = None,
+                  event_crossover: float = 1.0):
     kw = _stack_kernel_args(program)
-    if use_events:
+    if use_events and use_pallas:        # device event-list kernel
+        from repro.kernels.fused_snn_net.ops import fused_snn_net_device_events
+        return fused_snn_net_device_events(
+            spikes, kw.pop("ws"), block_b=block_b, interpret=interpret,
+            emit_rasters=emit_rasters, v_init=v_init,
+            event_crossover=event_crossover, **kw)
+    if use_events:                       # host spike-list executor
         from repro.kernels.fused_snn_net.events import fused_snn_net_events
         return fused_snn_net_events(spikes, kw.pop("ws"),
                                     emit_rasters=emit_rasters,
@@ -525,7 +532,8 @@ def run_stack_from_raster(program: SNNProgram, spikes_enc: jax.Array, *,
 def _conv_front_end(program: SNNProgram, spikes_enc: jax.Array, *,
                     use_pallas: bool, use_sparse: bool, block_b: int,
                     interpret: bool, gate_granularity: int = 1,
-                    use_events: bool = False, v_init: Optional[list] = None):
+                    use_events: bool = False, v_init: Optional[list] = None,
+                    event_crossover: float = 1.0):
     """Run the on-macro int conv layers on encoder spike maps. Each conv
     layer lowers onto the macro grid via im2col (mapping.py): its
     (T, B, H, W, C) input maps become a (T, B*P, k*k*C) patch raster —
@@ -538,7 +546,8 @@ def _conv_front_end(program: SNNProgram, spikes_enc: jax.Array, *,
     per-layer gate counts (None entries when dense; `events.EventStats`
     entries on the event-list path)."""
     from repro.kernels.fused_snn_net.events import fused_snn_net_events
-    from repro.kernels.fused_snn_net.ops import fused_snn_net
+    from repro.kernels.fused_snn_net.ops import (fused_snn_net,
+                                                 fused_snn_net_device_events)
     maps, v_convs, conv_skips = [], [], []
     cur = spikes_enc
     for ci, spec in enumerate(program.int_conv_stack):
@@ -554,7 +563,13 @@ def _conv_front_end(program: SNNProgram, spikes_enc: jax.Array, *,
             # conv V state is a (B, H_out, W_out, C) map; the macro executes
             # one frame per (example, output position) — flatten to match
             vi = [jnp.asarray(v_init[ci]).reshape(-1, spec.n_out)]
-        if use_events:
+        if use_events and use_pallas:    # device event-list kernel
+            rasters, v, skips = fused_snn_net_device_events(
+                patches.astype(jnp.int8),
+                [jnp.asarray(mapping.pack_conv_weights(spec.w))],
+                block_b=block_b, interpret=interpret,
+                event_crossover=event_crossover, v_init=vi, **kw)
+        elif use_events:                 # host spike-list executor
             rasters, v, skips = fused_snn_net_events(
                 patches.astype(jnp.int8),
                 [np.asarray(mapping.pack_conv_weights(spec.w))],
@@ -577,21 +592,25 @@ def _conv_front_end(program: SNNProgram, spikes_enc: jax.Array, *,
 def _run_macro_stack(program: SNNProgram, xs: jax.Array, *, use_pallas: bool,
                      use_sparse: bool, block_b: int = 8,
                      interpret: bool = False, emit_rasters: bool = True,
-                     gate_granularity: int = 1, use_events: bool = False
+                     gate_granularity: int = 1, use_events: bool = False,
+                     event_crossover: float = 1.0
                      ) -> NetResult:
-    """Shared int_ref/pallas/ref_events executor: float encoder pass, then
-    the on-macro conv front-end (when present), then the fused fc stack."""
+    """Shared int_ref/pallas/ref_events/pallas_events executor: float
+    encoder pass, then the on-macro conv front-end (when present), then the
+    fused fc stack."""
     spikes_enc, v_enc = encode(program, xs)
     conv_maps, v_convs, conv_skips = _conv_front_end(
         program, spikes_enc, use_pallas=use_pallas, use_sparse=use_sparse,
         gate_granularity=gate_granularity, use_events=use_events,
-        block_b=block_b, interpret=interpret)
+        block_b=block_b, interpret=interpret,
+        event_crossover=event_crossover)
     last = conv_maps[-1] if conv_maps else spikes_enc
     flat = last.reshape(*last.shape[:2], -1) if last.ndim > 3 else last
     rasters_fc, v_stack, skips = _run_fc_stack(
         program, flat, use_pallas=use_pallas, use_sparse=use_sparse,
         gate_granularity=gate_granularity, use_events=use_events,
-        block_b=block_b, interpret=interpret, emit_rasters=emit_rasters)
+        block_b=block_b, interpret=interpret, emit_rasters=emit_rasters,
+        event_crossover=event_crossover)
     # rasters[i] = the input raster of macro-stack layer i: spike maps for
     # the conv part (the last conv's map doubles, flattened, as fc input)
     full = ([spikes_enc] + conv_maps + list(rasters_fc)
@@ -654,6 +673,12 @@ def _attach_event_stats(res: NetResult, conv_stats: list, fc_stats
     res.aux["row_skip_counts"] = skipped
     res.aux["skipped_row_fraction"] = (sum(skipped) / possible
                                        if possible else 0.0)
+    # device event-list kernel only: per-layer dense-crossover trip counts
+    # (the host executor never falls back and reports empty tuples)
+    fallbacks = [f for st in conv_stats for f in st.dense_fallbacks]
+    fallbacks += list(fc_stats.dense_fallbacks)
+    if fallbacks:
+        res.aux["event_dense_fallbacks"] = fallbacks
     return res
 
 
@@ -726,6 +751,30 @@ def run_ref_events(program: SNNProgram, xs: jax.Array) -> NetResult:
                             use_events=True)
 
 
+@register_backend("pallas_events")
+def run_pallas_events(program: SNNProgram, xs: jax.Array, *, block_b: int = 8,
+                      interpret: bool = False, emit_rasters: bool = True,
+                      event_crossover: float = 1.0) -> NetResult:
+    """Device-side event-list execution (kernels/fused_snn_net kernel.py,
+    ``events=True``): every (timestep, layer, example) frame is compacted
+    *in VMEM* (cumsum position map = the fixed-capacity active-row index
+    list) and AccW2V runs as a gather-matvec with a dynamic trip count —
+    executed work proportional to events at every sparsity structure,
+    closing the gap between the `pallas_sparse` block gates and the
+    `ref_events` accounting upper bound. Frames whose tile event count
+    exceeds ``event_crossover`` of capacity take the dense matmul fallback
+    (bit-identical either way; default 1.0 never trips).
+
+    Aux matches `ref_events` (``row_events`` / ``row_skip_counts`` /
+    ``skipped_row_fraction`` — the kernel's counters are tested EQUAL to
+    the host executor's `EventStats`) plus ``event_dense_fallbacks``, the
+    per-layer dense-fallback trip counts."""
+    return _run_macro_stack(program, xs, use_pallas=True, use_sparse=False,
+                            use_events=True, block_b=block_b,
+                            interpret=interpret, emit_rasters=emit_rasters,
+                            event_crossover=event_crossover)
+
+
 # ---------------------------------------------------------------------------
 # streaming execution — the program-level step API
 #
@@ -743,7 +792,7 @@ def run_ref_events(program: SNNProgram, xs: jax.Array) -> NetResult:
 # ---------------------------------------------------------------------------
 
 STREAM_BACKENDS = ("float", "int_ref", "pallas", "pallas_sparse",
-                   "ref_events")
+                   "ref_events", "pallas_events")
 
 
 class StreamState(NamedTuple):
@@ -801,7 +850,8 @@ def init_stream_state(program: SNNProgram, batch: int,
 def stream_step(program: SNNProgram, state: StreamState, frame: jax.Array,
                 backend: str = "float", *, emit_rasters: bool = True,
                 use_sparse: bool = False, block_b: int = 8,
-                interpret: bool = False, gate_granularity: int = 1
+                interpret: bool = False, gate_granularity: int = 1,
+                event_crossover: float = 1.0
                 ) -> tuple[StreamState, StreamOut]:
     """Advance every stream one tick: (state, (B, ...) input currents) ->
     (new state, StreamOut). Batch lanes never interact — every op is
@@ -821,8 +871,8 @@ def stream_step(program: SNNProgram, state: StreamState, frame: jax.Array,
         return (StreamState(vs=tuple(vs), t=state.t + 1),
                 StreamOut(v_out=v_out, logits=program.logits(v_out),
                           rasters=list(spikes) if emit_rasters else None))
-    use_pallas = backend in ("pallas", "pallas_sparse")
-    use_events = backend == "ref_events"
+    use_pallas = backend in ("pallas", "pallas_sparse", "pallas_events")
+    use_events = backend in ("ref_events", "pallas_events")
     if backend == "pallas_sparse":
         use_sparse = True
     v_enc, spikes_enc = encoder_step(program, state.vs[0], frame)
@@ -832,6 +882,7 @@ def stream_step(program: SNNProgram, state: StreamState, frame: jax.Array,
         program, cur, use_pallas=use_pallas, use_sparse=use_sparse,
         gate_granularity=gate_granularity, use_events=use_events,
         block_b=block_b, interpret=interpret,
+        event_crossover=event_crossover,
         v_init=list(state.vs[1:1 + n_convs]) if n_convs else None)
     last = conv_maps[-1] if conv_maps else cur
     flat = last.reshape(*last.shape[:2], -1) if last.ndim > 3 else last
@@ -839,6 +890,7 @@ def stream_step(program: SNNProgram, state: StreamState, frame: jax.Array,
         program, flat, use_pallas=use_pallas, use_sparse=use_sparse,
         gate_granularity=gate_granularity, use_events=use_events,
         block_b=block_b, interpret=interpret, emit_rasters=emit_rasters,
+        event_crossover=event_crossover,
         v_init=list(state.vs[1 + n_convs:]))
     new_vs = ((v_enc,) + tuple(v_convs)
               + tuple(jnp.asarray(v) for v in v_stack))

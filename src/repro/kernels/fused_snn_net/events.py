@@ -30,6 +30,9 @@ class EventStats(NamedTuple):
     """Per-layer event statistics of one event-driven execution."""
     row_events: tuple          # per layer: (n_in,) int64 events per input row
     frames: int                # (timestep, example) frames each layer ran
+    dense_fallbacks: tuple = ()  # per layer: dense-crossover trips (device
+    #                              event backend only; host executor never
+    #                              falls back, so it reports ())
 
     @property
     def events(self) -> tuple:
@@ -114,10 +117,20 @@ def fused_snn_net_events(spikes, ws, *, thresholds: tuple, leaks: tuple,
         for i, w in enumerate(ws):
             row_events[i] += cur.astype(np.int64).sum(axis=0)
             acc = np.zeros((B, w.shape[1]), np.int32)
-            for b in range(B):
-                idx = np.flatnonzero(cur[b])        # the compacted frame
-                if idx.size:                        # gather-matvec: work
-                    acc[b] = w[idx].sum(axis=0)     # proportional to events
+            # batch-flattened event list: np.nonzero is the compaction
+            # (each example's segment of r_idx is its active-row index
+            # list), one reduceat segment-sums the gathered weight rows of
+            # every non-empty example at once — same gather-matvec work
+            # model, no per-example python loop. reduceat needs strictly
+            # in-range start offsets, so empty examples (whose start would
+            # collide with the next segment's and corrupt it) are excluded
+            # and keep their zero rows.
+            b_idx, r_idx = np.nonzero(cur)
+            if b_idx.size:
+                counts = np.bincount(b_idx, minlength=B)
+                nz = counts > 0
+                starts = np.cumsum(counts) - counts
+                acc[nz] = np.add.reduceat(w[r_idx], starts[nz], axis=0)
             v = vs[i] + acc                         # readout stays unclamped
             if i >= n_spiking:
                 vs[i] = v

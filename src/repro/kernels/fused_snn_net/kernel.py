@@ -56,6 +56,43 @@ one-timestep (or any chunk-length) call. Because integer accumulation is
 exact, chunked calls that thread V compose bit-identically with one full-T
 call — the macro's "V_MEM never leaves the array" claim, restated at the
 call boundary as "V leaves VMEM only between ticks".
+
+Event-list mode (``events=True``) is the fully event-driven execution the
+gated modes approximate: instead of predicating dense matmuls on tile /
+row-block occupancy, each (timestep, layer, example) int8 spike frame is
+*compacted* in VMEM and AccW2V becomes a gather-matvec over the active
+rows only — executed work proportional to events at every sparsity
+structure, including the iid-Bernoulli rasters that defeat tile and block
+gates entirely (an 85%-sparse iid frame runs 15% of its row work here, vs
+~100% under any block gate).
+
+  Compaction layout: the inclusive prefix sum ``pos = cumsum(frame)`` over
+  the padded n_in lanes IS the fixed-capacity active-row index list —
+  entry p (0-based) of the list is the unique lane r with ``pos[r] == p+1``
+  and ``frame[r] == 1``, decoded with a one-hot lane match; the list's
+  count is ``pos[-1]`` and its capacity is the padded n_in (so no frame
+  can overflow it). The occupancy-based early-out is the gather loop's
+  dynamic trip count: a `fori_loop(0, count)` issues exactly ``count``
+  weight-row gathers (`pl.ds` dynamic row loads from the VMEM-resident
+  weight tile) and rank-1 accumulates into the V scratch — an all-silent
+  frame issues zero AccW2V work without any gate test beyond the cumsum.
+
+  Dense fallback (``event_crossover``): gathering beats the MXU only while
+  frames are sparse. Per (timestep, layer, batch-tile), when the tile's
+  event count exceeds ``event_crossover`` of its (block_b x logical-width)
+  capacity, the whole tile falls back to the existing dense matmul under
+  `@pl.when` — the same single-clamp-after-accumulate dense path, so the
+  fallback is bit-identical by construction (integer addition commutes:
+  gathering rows in ascending-index order equals the dense row sum
+  exactly). Fallback trips are counted per layer in an extra output.
+
+  Accounting: the kernel reduces every masked input frame to per-row event
+  counts (an extra (tiles, n_in) output); summed over tiles these equal
+  `events.EventStats.row_events` EXACTLY — the word-level per-row skip
+  contract `ref_events` defines — independent of which execution path ran.
+  Padded lanes and padded batch rows are zero-masked before compaction
+  (junk spikes would gather zero weight rows — harmless numerically, but
+  they would burn gather iterations and corrupt the event counts).
 """
 from __future__ import annotations
 
@@ -112,7 +149,8 @@ def skip_layout(in_widths: tuple, granularity: int
 def _net_kernel(*refs, n_spiking: int, has_readout: bool, neuron: str,
                 clamp_mode: str, timesteps: int, emit_rasters: bool,
                 sparse: bool, granularity: int, logical_widths: tuple,
-                batch_logical: int, block_b: int, has_v_init: bool):
+                batch_logical: int, block_b: int, has_v_init: bool,
+                events: bool = False, dense_thresholds: tuple = ()):
     """Ref layout (inputs, outputs, scratch):
       inputs : spikes_ref (T, Bt, N0p) int8; w_refs[i] (Nip, Nop) int8 for
                the n_spiking FCs (+ readout when has_readout); params_ref
@@ -124,11 +162,18 @@ def _net_kernel(*refs, n_spiking: int, has_readout: bool, neuron: str,
                emit_rasters); v_out_refs[i] (Bt, Nop) int32 per layer
                (readout last); skip_ref (1, skip_lanes) int32 (only when
                sparse) — gate site (layer i, block g) counts skipped
-               matmuls in column skip_layout offsets[i] + g;
+               matmuls in column skip_layout offsets[i] + g; in events
+               mode instead row_refs[i] (1, Nip) int32 per layer — this
+               tile's per-input-row event counts — then fallback_ref
+               (1, LANE) int32, column i counting the timesteps layer i
+               took the dense-crossover fallback;
       scratch: v_refs[i] (Bt, Nop) int32 per layer — the fused V_MEM tiles.
 
     ``has_readout=False`` runs an all-spiking stack (no accumulate-only
     tail) — the shape conv layers lowered onto im2col patch rasters take.
+    ``events`` selects the compacted event-list execution of AccW2V (module
+    docs); ``dense_thresholds[i]`` is the per-layer tile event count above
+    which the dense fallback fires.
     """
     n_w = n_spiking + (1 if has_readout else 0)
     spikes_ref = refs[0]
@@ -143,16 +188,25 @@ def _net_kernel(*refs, n_spiking: int, has_readout: bool, neuron: str,
     pos += n_w
     skip_ref = refs[pos] if sparse else None
     pos += 1 if sparse else 0
+    row_refs = refs[pos:pos + n_w] if events else ()
+    pos += n_w if events else 0
+    fallback_ref = refs[pos] if events else None
+    pos += 1 if events else 0
     v_refs = refs[pos:]
 
     ws = [w_refs[i][...] for i in range(n_w)]     # VMEM-resident weights
     for i, vref in enumerate(v_refs):
         vref[...] = v_init_refs[i][...] if has_v_init else jnp.zeros_like(vref)
+    if sparse or events:
+        b0 = pl.program_id(0) * block_b
     if sparse:
         skip_ref[...] = jnp.zeros_like(skip_ref)
-        b0 = pl.program_id(0) * block_b
         n_cols, col_off, skip_lanes = skip_layout(
             logical_widths[:n_w], granularity)
+    if events:
+        for rref in row_refs:
+            rref[...] = jnp.zeros_like(rref)
+        fallback_ref[...] = jnp.zeros_like(fallback_ref)
 
     def mask_pad(x, n_logical):
         """Zero padded lanes (>= n_logical) and padded batch rows. Padded
@@ -165,6 +219,60 @@ def _net_kernel(*refs, n_spiking: int, has_readout: bool, neuron: str,
                   ) < batch_logical
         return jnp.where(lane_ok & row_ok, x, 0)
 
+    def accumulate_events(i, cur):
+        """Event-list AccW2V (module docs): compact each example's masked
+        frame to (cumsum position map, count) and gather-accumulate the
+        active weight rows with a dynamic-trip-count fori_loop — work
+        proportional to events. Above the dense-crossover event count the
+        whole tile falls back to one dense matmul. Both paths add to V
+        *unclamped* through the ref (predicated writes must go through
+        refs); one clamp after the accumulate — outside the `@pl.when`s —
+        equals the dense single clamp-after-accumulate bit for bit. The
+        per-row event counters accumulate unconditionally, so the
+        accounting contract (== ref_events' EventStats) is independent of
+        which path executed."""
+        n_in_p = ws[i].shape[0]
+        cur32 = cur.astype(jnp.int32)
+        row_refs[i][...] = row_refs[i][...] + jnp.sum(cur32, axis=0,
+                                                      keepdims=True)
+        total = jnp.sum(cur32)
+        go_dense = total > dense_thresholds[i]
+
+        @pl.when(go_dense)
+        def _dense(i=i, cur=cur):
+            acc = jax.lax.dot_general(cur, ws[i], (((1,), (0,)), ((), ())),
+                                      preferred_element_type=jnp.int32)
+            v_refs[i][...] = v_refs[i][...] + acc
+            lane = jax.lax.broadcasted_iota(jnp.int32,
+                                            fallback_ref.shape, 1)
+            fallback_ref[...] = fallback_ref[...] + jnp.where(lane == i, 1, 0)
+
+        @pl.when(jnp.logical_not(go_dense))
+        def _gather(i=i, cur32=cur32, n_in_p=n_in_p):
+            n_out_p = ws[i].shape[1]
+            lanes = jax.lax.broadcasted_iota(jnp.int32, (1, n_in_p), 1)
+            for b in range(block_b):
+                s = cur32[b:b + 1, :]                    # (1, Nip) 0/1
+                pos_map = jnp.cumsum(s, axis=1)          # the compacted list
+                count = pos_map[0, n_in_p - 1]
+
+                def ev_body(p, acc, s=s, pos_map=pos_map, lanes=lanes, i=i):
+                    hit = (pos_map == p + 1) & (s > 0)   # one-hot lane match
+                    idx = jnp.sum(jnp.where(hit, lanes, 0))
+                    row = w_refs[i][pl.ds(idx, 1), :]    # gather one W row
+                    return acc + row.astype(jnp.int32)
+
+                acc_b = jax.lax.fori_loop(
+                    0, count, ev_body,
+                    jnp.zeros((1, n_out_p), jnp.int32))
+                v_refs[i][b:b + 1, :] = v_refs[i][b:b + 1, :] + acc_b
+
+        v = v_refs[i][...]
+        if i < n_spiking:
+            v = clamp_v(v, clamp_mode)
+        v_refs[i][...] = v
+        return v
+
     def accumulate(i, cur):
         """AccW2V for a whole layer: binary matmul on the MXU. Returns the
         accumulated (clamped; readout unclamped) V value. Dense mode is
@@ -176,6 +284,8 @@ def _net_kernel(*refs, n_spiking: int, has_readout: bool, neuron: str,
         Partials add to V *unclamped*; one clamp after the last block
         equals the dense single clamp-after-accumulate bit for bit (and a
         fully silent layer reduces to clamp_v(v), which is idempotent)."""
+        if events:
+            return accumulate_events(i, cur)
         if not sparse:
             acc = jax.lax.dot_general(cur, ws[i], (((1,), (0,)), ((), ())),
                                       preferred_element_type=jnp.int32)
@@ -208,7 +318,7 @@ def _net_kernel(*refs, n_spiking: int, has_readout: bool, neuron: str,
 
     def body(t, carry):
         cur = spikes_ref[t]                                    # (Bt, N0p) int8
-        if sparse:
+        if sparse or events:
             cur = mask_pad(cur, logical_widths[0])
         for i in range(n_spiking):
             v = accumulate(i, cur)
@@ -222,7 +332,7 @@ def _net_kernel(*refs, n_spiking: int, has_readout: bool, neuron: str,
                 v = jnp.where(fired, 0, v)
             v_refs[i][...] = v
             cur = fired.astype(jnp.int8)                       # stays in VMEM
-            if sparse:
+            if sparse or events:
                 cur = mask_pad(cur, logical_widths[i + 1])
             if emit_rasters:
                 pl.store(raster_refs[i],
@@ -231,7 +341,7 @@ def _net_kernel(*refs, n_spiking: int, has_readout: bool, neuron: str,
         if has_readout:
             # readout: wide int32 accumulate, no 11b clamp
             v_out = accumulate(n_spiking, cur)
-            if not sparse:              # sparse mode already wrote the ref
+            if not sparse and not events:   # gated modes already wrote the ref
                 v_refs[n_spiking][...] = v_out
         return carry
 
@@ -246,7 +356,8 @@ def fused_snn_net_pallas(spikes: jax.Array, ws: list, params: jax.Array, *,
                          sparse: bool = False, granularity: int = 1,
                          logical_widths: tuple = (),
                          batch_logical: int = 0, has_readout: bool = True,
-                         v_init: list = None):
+                         v_init: list = None, events: bool = False,
+                         event_crossover: float = 1.0):
     """Dispatch the network kernel. Shapes must be pre-padded: spikes
     (T, B, N0p) int8 with B % block_b == 0; ws[i] (Nip, Nop) int8 with every
     dim a 128 multiple and Nip == previous Nop; params (n_spiking, 2) int32.
@@ -264,29 +375,55 @@ def fused_snn_net_pallas(spikes: jax.Array, ws: list, params: jax.Array, *,
     pre-padded like ws, seeding the VMEM V scratch instead of zeros — the
     carried state of a `stream_step` tick.
 
+    ``events`` selects the compacted event-list execution of AccW2V (module
+    docs) — mutually exclusive with ``sparse``; needs the same
+    ``logical_widths`` / ``batch_logical`` masking inputs. A tile whose
+    event count exceeds ``event_crossover`` of its block_b x logical-width
+    capacity takes the dense fallback (1.0 can never trip — strict >; 0.0
+    always trips).
+
     Returns (rasters, v_finals, skips): rasters — list of (T, B, Nop) int8
     per spiking layer ([] when emit_rasters=False); v_finals — list of
     (B, Nop) int32 per layer, readout last; skips — (B // block_b, n_sites)
     int32 skipped-matmul counts per (batch tile, gate site) in sparse mode
-    (site columns per `skip_layout`; n_sites == len(ws) at granularity 1),
+    (site columns per `skip_layout`; n_sites == len(ws) at granularity 1);
+    in events mode the pair (row_counts, fallbacks) with row_counts[i]
+    (B // block_b, Nip) int32 per-input-row event counts per tile and
+    fallbacks (B // block_b, len(ws)) int32 dense-fallback trip counts;
     None otherwise.
     """
     T, B, _ = spikes.shape
     n_spiking = len(ws) - 1 if has_readout else len(ws)
     grid = (B // block_b,)
-    if sparse and len(logical_widths) != len(ws) + 1:
-        raise ValueError("sparse mode needs len(ws)+1 logical widths, got "
-                         f"{len(logical_widths)} for {len(ws)} layers")
+    if sparse and events:
+        raise ValueError("sparse (row-block gating) and events (event-list "
+                         "execution) are mutually exclusive kernel modes")
+    if (sparse or events) and len(logical_widths) != len(ws) + 1:
+        raise ValueError("sparse/events mode needs len(ws)+1 logical widths, "
+                         f"got {len(logical_widths)} for {len(ws)} layers")
     if sparse:
         n_cols, _, skip_lanes = skip_layout(tuple(logical_widths[:len(ws)]),
                                             granularity)
+    dense_thresholds = ()
+    if events:
+        if len(ws) > LANE:
+            raise ValueError(f"events mode carries one fallback column per "
+                             f"layer in a {LANE}-lane output; got {len(ws)} "
+                             "layers")
+        # tile event capacity is block_b x logical input width; strict >
+        # means crossover 1.0 never trips and 0.0 always does (count >= 0)
+        dense_thresholds = tuple(
+            int(event_crossover * block_b * logical_widths[i]) if
+            event_crossover > 0.0 else -1
+            for i in range(len(ws)))
     kernel = functools.partial(
         _net_kernel, n_spiking=n_spiking, has_readout=has_readout,
         neuron=neuron, clamp_mode=clamp_mode, timesteps=T,
         emit_rasters=emit_rasters, sparse=sparse, granularity=granularity,
         logical_widths=tuple(logical_widths),
         batch_logical=batch_logical, block_b=block_b,
-        has_v_init=v_init is not None)
+        has_v_init=v_init is not None, events=events,
+        dense_thresholds=dense_thresholds)
 
     in_specs = [pl.BlockSpec((T, block_b, spikes.shape[2]),
                              lambda b: (0, b, 0))]
@@ -312,6 +449,13 @@ def fused_snn_net_pallas(spikes: jax.Array, ws: list, params: jax.Array, *,
         out_specs.append(pl.BlockSpec((1, skip_lanes), lambda b: (b, 0)))
         out_shape.append(jax.ShapeDtypeStruct((B // block_b, skip_lanes),
                                               jnp.int32))
+    if events:
+        for w in ws:
+            out_specs.append(pl.BlockSpec((1, w.shape[0]), lambda b: (b, 0)))
+            out_shape.append(jax.ShapeDtypeStruct((B // block_b, w.shape[0]),
+                                                  jnp.int32))
+        out_specs.append(pl.BlockSpec((1, LANE), lambda b: (b, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((B // block_b, LANE), jnp.int32))
 
     scratch = [pltpu.VMEM((block_b, w.shape[1]), jnp.int32) for w in ws]
 
@@ -325,7 +469,14 @@ def fused_snn_net_pallas(spikes: jax.Array, ws: list, params: jax.Array, *,
         interpret=interpret,
     )(spikes, *ws, params, *(v_init if v_init is not None else ()))
     outs = list(outs)
-    skips = outs.pop()[:, :sum(n_cols)] if sparse else None
+    skips = None
+    if sparse:
+        skips = outs.pop()[:, :sum(n_cols)]
+    elif events:
+        fallbacks = outs.pop()[:, :len(ws)]
+        row_counts = outs[-len(ws):]
+        del outs[-len(ws):]
+        skips = (row_counts, fallbacks)
     rasters = outs[:n_spiking] if emit_rasters else []
     v_finals = outs[n_spiking:] if emit_rasters else outs
     return rasters, v_finals, skips

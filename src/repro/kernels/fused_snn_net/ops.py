@@ -73,14 +73,16 @@ def _check_stack(spikes: jax.Array, ws: list) -> None:
 @partial(jax.jit, static_argnames=("thresholds", "leaks", "neuron",
                                    "clamp_mode", "block_b", "use_pallas",
                                    "interpret", "emit_rasters", "use_sparse",
-                                   "gate_granularity", "readout"))
+                                   "gate_granularity", "readout",
+                                   "use_events", "event_crossover"))
 def fused_snn_net(spikes: jax.Array, ws: list, *, thresholds: tuple,
                   leaks: tuple, neuron: str = "rmp",
                   clamp_mode: str = "saturate", block_b: int = 8,
                   use_pallas: bool = True, interpret: bool = False,
                   emit_rasters: bool = True, use_sparse: bool = False,
                   gate_granularity: int = 1, readout: bool = True,
-                  v_init: list = None):
+                  v_init: list = None, use_events: bool = False,
+                  event_crossover: float = 1.0):
     """Run a (T, B, N0) encoder spike raster through the whole fc stack.
 
     ``ws``: per-layer int8 weights, spiking FCs first, readout last;
@@ -107,6 +109,13 @@ def fused_snn_net(spikes: jax.Array, ws: list, *, thresholds: tuple,
     presentation into chunks that thread final V back in as ``v_init``
     reproduces the single-call result bit for bit — the contract
     `core.pipeline.stream_step` is built on.
+
+    ``use_events`` selects the Pallas event-list execution (kernel.py
+    module docs): on-device compaction + gather-matvec AccW2V with a dense
+    fallback above ``event_crossover`` occupancy. ``skips`` is then a dict
+    ``{"row_events": [per-layer (B_tiles, n_in) int32 counts],
+    "dense_fallbacks": (B_tiles, n_layers) int32}`` — wrap with
+    `fused_snn_net_device_events` to get an `events.EventStats`.
     """
     thresholds, leaks = tuple(thresholds), tuple(leaks)
     _check_stack(spikes, ws)
@@ -117,6 +126,12 @@ def fused_snn_net(spikes: jax.Array, ws: list, *, thresholds: tuple,
         raise ValueError("gate_granularity is an event-gating knob; pass "
                          "use_sparse=True to gate at granularity "
                          f"{gate_granularity}")
+    if use_events and use_sparse:
+        raise ValueError("use_events (event-list execution) and use_sparse "
+                         "(row-block gating) are mutually exclusive")
+    if use_events and not use_pallas:
+        raise ValueError("use_events is the Pallas event-list kernel; the "
+                         "host-side executor is events.fused_snn_net_events")
     # validates granularity and enforces the gate-column cap for BOTH
     # execution paths (the reference mirrors the kernel's counted blocks)
     widths = (spikes.shape[2],) + tuple(w.shape[1] for w in ws)
@@ -147,10 +162,16 @@ def fused_snn_net(spikes: jax.Array, ws: list, *, thresholds: tuple,
         s, ws_p, params, neuron=neuron, clamp_mode=clamp_mode,
         block_b=block_b, emit_rasters=emit_rasters, interpret=interpret,
         sparse=use_sparse, granularity=gate_granularity, has_readout=readout,
-        logical_widths=widths, batch_logical=B, v_init=v_init_p)
+        logical_widths=widths, batch_logical=B, v_init=v_init_p,
+        events=use_events, event_crossover=event_crossover)
     rasters = [r[:, :B, :w.shape[1]]
                for r, w in zip(rasters, ws[:n_spiking])]
     v_finals = [v[:B, :w.shape[1]] for v, w in zip(v_finals, ws)]
+    if use_events:
+        row_counts, fallbacks = skips
+        skips = {"row_events": [rc[:, :w.shape[0]]      # logical rows only
+                                for rc, w in zip(row_counts, ws)],
+                 "dense_fallbacks": fallbacks}
     if use_sparse and gate_granularity != 1:
         split, off = [], 0
         for n in n_blocks:             # site columns -> per-layer arrays
@@ -158,6 +179,44 @@ def fused_snn_net(spikes: jax.Array, ws: list, *, thresholds: tuple,
             off += n
         skips = split
     return rasters, v_finals, skips
+
+
+def fused_snn_net_device_events(spikes, ws, *, thresholds: tuple,
+                                leaks: tuple, neuron: str = "rmp",
+                                clamp_mode: str = "saturate",
+                                block_b: int = 8, interpret: bool = False,
+                                emit_rasters: bool = True,
+                                readout: bool = True, v_init: list = None,
+                                event_crossover: float = 1.0):
+    """`fused_snn_net(use_events=True)` with the device counters folded into
+    an `events.EventStats` — the same third-element contract the host
+    `events.fused_snn_net_events` executor returns, so the accounting layer
+    (`core.pipeline._attach_event_stats`) treats both identically.
+
+    Not jit'd (the jit boundary is the inner `fused_snn_net` call): the
+    per-tile int32 row counts come off device here and sum to host int64 —
+    per-layer totals over a long presentation overflow int32 at scale, and
+    `EventStats.row_events` is specified int64.
+    """
+    import numpy as np
+
+    from repro.kernels.fused_snn_net.events import EventStats
+
+    rasters, v_finals, skips = fused_snn_net(
+        spikes, ws, thresholds=tuple(thresholds), leaks=tuple(leaks),
+        neuron=neuron, clamp_mode=clamp_mode, block_b=block_b,
+        use_pallas=True, interpret=interpret, emit_rasters=emit_rasters,
+        readout=readout, v_init=v_init, use_events=True,
+        event_crossover=event_crossover)
+    T, B = spikes.shape[0], spikes.shape[1]
+    row_events = tuple(np.asarray(rc, np.int64).sum(axis=0)
+                       for rc in skips["row_events"])
+    fallbacks = tuple(int(c) for c in
+                      np.asarray(skips["dense_fallbacks"],
+                                 np.int64).sum(axis=0))
+    stats = EventStats(row_events=row_events, frames=T * B,
+                       dense_fallbacks=fallbacks)
+    return rasters, v_finals, stats
 
 
 def _fused_snn_net_ref(spikes, ws, thresholds, leaks, neuron, clamp_mode,

@@ -24,9 +24,17 @@ engine mirrors `ServeEngine`:
     reports do (tests close the loop against isolated runs).
 
 Event-gated ticks come from the backend choice: ``pallas_sparse`` /
-``int_ref(use_sparse=True)`` skip silent-tile work inside the tick, and
-``ref_events`` executes the spike-list upper bound; the per-slot row-skip
-accounting is backend-independent (it reads the rasters).
+``int_ref(use_sparse=True)`` skip silent-tile work inside the tick,
+``ref_events`` executes the spike-list upper bound on the host, and
+``pallas_events`` executes it on device (VMEM compaction + gather-matvec).
+The per-slot row-skip accounting is backend-independent (it reads the
+rasters); the event backends additionally feed a pooled *device ledger*
+(`device_event_stats`) — the counters the executing kernel itself reports,
+over ALL lanes. On a fully-occupied engine (every lane serving every tick)
+the ledger closes exactly against the summed per-slot reports; with idle
+lanes it can only exceed them (vacated lanes' deeper layers may keep firing
+from carried V until the lane is re-seeded), which is why per-request
+accounting stays raster-based.
 """
 from __future__ import annotations
 
@@ -132,6 +140,12 @@ class SNNServeEngine(SlotEngine):
                              if program.layers[0].kind == "conv"
                              else tuple(program.layers[0].state_shape))
         self.ticks = 0                    # engine ticks executed
+        # pooled device-side event ledger (event backends only): per-layer
+        # row-event counters as the executing kernel reports them
+        self._event_backend = backend in ("ref_events", "pallas_events")
+        self.device_row_events: Optional[list] = None
+        self.device_dense_fallbacks: Optional[list] = None
+        self.device_ticks = 0
 
     # -- request intake ------------------------------------------------------
     def submit(self, req: SNNRequest) -> None:
@@ -194,6 +208,60 @@ class SNNServeEngine(SlotEngine):
                 self.slots[i].row_events[li] += \
                     counts[i * p:(i + 1) * p].sum(axis=0)
 
+    def _account_device(self, out) -> None:
+        """Pool this tick's executor-reported `EventStats` (fc stack in
+        ``out.skips``, one per conv layer in ``out.conv_skips``) into the
+        engine-lifetime device ledger. These are the counters the event
+        executor measured while running — for `pallas_events`, on device —
+        over ALL lanes, idle ones included (module docs)."""
+        rows = [np.asarray(r, np.int64)
+                for st in (out.conv_skips or []) for r in st.row_events]
+        rows += [np.asarray(r, np.int64) for r in out.skips.row_events]
+        fbs = [int(f) for st in (out.conv_skips or [])
+               for f in st.dense_fallbacks]
+        fbs += [int(f) for f in out.skips.dense_fallbacks]
+        if self.device_row_events is None:
+            self.device_row_events = rows
+            self.device_dense_fallbacks = fbs if fbs else None
+        else:
+            self.device_row_events = [a + b for a, b in
+                                      zip(self.device_row_events, rows)]
+            if fbs:
+                self.device_dense_fallbacks = [
+                    a + b for a, b in zip(self.device_dense_fallbacks, fbs)]
+        self.device_ticks += 1
+
+    def device_event_stats(self):
+        """The pooled device ledger as an `events.EventStats`: per-layer
+        row-event counters summed over every tick served so far, frames =
+        device_ticks * batch_slots lane-frames (exact for FC stacks; conv
+        layers run ``lane_frames`` frames per lane per tick — use
+        `device_skipped_row_fraction` for the pooled fraction there). On a
+        fully-occupied engine these equal the summed per-slot raster
+        tallies exactly — the serving-side closure tests assert it."""
+        from repro.kernels.fused_snn_net.events import EventStats
+        if self.device_row_events is None:
+            raise ValueError("no device ledger: the engine has not ticked "
+                             "on an event backend (ref_events/pallas_events)")
+        return EventStats(
+            row_events=tuple(self.device_row_events),
+            frames=self.device_ticks * self.B,
+            dense_fallbacks=(tuple(self.device_dense_fallbacks)
+                             if self.device_dense_fallbacks is not None
+                             else ()))
+
+    def device_skipped_row_fraction(self) -> float:
+        """Pooled skipped-row fraction of the device ledger, with each
+        layer's frame count scaled by its lane-frames (conv layers run one
+        frame per output position)."""
+        if self.device_row_events is None:
+            raise ValueError("no device ledger: the engine has not ticked "
+                             "on an event backend (ref_events/pallas_events)")
+        possible = sum(self.device_ticks * self.B * p * n
+                       for p, n in zip(self._lane_frames, self._n_in))
+        events = sum(int(r.sum()) for r in self.device_row_events)
+        return 1.0 - events / possible if possible else 0.0
+
     def _finalize_report(self, slot: _Slot) -> SparsityReport:
         """The per-request SparsityReport: batch 1, one timestep per served
         tick — same geometry/accounting as `pipeline.sparsity_report` on an
@@ -225,6 +293,8 @@ class SNNServeEngine(SlotEngine):
         self.ticks += 1
         if self.track_events and out.rasters is not None:
             self._account(out.rasters, active)
+        if self._event_backend and out.skips is not None:
+            self._account_device(out)
         logits = np.asarray(out.logits)
         v_out = np.asarray(out.v_out)
         for i in active:

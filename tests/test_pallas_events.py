@@ -1,0 +1,253 @@
+"""Device-side event-list execution (`pallas_events`) contracts.
+
+The kernel compacts every (timestep, layer, example) frame in VMEM and
+executes AccW2V as a gather-matvec over active rows — the claims pinned
+here are exactly the ones that make that path trustworthy:
+
+  * bit-identity with the dense word-level reference across neuron models,
+    both clamp modes, odd/padded/wide shapes, and the dense-crossover
+    fallback (property-tested);
+  * counter equality: the kernel's per-row event counters equal the host
+    `ref_events` executor's `EventStats` EXACTLY — the accounting contract
+    that lets `SparsityReport` -> `energy.measured_edp_reduction` report
+    the *executed* row-skip EDP;
+  * compaction edge cases: all-silent frames (zero gather iterations, zero
+    counters, fraction 1.0), all-dense frames tripping the crossover
+    fallback (counted, still bit-identical), padded lanes beyond n_in,
+    B=1 streaming and v_init chunk composition;
+  * serving: on a fully-occupied engine the pooled device ledger closes
+    against the summed per-slot raster reports.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import SpikingConfig
+from repro.configs.impulse_snn import SNNModelConfig
+from repro.core import energy, pipeline, snn
+from repro.kernels.fused_snn_net.events import fused_snn_net_events
+from repro.kernels.fused_snn_net.ops import (fused_snn_net,
+                                             fused_snn_net_device_events)
+from repro.serve import SNNRequest, SNNServeEngine
+from repro.serve.snn_engine import merge_reports
+
+# padded-lane everything: 40/24/16 pad to 128 lanes, 130 spans two macro row
+# tiles; T/B stay fixed so the pallas interpret jit cache is shared
+WS_SHAPES = [(40, 24), (24, 16), (16, 3)]
+WS_SHAPES_WIDE = [(130, 24), (24, 3)]
+T, B, BLOCK_B = 6, 4, 2
+
+
+def _ws(shapes, seed=0):
+    rng = np.random.default_rng(seed)
+    return [jnp.asarray(rng.integers(-31, 32, s).astype(np.int8))
+            for s in shapes]
+
+
+def _run_pair(spikes, ws, *, neuron, clamp_mode, event_crossover=1.0):
+    """(device-events run, dense reference run, host EventStats)."""
+    n_spiking = len(ws) - 1
+    kw = dict(thresholds=tuple([9, 5][:n_spiking]),
+              leaks=tuple([1, 1][:n_spiking]),
+              neuron=neuron, clamp_mode=clamp_mode)
+    ev = fused_snn_net_device_events(jnp.asarray(spikes), ws,
+                                     block_b=BLOCK_B, interpret=True,
+                                     event_crossover=event_crossover, **kw)
+    ref = fused_snn_net(jnp.asarray(spikes), ws, use_pallas=False, **kw)
+    _, _, host_stats = fused_snn_net_events(np.asarray(spikes),
+                                            [np.asarray(w) for w in ws], **kw)
+    return ev, ref, host_stats
+
+
+def _assert_identical(ev, ref, tag=""):
+    r_ev, v_ev, _ = ev
+    r_ref, v_ref, _ = ref
+    for li, (a, b) in enumerate(zip(r_ev, r_ref)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"{tag} raster {li}")
+    for li, (a, b) in enumerate(zip(v_ev, v_ref)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"{tag} V {li}")
+
+
+def _assert_counters_equal(stats, host_stats, tag=""):
+    assert stats.frames == host_stats.frames, tag
+    for li, (a, b) in enumerate(zip(stats.row_events,
+                                    host_stats.row_events)):
+        assert len(a) == len(b), (tag, li)          # logical rows only
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"{tag} row_events {li}")
+    assert stats.skipped_rows == host_stats.skipped_rows, tag
+    assert stats.skipped_row_fraction == pytest.approx(
+        host_stats.skipped_row_fraction), tag
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from(["if", "lif", "rmp"]),
+       st.sampled_from(["saturate", "wrap"]),
+       st.floats(min_value=0.02, max_value=0.6))
+def test_device_events_bit_identity_and_counter_closure(seed, neuron,
+                                                        clamp_mode, density):
+    """Property: for random stacks (narrow and >128-fan-in wide) and random
+    densities the device event path is bit-identical to the dense word
+    reference AND its counters equal the host spike-list executor's."""
+    rng = np.random.default_rng(seed)
+    shapes = WS_SHAPES_WIDE if rng.integers(0, 2) else WS_SHAPES
+    ws = _ws(shapes, seed=seed + 1)
+    spikes = (rng.random((T, B, shapes[0][0])) < density).astype(np.int8)
+    ev, ref, host = _run_pair(spikes, ws, neuron=neuron,
+                              clamp_mode=clamp_mode)
+    tag = f"{neuron}/{clamp_mode}/{density:.2f}"
+    _assert_identical(ev, ref, tag)
+    _assert_counters_equal(ev[2], host, tag)
+    assert ev[2].dense_fallbacks == (0,) * len(ws)   # 1.0 never trips
+
+
+@pytest.mark.parametrize("clamp_mode", ["saturate", "wrap"])
+def test_all_silent_frames(clamp_mode):
+    """A silent presentation issues zero gather work: every counter is zero
+    and the skipped-row fraction is exactly 1.0 (still bit-identical —
+    LIF/RMP dynamics run unconditionally on zero input)."""
+    ws = _ws(WS_SHAPES, seed=3)
+    spikes = np.zeros((T, B, WS_SHAPES[0][0]), np.int8)
+    ev, ref, host = _run_pair(spikes, ws, neuron="lif",
+                              clamp_mode=clamp_mode)
+    _assert_identical(ev, ref, f"silent/{clamp_mode}")
+    _assert_counters_equal(ev[2], host, f"silent/{clamp_mode}")
+    assert ev[2].events == (0,) * len(ws)
+    assert ev[2].skipped_row_fraction == 1.0
+
+
+@pytest.mark.parametrize("clamp_mode", ["saturate", "wrap"])
+def test_dense_fallback_crossover(clamp_mode):
+    """An all-ones input frame exceeds any crossover < 1: the first layer
+    must take the dense fallback on every (timestep, tile), and results
+    stay bit-identical with counters unchanged (the counters are
+    path-independent)."""
+    ws = _ws(WS_SHAPES, seed=4)
+    spikes = np.ones((T, B, WS_SHAPES[0][0]), np.int8)
+    ev, ref, host = _run_pair(spikes, ws, neuron="rmp",
+                              clamp_mode=clamp_mode, event_crossover=0.5)
+    _assert_identical(ev, ref, f"fallback/{clamp_mode}")
+    _assert_counters_equal(ev[2], host, f"fallback/{clamp_mode}")
+    n_tiles = B // BLOCK_B
+    assert ev[2].dense_fallbacks[0] == T * n_tiles   # every frame fell back
+    # crossover 0.0 forces the dense path everywhere — the degenerate
+    # configuration that proves the fallback alone reproduces the kernel
+    ev0, ref0, host0 = _run_pair(spikes, ws, neuron="rmp",
+                                 clamp_mode=clamp_mode, event_crossover=0.0)
+    _assert_identical(ev0, ref0, f"alwaysdense/{clamp_mode}")
+    _assert_counters_equal(ev0[2], host0, f"alwaysdense/{clamp_mode}")
+    assert ev0[2].dense_fallbacks == (T * n_tiles,) * len(ws)
+
+
+def test_padded_lanes_beyond_n_in():
+    """Odd widths leave padded VMEM lanes past n_in: junk there must not
+    burn gather iterations or leak into the counters — row counters come
+    back at the LOGICAL width with totals matching the raster sums."""
+    ws = _ws(WS_SHAPES_WIDE, seed=5)
+    rng = np.random.default_rng(6)
+    spikes = (rng.random((T, B, WS_SHAPES_WIDE[0][0])) < 0.4).astype(np.int8)
+    ev, ref, host = _run_pair(spikes, ws, neuron="rmp", clamp_mode="wrap")
+    _assert_identical(ev, ref, "wide")
+    _assert_counters_equal(ev[2], host, "wide")
+    stats = ev[2]
+    assert [len(r) for r in stats.row_events] == [130, 24]
+    np.testing.assert_array_equal(
+        np.asarray(stats.row_events[0]),
+        spikes.astype(np.int64).sum(axis=(0, 1)))
+
+
+def test_b1_streaming_and_chunk_composition():
+    """B=1 (a single padded batch lane) and v_init chunk threading: two
+    half-presentations that carry V compose bit-identically with one full
+    call, counters included (row counts add over chunks)."""
+    ws = _ws(WS_SHAPES, seed=7)
+    rng = np.random.default_rng(8)
+    spikes = (rng.random((T, 1, WS_SHAPES[0][0])) < 0.3).astype(np.int8)
+    kw = dict(thresholds=(9, 5), leaks=(1, 1), neuron="rmp",
+              clamp_mode="saturate")
+    full = fused_snn_net_device_events(jnp.asarray(spikes), ws,
+                                       block_b=1, interpret=True, **kw)
+    ref = fused_snn_net(jnp.asarray(spikes), ws, use_pallas=False, **kw)
+    _assert_identical(full, ref, "b1")
+    h = T // 2
+    first = fused_snn_net_device_events(jnp.asarray(spikes[:h]), ws,
+                                        block_b=1, interpret=True, **kw)
+    second = fused_snn_net_device_events(jnp.asarray(spikes[h:]), ws,
+                                         block_b=1, interpret=True,
+                                         v_init=first[1], **kw)
+    for a, b in zip(second[1], full[1]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b, c in zip(first[2].row_events, second[2].row_events,
+                       full[2].row_events):
+        np.testing.assert_array_equal(np.asarray(a) + np.asarray(b),
+                                      np.asarray(c))
+
+
+def _program(seed=5, layer_sizes=(37, 50, 20, 3)):
+    cfg = SNNModelConfig(
+        arch_id="dev-ev", layer_sizes=layer_sizes,
+        spiking=SpikingConfig(neuron="rmp", timesteps=3, threshold=1.0,
+                              leak=0.0625, w_bits=6, v_bits=11),
+        timesteps=3)
+    params = snn.init_fc_snn(jax.random.PRNGKey(seed), cfg)
+    rng = np.random.default_rng(seed + 2)
+    x = jnp.asarray(rng.standard_normal((2, 3, layer_sizes[0]))
+                    .astype(np.float32))
+    return cfg, pipeline.compile_network(cfg, params, domain="int"), \
+        pipeline.present_words(x, cfg.timesteps)
+
+
+def test_backend_aux_flows_into_measured_edp():
+    """The registered backend's aux equals the ref_events aux AND the
+    raster-derived SparsityReport columns — so the executed row-skip
+    statistics flow into `energy.measured_edp_reduction` unchanged."""
+    _, program, xs = _program()
+    ev = pipeline.run_network(program, xs, "pallas_events", interpret=True,
+                              block_b=4)
+    host = pipeline.run_network(program, xs, "ref_events")
+    for a, b in zip(ev.aux["row_events"], host.aux["row_events"]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert ev.aux["row_skip_counts"] == host.aux["row_skip_counts"]
+    assert ev.aux["skipped_row_fraction"] == pytest.approx(
+        host.aux["skipped_row_fraction"])
+    assert ev.aux["event_dense_fallbacks"] == [0] * len(program.macro_stack)
+    rep = pipeline.sparsity_report(program, ev.rasters)
+    for a, b in zip(ev.aux["row_events"], rep.row_events):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert tuple(ev.aux["row_skip_counts"]) == rep.row_skip_counts
+    red = energy.measured_edp_reduction(rep.instruction_counts(),
+                                        rep.skipped_instruction_counts())
+    assert 0.0 < red < 1.0
+
+
+def test_engine_device_ledger_closes_when_fully_occupied():
+    """Serving closure: with every lane serving every tick (n_requests ==
+    slots, equal lengths, no early stop) the pooled device ledger equals
+    the merged per-slot raster reports exactly."""
+    cfg, program, _ = _program(seed=9)
+    eng = SNNServeEngine(program, batch_slots=2, backend="pallas_events",
+                         step_kw={"interpret": True, "block_b": 2})
+    rng = np.random.default_rng(11)
+    for rid in range(2):
+        x = rng.standard_normal((1, 2, 37)).astype(np.float32)
+        frames = np.asarray(pipeline.present_words(
+            jnp.asarray(x), cfg.timesteps))[:, 0]
+        eng.submit(SNNRequest(rid=rid, frames=frames))
+    done = eng.run_until_drained()
+    assert len(done) == 2
+    ledger = eng.device_event_stats()
+    merged = merge_reports([r.report for r in done])
+    assert ledger.frames == merged.frames
+    for a, b in zip(ledger.row_events, merged.row_events):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert eng.device_skipped_row_fraction() == pytest.approx(
+        merged.skipped_row_fraction)
+    assert ledger.dense_fallbacks == (0,) * len(program.macro_stack)
+    # an engine that never ticked an event backend has no ledger
+    eng2 = SNNServeEngine(program, batch_slots=1, backend="int_ref")
+    with pytest.raises(ValueError, match="device ledger"):
+        eng2.device_event_stats()

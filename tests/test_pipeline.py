@@ -88,6 +88,8 @@ def _run_all(cfg, params, x, clamp_mode, with_bitmacro=True):
             program, xs, "pallas_sparse", interpret=True, block_b=4,
             gate_granularity=4),
         "ref_events": pipeline.run_network(program, xs, "ref_events"),
+        "pallas_events": pipeline.run_network(program, xs, "pallas_events",
+                                              interpret=True, block_b=4),
     }
     if clamp_mode == "wrap" and with_bitmacro:
         results["bitmacro"] = pipeline.run_network(program, xs, "bitmacro")
@@ -156,7 +158,8 @@ def test_mnist_lenet5_mod_int_all_backends():
     cfg, params, x = _make_conv(cfg, "rmp", batch=1, seed=2)
     program, results = _run_all(cfg, params, x, "wrap")
     assert set(results) == {"float", "int_ref", "pallas", "pallas_sparse",
-                            "pallas_sparse_rb4", "ref_events", "bitmacro"}
+                            "pallas_sparse_rb4", "ref_events",
+                            "pallas_events", "bitmacro"}
     assert [ly.tiling.row_tiles for ly in program.fc_stack] == [6, 1, 1]
     assert [ly.n_in for ly in program.int_conv_stack] == [126, 126]
     counts = _assert_equivalent(program, results, "mnist-lenet5-mod")
@@ -174,7 +177,8 @@ def test_imdb_all_backends_bit_identical():
     x = jnp.asarray(rng.standard_normal((2, 3, 100)).astype(np.float32))
     program, results = _run_all(cfg, params, x, "wrap")
     assert set(results) == {"float", "int_ref", "pallas", "pallas_sparse",
-                            "pallas_sparse_rb4", "ref_events", "bitmacro"}
+                            "pallas_sparse_rb4", "ref_events",
+                            "pallas_events", "bitmacro"}
     ref = results["int_ref"]
     counts = {n: pipeline.count_network_instructions(program, r.rasters)
               for n, r in results.items()}

@@ -61,7 +61,10 @@ def _stream(program, xs, backend, **kw):
     for t in range(xs.shape[0]):
         state, out = program.step(state, xs[t], backend, **kw)
         frames_r.append(out.rasters)
-        if out.skips is not None and backend != "ref_events":
+        # event backends return EventStats (a NamedTuple: `+` would
+        # concatenate, not add) — their counters are checked elsewhere
+        if out.skips is not None and backend not in ("ref_events",
+                                                     "pallas_events"):
             if skips is None:
                 skips = out.skips
             elif isinstance(skips, list):
@@ -108,6 +111,7 @@ BACKEND_KW = [
     ("pallas_sparse", {"interpret": True, "block_b": 4,
                        "gate_granularity": 4}),
     ("ref_events", {}),
+    ("pallas_events", {"interpret": True, "block_b": 4}),
 ]
 
 
@@ -153,6 +157,7 @@ def test_stream_neuron_clamp_sweep(neuron, clamp_mode):
     ("int_ref", {}),
     ("pallas", {"interpret": True, "block_b": 4}),
     ("ref_events", {}),
+    ("pallas_events", {"interpret": True, "block_b": 4}),
 ])
 def test_stream_conv_stack(backend, kw):
     """Conv programs stream too: the im2col front-end threads per-conv V
@@ -243,6 +248,7 @@ def _word_request(cfg, rid, n_words, seed):
 @pytest.mark.parametrize("backend,kw", [
     ("int_ref", {}),
     ("pallas_sparse", {"interpret": True, "block_b": 4}),
+    ("pallas_events", {"interpret": True, "block_b": 4}),
 ])
 def test_snn_engine_staggered_equals_isolated(backend, kw):
     """Staggered admits/evictions (5 requests of different lengths through

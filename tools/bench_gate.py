@@ -12,7 +12,8 @@ Policy (what fails vs what only reports):
   * FAIL — a skipped-work fraction dropped more than ``--abs-tol`` below
     its baseline: the event-gating keys (``skipped_tiles``,
     ``fc_skipped_tiles``, ``conv_skipped_tiles``, ``tile``, ``block<G>``,
-    ``events``) are the executed sparsity win this repo exists to keep;
+    ``events``, ``skipped_rows``, ``pallas_events``) are the executed
+    sparsity win this repo exists to keep;
     on the python/jax pin that generated the baseline they are
     deterministic (seeded rasters, seeded training), so a drop means
     gating got coarser or stopped firing. Gains are fine. Rows derived
@@ -47,9 +48,13 @@ import sys
 # block2/block4/block8). skipped_rows is the serving engines' pooled
 # per-slot row-skip fraction (benchmarks/serve_snn.py) — deterministic on
 # the pin for the same reason the gating rows are (seeded rasters).
+# pallas_events is the device event-list kernel's EXECUTED skip fraction
+# (its own per-row counters, sparsity_gating granularity rows + the
+# serve_snn device ledger) — a drop means the compaction path stopped
+# skipping work it used to skip.
 SKIP_FRACTION_KEYS = ("skipped_tiles", "fc_skipped_tiles",
                       "conv_skipped_tiles", "tile", "events",
-                      "skipped_rows")
+                      "skipped_rows", "pallas_events")
 SKIP_FRACTION_PREFIXES = ("block",)
 # keys gated two-sided at rel_tol_instr / rel_tol. The measured_* /
 # *_vs_dense spellings are the fig11 row keys — exact names, because
