@@ -1,0 +1,40 @@
+"""Static-analyzer verdicts for the committed configs, as benchmark rows.
+
+Runs the range pass + kernel-contract pass (repro.analysis) over the two
+paper configs and emits one row per (config, backend): the proven
+``max_safe_frames`` horizon and the per-call VMEM residency land in the
+bench artifact next to the timing rows, so the perf trajectory and the
+safety envelope travel together. A config the analyzer rejects emits a
+``*_FAILED``-style verdict row (and `run` raises, which benchmarks/run.py
+records as a failure)."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit
+
+
+def run(quick: bool = False) -> list[str]:
+    del quick  # analysis is static — the full check IS the quick check
+    from repro.analysis import PALLAS_BACKENDS, check_kernel_contracts, \
+        check_program
+    from repro.configs.impulse_snn import IMDB, MNIST
+    from repro.core import pipeline, snn
+
+    key = jax.random.PRNGKey(0)
+    rows = []
+    for cfg, init in ((IMDB, snn.init_fc_snn), (MNIST, snn.init_lenet_snn)):
+        program = pipeline.compile_network(cfg, init(key, cfg),
+                                           domain="int", validate=False)
+        ranges = check_program(program)
+        safe = ranges.max_safe_frames
+        rows.append(emit(
+            f"analysis_{cfg.arch_id}_range", 0,
+            f"layers={len(ranges.layers)} clamp={program.clamp_mode} "
+            f"max_safe_frames={safe}"))
+        for backend in PALLAS_BACKENDS:
+            rep = check_kernel_contracts(program, backend)
+            rows.append(emit(
+                f"analysis_{cfg.arch_id}_{backend}", 0,
+                f"checks={len(rep.checks)} vmem_bytes={rep.vmem_bytes}"))
+    return rows

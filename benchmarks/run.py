@@ -32,21 +32,22 @@ def main(argv=None) -> None:
                     help="write rows to a JSON artifact (optional path)")
     args = ap.parse_args(argv)
 
-    from benchmarks import (fig6_neuron_energy, fig9_accuracy, fig9_efficiency,
-                            fig11_sparsity_edp, pipeline_fusion, roofline,
-                            serve_snn, sparsity_gating, table1_comparison)
+    from benchmarks import (analysis_check, fig6_neuron_energy, fig9_accuracy,
+                            fig9_efficiency, fig11_sparsity_edp,
+                            pipeline_fusion, roofline, serve_snn,
+                            sparsity_gating, table1_comparison)
     print("name,us_per_call,derived")
     t0 = time.time()
     if args.quick:
         mods = [("fig6", fig6_neuron_energy), ("table1", table1_comparison),
                 ("fig9_eff", fig9_efficiency), ("gating", sparsity_gating),
-                ("serve_snn", serve_snn)]
+                ("serve_snn", serve_snn), ("analysis", analysis_check)]
     else:
         mods = [("fig6", fig6_neuron_energy), ("fig9_eff", fig9_efficiency),
                 ("fig9_acc", fig9_accuracy), ("fig11", fig11_sparsity_edp),
                 ("gating", sparsity_gating), ("serve_snn", serve_snn),
                 ("fusion", pipeline_fusion), ("table1", table1_comparison),
-                ("roofline", roofline)]
+                ("roofline", roofline), ("analysis", analysis_check)]
     failures, rows = 0, []
     for name, mod in mods:
         try:

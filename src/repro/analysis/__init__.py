@@ -1,0 +1,66 @@
+"""Static verification of compiled SNN programs (DESIGN.md §"Static
+verification").
+
+Three passes, composable and individually importable:
+
+  * `check_program` — interval/bit-width abstract interpretation over the
+    word-level ISA semantics: proves weights on the 6-bit grid, constants
+    in the 11-bit V word, and that no unclamped int32 accumulator can
+    overflow (per-layer `RangeReport`, or `RangeError` naming the layer).
+  * `check_kernel_contracts` — pre-dispatch verification of everything the
+    Pallas kernels assume from config alone: VMEM residency, skip_layout
+    caps, event crossover, grid/gather bounds (`ContractReport`, or
+    `ContractError` naming the contract and call).
+  * `lint_paths` — AST repo lint (ANA001 bare asserts, ANA002 ad-hoc
+    clamps, ANA003 unseeded randomness); pure stdlib.
+
+`compile_network(..., validate=True)` (the default) runs the first two via
+`validate_program`; `tools/check_invariants.py` runs all three in CI.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.analysis.intervals import (INT32, AnalysisError, Interval,
+                                      V_DOMAIN, clamp_interval,
+                                      wrap_is_exact)
+from repro.analysis.kernel_contracts import (PALLAS_BACKENDS, ContractCheck,
+                                             ContractError, ContractReport,
+                                             KernelCall, VMEM_BUDGET_BYTES,
+                                             check_kernel_contracts)
+from repro.analysis.lint import (RULES, LintViolation, lint_file,
+                                 lint_paths, lint_source)
+from repro.analysis.program_check import (LayerRange, RangeError,
+                                          RangeReport, check_program)
+
+__all__ = [
+    "AnalysisError", "ContractCheck", "ContractError", "ContractReport",
+    "INT32", "Interval", "KernelCall", "LayerRange", "LintViolation",
+    "PALLAS_BACKENDS", "RULES", "RangeError", "RangeReport", "V_DOMAIN",
+    "VMEM_BUDGET_BYTES", "check_kernel_contracts", "check_program",
+    "clamp_interval", "lint_file", "lint_paths", "lint_source",
+    "validate_program", "wrap_is_exact",
+]
+
+
+def validate_program(program, *, frames: Optional[int] = None,
+                     backends: Optional[tuple] = None, **contract_kw
+                     ) -> tuple:
+    """Run the range pass plus the kernel-contract pass and return
+    ``(RangeReport, {backend: ContractReport})``; raise the first
+    `AnalysisError` found. This is what
+    `compile_network(..., validate=True)` executes at compile time.
+
+    ``backends`` defaults to the dense Pallas contract for int-domain
+    programs (the dispatch every integer backend shares its geometry
+    with) and the trivial float contract otherwise; pass an explicit
+    tuple to verify gated/event dispatches with their own knobs
+    (``gate_granularity``, ``event_crossover``, ... via ``contract_kw``).
+    """
+    if backends is None:
+        backends = ("pallas",) if program.domain == "int" else ("float",)
+    ranges = check_program(program, frames=frames)
+    contracts = {b: check_kernel_contracts(program, b, frames=frames,
+                                           **contract_kw)
+                 for b in backends}
+    return ranges, contracts

@@ -1,0 +1,183 @@
+"""Repo-invariant AST lint: custom rules the stock ruff families cannot
+express, enforced over `src/repro` library code (tests are exempt — pytest
+rewrites their asserts and they may exercise raw randomness on purpose).
+
+  ANA001  no bare ``assert`` in library code. `python -O` strips asserts,
+          so a contract guarded by one silently vanishes in optimized
+          deployments — raise ValueError/TypeError instead.
+  ANA002  no ad-hoc membrane clamping outside `core/quant.py`: any
+          ``clip(...)`` bounded by the V-word constants (V_MIN / V_MAX /
+          +-1024 / 1023) or any ``% V_SPAN`` wrap. Exactly one wrap and
+          one saturate implementation may exist (`quant.clamp_v` /
+          `clamp_v_np`), or backends drift apart one copied clamp at a
+          time.
+  ANA003  no unseeded randomness in library paths: legacy global-state
+          ``np.random.<fn>()`` draws, or ``default_rng()`` /
+          ``RandomState()`` constructed without a seed. Reproducibility
+          (bit-identical rasters, deterministic benchmarks, the CI gate)
+          requires every stream of randomness to be explicitly keyed.
+
+Suppress a finding with ``# noqa: ANA00x`` on the offending line.
+
+Pure stdlib (ast) on purpose: `tools/check_invariants.py` runs the lint
+in environments without jax installed.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Iterable, Optional
+
+RULES = {
+    "ANA001": "bare assert in library code (stripped under python -O); "
+              "raise ValueError/TypeError",
+    "ANA002": "ad-hoc membrane clamp; route through quant.clamp_v / "
+              "quant.clamp_v_np / quant.spike_compare",
+    "ANA003": "unseeded randomness in library code; pass an explicit "
+              "seed/key",
+}
+
+#: the one module allowed to implement clamping
+_CLAMP_HOME = ("core", "quant.py")
+#: names/constants that mark a clip call as a *membrane* clamp
+_V_NAMES = {"V_MIN", "V_MAX"}
+_V_CONSTS = {-1024, 1023, 1024}
+#: legacy numpy global-RNG draw functions (always unseeded global state)
+_NP_GLOBAL_DRAWS = {
+    "rand", "randn", "randint", "random", "random_sample", "ranf",
+    "sample", "choice", "bytes", "shuffle", "permutation", "uniform",
+    "normal", "standard_normal", "poisson", "binomial", "beta", "gamma",
+    "exponential", "geometric",
+}
+
+
+@dataclass(frozen=True)
+class LintViolation:
+    path: str
+    line: int
+    col: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+
+def _attr_chain(node: ast.AST) -> list:
+    """['np', 'random', 'default_rng'] for np.random.default_rng."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return parts[::-1]
+
+
+def _mentions_v_const(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name) and sub.id in _V_NAMES:
+            return True
+        if isinstance(sub, ast.Constant) and sub.value in _V_CONSTS:
+            return True
+        if (isinstance(sub, ast.UnaryOp) and isinstance(sub.op, ast.USub)
+                and isinstance(sub.operand, ast.Constant)
+                and isinstance(sub.operand.value, int)
+                and -sub.operand.value in _V_CONSTS):
+            return True
+    return False
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, path: str, clamp_home: bool) -> None:
+        self.path = path
+        self.clamp_home = clamp_home
+        self.found: list[LintViolation] = []
+
+    def _add(self, node: ast.AST, rule: str, message: str) -> None:
+        self.found.append(LintViolation(
+            path=self.path, line=node.lineno, col=node.col_offset + 1,
+            rule=rule, message=message))
+
+    # ANA001 ---------------------------------------------------------------
+    def visit_Assert(self, node: ast.Assert) -> None:
+        self._add(node, "ANA001", RULES["ANA001"])
+        self.generic_visit(node)
+
+    # ANA002 ---------------------------------------------------------------
+    def visit_BinOp(self, node: ast.BinOp) -> None:
+        if (not self.clamp_home and isinstance(node.op, ast.Mod)
+                and isinstance(node.right, ast.Name)
+                and node.right.id == "V_SPAN"):
+            self._add(node, "ANA002", "wrap via '% V_SPAN'; "
+                      + RULES["ANA002"])
+        self.generic_visit(node)
+
+    # ANA002 + ANA003 ------------------------------------------------------
+    def visit_Call(self, node: ast.Call) -> None:
+        chain = _attr_chain(node.func)
+        if (not self.clamp_home and chain and chain[-1] == "clip"
+                and any(_mentions_v_const(a) for a in node.args[1:])):
+            self._add(node, "ANA002",
+                      "clip to the V word; " + RULES["ANA002"])
+        if len(chain) >= 2 and chain[-2] == "random" and chain[0] in (
+                "np", "numpy"):
+            fn = chain[-1]
+            if fn in _NP_GLOBAL_DRAWS:
+                self._add(node, "ANA003", f"np.random.{fn} draws from "
+                          "global state; " + RULES["ANA003"])
+            elif fn in ("default_rng", "RandomState") and not node.args \
+                    and not node.keywords:
+                self._add(node, "ANA003", f"np.random.{fn}() without a "
+                          "seed; " + RULES["ANA003"])
+        self.generic_visit(node)
+
+
+def _noqa_lines(source: str) -> dict:
+    """line number -> set of suppressed rule ids ({'*'} for bare noqa)."""
+    out: dict[int, set] = {}
+    for i, line in enumerate(source.splitlines(), start=1):
+        if "noqa" not in line:
+            continue
+        _, _, tail = line.partition("noqa")
+        tail = tail.lstrip(" :")
+        rules = {t.strip().rstrip(",") for t in tail.split()
+                 if t.strip().startswith("ANA")}
+        out[i] = rules or {"*"}
+    return out
+
+
+def lint_source(source: str, path: str = "<string>") -> list:
+    """Lint one module's source; returns the surviving violations."""
+    clamp_home = path.replace("\\", "/").endswith("/".join(_CLAMP_HOME))
+    tree = ast.parse(source, filename=path)
+    visitor = _Visitor(path, clamp_home)
+    visitor.visit(tree)
+    noqa = _noqa_lines(source)
+    return [v for v in visitor.found
+            if not (v.line in noqa
+                    and ("*" in noqa[v.line] or v.rule in noqa[v.line]))]
+
+
+def lint_file(path) -> list:
+    p = Path(path)
+    return lint_source(p.read_text(), str(p))
+
+
+def lint_paths(paths: Iterable, *, exclude: Optional[Iterable] = None
+               ) -> list:
+    """Lint every ``*.py`` under the given files/directories (sorted), for
+    stable, diffable output. ``exclude``: path substrings to skip."""
+    exclude = tuple(exclude or ())
+    files: list[Path] = []
+    for root in paths:
+        root = Path(root)
+        files.extend(sorted(root.rglob("*.py")) if root.is_dir() else [root])
+    out = []
+    for f in files:
+        s = str(f)
+        if any(e in s for e in exclude):
+            continue
+        out.extend(lint_file(f))
+    return out

@@ -146,7 +146,10 @@ class CheckpointManager:
                   for i in range(len(manifest["keys"]))]
         if like is not None:
             like_keys, like_leaves, treedef = _flatten_with_paths(like)
-            assert like_keys == manifest["keys"], "checkpoint/tree mismatch"
+            if like_keys != manifest["keys"]:
+                raise ValueError(
+                    "checkpoint/tree mismatch: the `like` tree's leaf "
+                    "paths differ from the saved manifest")
             if shardings is not None:
                 _, shard_leaves, _ = _flatten_with_paths(shardings)
                 leaves = [jax.device_put(x.astype(lk.dtype), s)

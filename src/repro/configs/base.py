@@ -158,7 +158,9 @@ class ModelConfig:
         return mats * self.d_model * d_ff
 
     def _ssm_params(self) -> int:
-        assert self.ssm is not None
+        if self.ssm is None:
+            raise ValueError(f"{self.arch_id}: ssm layer kind requested "
+                             "but cfg.ssm is unset")
         s, d = self.ssm, self.d_model
         d_in = s.expand * d
         n = 2 * d * d_in                                          # in_proj (x, z)

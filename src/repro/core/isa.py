@@ -62,7 +62,9 @@ class MacroState:
 
 def make_state(wq: np.ndarray, threshold: int, reset: int = 0, leak: int = 0,
                clamp_mode: str = "saturate") -> MacroState:
-    assert wq.shape == (MACRO_IN, MACRO_OUT), wq.shape
+    if wq.shape != (MACRO_IN, MACRO_OUT):
+        raise ValueError(f"macro weight tile must be "
+                         f"{(MACRO_IN, MACRO_OUT)}, got {wq.shape}")
     return MacroState(
         wmem=jnp.asarray(wq, jnp.int8),
         vmem=jnp.zeros((N_NEURON_SETS, MACRO_OUT), jnp.int32),

@@ -56,7 +56,9 @@ V_VALUE_BITS = 11
 
 def encode_w(w: int) -> np.ndarray:
     """6-bit two's complement, LSB first."""
-    assert -32 <= w <= 31, w
+    if not -32 <= w <= 31:
+        raise ValueError(f"weight {w} exceeds the 6-bit two's-complement "
+                         "range [-32, 31]")
     u = w & 0x3F
     return np.array([(u >> i) & 1 for i in range(W_BITS)], dtype=np.uint8)
 
@@ -78,7 +80,9 @@ def encode_v(v: int) -> np.ndarray:
 
 
 def decode_v(bits: np.ndarray) -> int:
-    assert bits[GUARD] == 0, "guard bit violated"
+    if bits[GUARD] != 0:
+        raise ValueError("guard bit violated: V slot carries a non-zero "
+                         f"bit at guard position {GUARD}")
     u = sum(int(bits[i]) << i for i in range(5))
     u += sum(int(bits[i + 1]) << i for i in range(5, 11))
     return u - 2048 if u >= 1024 else u
@@ -133,7 +137,9 @@ class BitMacro:
     # -- construction -------------------------------------------------------
     @staticmethod
     def from_weights(wq: np.ndarray, threshold: int, reset: int = 0, leak: int = 0) -> "BitMacro":
-        assert wq.shape == (MACRO_IN, MACRO_OUT)
+        if wq.shape != (MACRO_IN, MACRO_OUT):
+            raise ValueError(f"macro weight tile must be "
+                             f"{(MACRO_IN, MACRO_OUT)}, got {wq.shape}")
         wbits = np.zeros((MACRO_IN, COLS), dtype=np.uint8)
         for r in range(MACRO_IN):
             for j in range(MACRO_OUT):
@@ -258,7 +264,13 @@ def physical_layout_check() -> bool:
         cols: list[int] = []
         for j in range(parity, MACRO_OUT, 2):
             cols.extend(slot_columns(j).tolist())
-        assert sorted(cols) == list(range(COLS)), (parity, sorted(cols))
+        if sorted(cols) != list(range(COLS)):
+            raise RuntimeError(
+                f"staggered layout broken: parity-{parity} slots do not "
+                f"tile the {COLS} columns ({sorted(cols)})")
     for j in range(MACRO_OUT):
-        assert list(slot_columns(j)[:6]) == list(range(6 * j, 6 * j + 6)), j
+        if list(slot_columns(j)[:6]) != list(range(6 * j, 6 * j + 6)):
+            raise RuntimeError(
+                f"slot {j}: weight columns are not the low half of the "
+                "slot")
     return True

@@ -45,7 +45,7 @@ import numpy as np
 from repro.configs.impulse_snn import SNNModelConfig
 from repro.core import isa, mapping
 from repro.core.neuron import NeuronState, neuron_step
-from repro.core.quant import (clamp_v, fake_quant_w, quantize_const,
+from repro.core.quant import (clamp_v, fake_quant_w, quantize_neuron_const,
                               quantize_w, spike_compare)
 
 # ---------------------------------------------------------------------------
@@ -169,8 +169,8 @@ def _conv_state_shapes(cfg: SNNModelConfig, convs: list) -> list:
 
 
 def compile_network(cfg: SNNModelConfig, params: dict, *, domain: str = "float",
-                    clamp_mode: str = "saturate", quantize: bool = True
-                    ) -> SNNProgram:
+                    clamp_mode: str = "saturate", quantize: bool = True,
+                    validate: bool = True) -> SNNProgram:
     """Lower (cfg, params) to an executable network program.
 
     ``domain="float"`` keeps the trainable parameterization (softplus'd
@@ -180,6 +180,19 @@ def compile_network(cfg: SNNModelConfig, params: dict, *, domain: str = "float",
     layer — stays float (off-macro input layer, as in the paper). On-macro
     convs keep their HWIO int8 kernel plus the im2col fan-in geometry
     (n_in = k*k*c_in — the 128-row rule, mapping.conv_tiling).
+
+    Neuron constants quantize through `quant.quantize_neuron_const`, which
+    folds them into the 11-bit V word under the program's clamp mode — a
+    wrap-mode constant that rounds outside [V_MIN, V_MAX] wraps exactly as
+    the datapath would read it, instead of clipping to a value no V op
+    ever computes against.
+
+    ``validate`` (default on) runs the static analyzer over the compiled
+    program before returning it: `repro.analysis.check_program` proves the
+    per-layer value ranges (no int32 accumulator overflow at the
+    program's timestep horizon) and `check_kernel_contracts` verifies the
+    fused-kernel dispatch geometry — a mis-configured program is rejected
+    with a named `AnalysisError` at compile time, not mid-dispatch.
     """
     th = jax.nn.softplus(params["threshold"]) + 1e-3
     lk = jax.nn.softplus(params["leak"]) * 0.1
@@ -197,8 +210,10 @@ def compile_network(cfg: SNNModelConfig, params: dict, *, domain: str = "float",
                 layers.append(LayerSpec(
                     kind="conv", n_in=kh * kw * c_in, n_out=shape[-1],
                     w=wq,
-                    threshold=jnp.int32(quantize_const(float(th[k]), scale)),
-                    leak=jnp.int32(quantize_const(float(lk[k]), scale)),
+                    threshold=jnp.int32(quantize_neuron_const(
+                        float(th[k]), scale, clamp_mode)),
+                    leak=jnp.int32(quantize_neuron_const(
+                        float(lk[k]), scale, clamp_mode)),
                     scale=float(scale), stride=cfg.conv_spec[i][2],
                     quantize=False, state_shape=shape))
             else:                                 # float / encoder conv
@@ -225,9 +240,9 @@ def compile_network(cfg: SNNModelConfig, params: dict, *, domain: str = "float",
         if domain == "int":
             wq, scale = quantize_w(w)
             th_i = None if is_readout else jnp.int32(
-                quantize_const(float(th[k]), scale))
+                quantize_neuron_const(float(th[k]), scale, clamp_mode))
             lk_i = None if is_readout else jnp.int32(
-                quantize_const(float(lk[k]), scale))
+                quantize_neuron_const(float(lk[k]), scale, clamp_mode))
             layers.append(LayerSpec(
                 kind="readout" if is_readout else "fc", n_in=n_in, n_out=n_out,
                 w=wq, threshold=th_i, leak=lk_i, scale=float(scale),
@@ -240,9 +255,15 @@ def compile_network(cfg: SNNModelConfig, params: dict, *, domain: str = "float",
         if not is_readout:
             k += 1
 
-    return SNNProgram(cfg=cfg, domain=domain, neuron=cfg.spiking.neuron,
-                      timesteps=cfg.timesteps, layers=tuple(layers),
-                      clamp_mode=clamp_mode, quantize=quantize)
+    program = SNNProgram(cfg=cfg, domain=domain, neuron=cfg.spiking.neuron,
+                         timesteps=cfg.timesteps, layers=tuple(layers),
+                         clamp_mode=clamp_mode, quantize=quantize)
+    if validate:
+        # lazy import: analysis consumes programs, pipeline produces them —
+        # the compile-time hook must not create an import cycle
+        from repro.analysis import validate_program
+        validate_program(program)
+    return program
 
 
 def rate_coded_program(spiking_cfg, state_shape: tuple) -> SNNProgram:

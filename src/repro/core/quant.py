@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 W_BITS = 6
 V_BITS = 11
@@ -88,6 +89,41 @@ def spike_compare(v: jax.Array, threshold, mode: str = "saturate") -> jax.Array:
     return v >= threshold
 
 
+def clamp_v_np(v: np.ndarray, mode: str = "saturate") -> np.ndarray:
+    """Numpy twin of `clamp_v` for host-side executors (the event-list
+    backend runs data-dependent compaction that does not jit). Keeping the
+    only two clamp implementations side by side in this module is what lets
+    the repo lint forbid ad-hoc clamping everywhere else."""
+    if mode == "saturate":
+        return np.clip(v, V_MIN, V_MAX)
+    if mode == "wrap":
+        return ((v - V_MIN) % V_SPAN) + V_MIN
+    raise ValueError(f"unknown clamp mode {mode!r}")
+
+
+def spike_compare_np(v: np.ndarray, threshold, mode: str = "saturate") -> np.ndarray:
+    """Numpy twin of `spike_compare` (see `clamp_v_np`)."""
+    if mode == "wrap":
+        return clamp_v_np(v - threshold, "wrap") >= 0
+    return v >= threshold
+
+
 def quantize_const(x: float, scale: jax.Array, lo: int = V_MIN, hi: int = V_MAX) -> jax.Array:
     """Quantize a scalar (threshold / leak / reset) onto the shared grid."""
     return jnp.clip(jnp.round(x / scale), lo, hi).astype(jnp.int32)
+
+
+def quantize_neuron_const(x: float, scale, clamp_mode: str = "saturate") -> jax.Array:
+    """Quantize a neuron constant (threshold / leak / reset) into the 11-bit
+    V word its const row actually stores, honouring the program's clamp mode.
+
+    ``saturate`` clips exactly like `quantize_const`. ``wrap`` folds the
+    rounded value with the same two's-complement rollover the datapath
+    applies: a constant that rounds outside [V_MIN, V_MAX] must wrap, not
+    clip, or the compiled constant disagrees with what every V op computes
+    against it — and the static analyzer's constant ranges would no longer
+    match execution. All threshold/leak quantization routes through here so
+    the guarantee `const in [V_MIN, V_MAX]` holds by construction.
+    """
+    q = jnp.round(x / scale).astype(jnp.int32)
+    return clamp_v(q, clamp_mode).astype(jnp.int32)

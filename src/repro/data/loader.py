@@ -58,7 +58,9 @@ def lm_batch_fn(vocab: int, global_batch: int, seq: int, seed: int = 0):
     from repro.data.synthetic import lm_token_batch
 
     def fn(step: int, shard_id: int, num_shards: int) -> dict:
-        assert global_batch % num_shards == 0
+        if global_batch % num_shards != 0:
+            raise ValueError(f"global_batch={global_batch} must shard "
+                             f"evenly over {num_shards} hosts")
         local = global_batch // num_shards
         # derive an independent stream per (step, shard)
         x = lm_token_batch(local, seq, vocab,

@@ -12,9 +12,9 @@ exploited here) and the word-level contract for per-row skip accounting
 (`isa.count_skipped_instructions_from_events`).
 
 Host/numpy on purpose: the compaction is data-dependent (ragged event
-lists do not jit), and the per-event arithmetic mirrors `quant.clamp_v` /
-`quant.spike_compare` exactly in int32, so results are bit-identical to
-every other backend. Use it for accounting and verification, not
+lists do not jit), and the per-event arithmetic routes through
+`quant.clamp_v_np` / `quant.spike_compare_np` in int32, so results are
+bit-identical to every other backend. Use it for accounting and verification, not
 throughput.
 """
 from __future__ import annotations
@@ -23,7 +23,8 @@ from typing import NamedTuple
 
 import numpy as np
 
-from repro.core.quant import V_MAX, V_MIN, V_SPAN
+from repro.core.quant import clamp_v_np as _clamp
+from repro.core.quant import spike_compare_np as _spike
 
 
 class EventStats(NamedTuple):
@@ -51,20 +52,6 @@ class EventStats(NamedTuple):
         """Fraction of all (frame, row) gate sites that were silent."""
         possible = sum(self.frames * len(r) for r in self.row_events)
         return sum(self.skipped_rows) / possible if possible else 0.0
-
-
-def _clamp(v: np.ndarray, mode: str) -> np.ndarray:
-    if mode == "saturate":
-        return np.clip(v, V_MIN, V_MAX)
-    if mode == "wrap":
-        return ((v - V_MIN) % V_SPAN) + V_MIN
-    raise ValueError(f"unknown clamp mode {mode!r}")
-
-
-def _spike(v: np.ndarray, threshold: int, mode: str) -> np.ndarray:
-    if mode == "wrap":             # the comparison itself wraps on silicon
-        return _clamp(v - threshold, "wrap") >= 0
-    return v >= threshold
 
 
 def fused_snn_net_events(spikes, ws, *, thresholds: tuple, leaks: tuple,

@@ -132,6 +132,10 @@ def fused_snn_net(spikes: jax.Array, ws: list, *, thresholds: tuple,
     if use_events and not use_pallas:
         raise ValueError("use_events is the Pallas event-list kernel; the "
                          "host-side executor is events.fused_snn_net_events")
+    if use_events and not 0.0 <= event_crossover <= 1.0:
+        raise ValueError("event_crossover is a fraction of tile event "
+                         f"capacity and must lie in [0, 1], got "
+                         f"{event_crossover}")
     # validates granularity and enforces the gate-column cap for BOTH
     # execution paths (the reference mirrors the kernel's counted blocks)
     widths = (spikes.shape[2],) + tuple(w.shape[1] for w in ws)

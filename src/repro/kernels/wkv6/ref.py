@@ -48,7 +48,9 @@ def wkv6_chunked(r, k, v, w, u, s0=None, chunk: int = 64, unroll: bool = False):
     bodies once, so rolled loops understate FLOPs)."""
     BH, T, K = r.shape
     V = v.shape[-1]
-    assert T % chunk == 0, (T, chunk)
+    if T % chunk != 0:
+        raise ValueError(f"wkv6 chunked form needs T % chunk == 0, got "
+                         f"T={T}, chunk={chunk} (ops.py pads)")
     C = chunk
     f32 = jnp.float32
     r, k, v, w = (x.astype(f32) for x in (r, k, v, w))

@@ -152,7 +152,11 @@ def blocked_attention(q, k, v, *, causal: bool, q_chunk: int,
     rep = H // KV
     q_chunk = min(q_chunk, T)
     kv_block = min(kv_block, S)
-    assert T % q_chunk == 0 and S % kv_block == 0, (T, q_chunk, S, kv_block)
+    if T % q_chunk != 0 or S % kv_block != 0:
+        raise ValueError(
+            f"chunked attention needs T % q_chunk == 0 and S % kv_block "
+            f"== 0, got T={T}, q_chunk={q_chunk}, S={S}, "
+            f"kv_block={kv_block}")
     qf = (q.astype(jnp.float32) / np.sqrt(D)).reshape(B, T, KV, rep, D)
     kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
 

@@ -50,7 +50,10 @@ def n_prelude(cfg: ModelConfig) -> int:
 def n_super(cfg: ModelConfig) -> int:
     body = cfg.n_layers - n_prelude(cfg)
     sp = super_period(cfg)
-    assert body % sp == 0, (cfg.arch_id, body, sp)
+    if body % sp != 0:
+        raise ValueError(
+            f"{cfg.arch_id}: {body} body layers do not divide into "
+            f"super-blocks of period {sp}")
     return body // sp
 
 
@@ -404,7 +407,9 @@ def loss_fn(params, batch: dict, cfg: ModelConfig,
         x = x[:, batch["patches"].shape[1]:]                  # text positions only
     n_chunks = max(parallel.vocab_chunking, 1)
     B, T, _ = x.shape
-    assert T % n_chunks == 0
+    if T % n_chunks != 0:
+        raise ValueError(f"vocab_chunking={n_chunks} must divide the "
+                         f"sequence length, got T={T}")
 
     def ce(xc, tc):
         lg = _logits(params, xc, cfg)

@@ -59,7 +59,9 @@ def _ssm_chunked(a_log_dt, bx, c, h0, chunk: int, unroll: bool = False,
     (B, T, d_in, N) associative-scan residuals (a TB-scale saving at pod
     batch sizes; §Perf jamba hillclimb)."""
     B, T, d_in, N = bx.shape
-    assert T % chunk == 0, (T, chunk)
+    if T % chunk != 0:
+        raise ValueError(f"chunked ssm scan needs T % chunk == 0, got "
+                         f"T={T}, chunk={chunk}")
     nch = T // chunk
     a_c = a_log_dt.reshape(B, nch, chunk, d_in, N)
     b_c = bx.reshape(B, nch, chunk, d_in, N)

@@ -105,16 +105,36 @@ class SNNServeEngine(SlotEngine):
     through to `stream_step` (block_b / interpret / gate_granularity /
     use_sparse). ``track_events=False`` disables raster emission and
     per-slot accounting — the pure-serving configuration in which
-    inter-layer spikes never leave the kernel."""
+    inter-layer spikes never leave the kernel.
+
+    ``validate`` (default on) runs the static analyzer at engine build
+    time: the kernel contracts of this exact (backend, step_kw) dispatch
+    are verified before the first tick, and the program's `RangeReport`
+    caps admission — a request whose tick budget exceeds the readout's
+    proven ``max_safe_frames`` (the horizon past which the unclamped int32
+    accumulator can overflow) is rejected at `submit` with a named
+    `RangeError` instead of silently serving garbage logits."""
 
     def __init__(self, program: SNNProgram, *, batch_slots: int = 4,
                  backend: str = "int_ref", track_events: bool = True,
-                 step_kw: Optional[dict] = None):
+                 step_kw: Optional[dict] = None, validate: bool = True):
         self.program = program
         self.backend = backend
         self.B = batch_slots
         self.track_events = track_events
         self.step_kw = dict(step_kw or {})
+        self.max_safe_ticks: Optional[int] = None
+        if validate:
+            from repro.analysis import check_kernel_contracts, check_program
+            check_kernel_contracts(
+                program, backend, frames=1, streaming=True,
+                emit_rasters=track_events,
+                block_b=self.step_kw.get("block_b", 8),
+                gate_granularity=self.step_kw.get("gate_granularity", 1),
+                event_crossover=self.step_kw.get("event_crossover", 1.0),
+                use_sparse=self.step_kw.get("use_sparse", False))
+            self.max_safe_ticks = check_program(
+                program, frames=1).max_safe_frames
         self.state = pipeline.init_stream_state(program, batch_slots, backend)
         self._fresh = pipeline.init_stream_state(program, 1, backend)
         # structurally-determined batch axis per state leaf (same B-vs-B+1
@@ -153,6 +173,14 @@ class SNNServeEngine(SlotEngine):
             raise ValueError(
                 f"request {req.rid}: frame shape {req.frames.shape[1:]} "
                 f"does not match the program input {self._frame_shape}")
+        budget = self._tick_budget(req)
+        if self.max_safe_ticks is not None and budget > self.max_safe_ticks:
+            from repro.analysis import RangeError
+            raise RangeError(
+                f"request {req.rid} streams {budget} ticks but the "
+                f"readout's unclamped int32 accumulator is only proven "
+                f"safe for {self.max_safe_ticks} frames; split the stream "
+                "or cap max_ticks", where="readout")
         self.queue.put(req)
 
     @staticmethod

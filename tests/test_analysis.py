@@ -1,0 +1,383 @@
+"""The static-verification contract (repro.analysis, DESIGN.md §"Static
+verification").
+
+Three claims under test:
+
+  * soundness — sampled executions across backends never leave the
+    per-layer intervals the range pass proved (the analyzer may be loose,
+    never wrong);
+  * rejection — every adversarial mis-configuration (overflow horizon,
+    skip-column overflow, crossover out of range, VMEM-exceeding dispatch)
+    is refused with a *named* error identifying the offending layer or
+    contract, before any kernel is built;
+  * the lint rules fire on the patterns they claim to ban, nowhere else,
+    and the CI gate (`tools/check_invariants.py`) fails on a deliberately
+    broken tree.
+"""
+import dataclasses
+import importlib.util
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.analysis import (ContractError, Interval, RangeError, V_DOMAIN,
+                            check_kernel_contracts, check_program,
+                            clamp_interval, lint_source, validate_program,
+                            wrap_is_exact)
+from repro.configs.base import SpikingConfig
+from repro.configs.impulse_snn import SNNModelConfig
+from repro.core import pipeline, snn
+from repro.core.pipeline import LayerSpec, SNNProgram
+from repro.core.quant import V_MAX, V_MIN, V_SPAN
+
+
+# ---------------------------------------------------------------------------
+# interval lattice
+# ---------------------------------------------------------------------------
+
+def test_interval_algebra():
+    a, b = Interval(-3, 5), Interval(2, 10)
+    assert a + b == Interval(-1, 15)
+    assert a - b == Interval(-13, 3)
+    assert a.hull(b) == Interval(-3, 10)
+    assert a.intersect(b) == Interval(2, 5)
+    assert Interval(6, 10).intersect(Interval(0, 5)) is None
+    assert a.shift(4) == Interval(1, 9)
+    assert a.contains(Interval(0, 5)) and not a.contains(b)
+    assert a.contains_value(0) and not a.contains_value(6)
+    assert Interval.point(7) == Interval(7, 7)
+    with pytest.raises(ValueError):
+        Interval(3, 2)
+
+
+def test_clamp_interval_saturate():
+    assert clamp_interval(Interval(-5000, 5000), "saturate") == V_DOMAIN
+    assert clamp_interval(Interval(0, 100), "saturate") == Interval(0, 100)
+    assert clamp_interval(Interval(900, 5000), "saturate") == \
+        Interval(900, V_MAX)
+
+
+def test_clamp_interval_wrap_exact_window():
+    # a whole interval inside one wrap window translates exactly
+    iv = Interval(V_MAX + 1, V_MAX + 10)
+    assert wrap_is_exact(iv)
+    assert clamp_interval(iv, "wrap") == Interval(V_MIN, V_MIN + 9)
+    # in-domain interval is untouched
+    assert clamp_interval(Interval(-10, 10), "wrap") == Interval(-10, 10)
+
+
+def test_clamp_interval_wrap_widens_across_windows():
+    iv = Interval(V_MAX - 1, V_MAX + 1)       # straddles the wrap seam
+    assert not wrap_is_exact(iv)
+    assert clamp_interval(iv, "wrap") == V_DOMAIN
+
+
+def test_wrap_interval_matches_scalar_wrap():
+    for lo, hi in [(-3000, -2900), (2040, 2060), (0, 5), (1020, 1030)]:
+        iv = clamp_interval(Interval(lo, hi), "wrap")
+        for v in range(lo, hi + 1):
+            w = ((v - V_MIN) % V_SPAN) + V_MIN
+            assert iv.contains_value(w), (lo, hi, v, w, iv)
+
+
+# ---------------------------------------------------------------------------
+# soundness: executions stay inside the proven intervals
+# ---------------------------------------------------------------------------
+
+def _program(layer_sizes, neuron, clamp_mode, seed, timesteps=3):
+    cfg = SNNModelConfig(
+        arch_id="ana-test", layer_sizes=layer_sizes,
+        spiking=SpikingConfig(neuron=neuron, timesteps=timesteps,
+                              threshold=1.0, leak=0.0625,
+                              w_bits=6, v_bits=11),
+        timesteps=timesteps)
+    params = snn.init_fc_snn(jax.random.PRNGKey(seed), cfg)
+    return cfg, pipeline.compile_network(cfg, params, domain="int",
+                                         clamp_mode=clamp_mode)
+
+
+@given(st.sampled_from([("if", "saturate"), ("if", "wrap"),
+                        ("lif", "saturate"), ("lif", "wrap"),
+                        ("rmp", "saturate"), ("rmp", "wrap")]),
+       st.integers(min_value=0, max_value=2 ** 16),
+       st.sampled_from([5, 23]))
+@settings(max_examples=12, deadline=None)
+def test_execution_never_leaves_proven_intervals(neuron_mode, seed, n_hidden):
+    neuron, clamp_mode = neuron_mode
+    """Property: for every backend, every final membrane value lies inside
+    the invariant interval the range pass proved for its layer, and the
+    readout total inside the frame-horizon bound."""
+    cfg, program = _program((17, n_hidden, 9, 2), neuron, clamp_mode, seed)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((2, 2, 17)).astype(np.float32)) * 3
+    xs = pipeline.present_words(x, cfg.timesteps)
+    report = check_program(program, frames=int(xs.shape[0]))
+
+    runs = {
+        "int_ref": pipeline.run_network(program, xs, "int_ref"),
+        "pallas": pipeline.run_network(program, xs, "pallas",
+                                       interpret=True, block_b=4),
+        "ref_events": pipeline.run_network(program, xs, "ref_events"),
+    }
+    for backend, res in runs.items():
+        # v_final[0] is the off-macro float encoder; the rest is the
+        # macro stack in report order (spiking FCs then readout)
+        assert len(res.v_final) - 1 == len(report.layers)
+        for layer, v in zip(report.layers, res.v_final[1:]):
+            vals = np.asarray(v).astype(np.int64)
+            lo, hi = int(vals.min()), int(vals.max())
+            assert layer.v_post.contains(Interval(lo, hi)), \
+                (backend, layer.name, (lo, hi), layer.v_post)
+
+
+@given(st.integers(min_value=0, max_value=2 ** 16))
+@settings(max_examples=6, deadline=None)
+def test_wrap_report_is_sound_and_flagged(seed):
+    """Wrap-mode reports stay inside the V word and mark any clamp
+    transfer that had to widen (wrap_exact=False is allowed, escaping the
+    word is not)."""
+    _, program = _program((17, 12, 5, 2), "rmp", "wrap", seed)
+    report = check_program(program)
+    for layer in report.layers:
+        if layer.kind != "readout":
+            assert V_DOMAIN.contains(layer.v_post), layer
+
+
+# ---------------------------------------------------------------------------
+# rejection: adversarial mis-configurations, each refused by name
+# ---------------------------------------------------------------------------
+
+def test_readout_overflow_horizon_rejected():
+    """A frame horizon past max_safe_frames is a proven int32 overflow:
+    named RangeError on the readout, and the reported bound is sharp."""
+    _, program = _program((17, 12, 5, 2), "rmp", "saturate", seed=0)
+    report = check_program(program)
+    safe = report.max_safe_frames
+    assert safe is not None and safe > 0
+    check_program(program, frames=safe)                  # exactly safe: ok
+    with pytest.raises(RangeError) as ei:
+        check_program(program, frames=safe + 1)
+    assert "readout" in str(ei.value)
+    assert ei.value.where.startswith("readout")
+
+
+def test_compile_time_validation_default_on():
+    """`compile_network` refuses a program whose own presentation horizon
+    already overflows the readout — unless validation is explicitly off."""
+    cfg = SNNModelConfig(
+        arch_id="ana-overflow", layer_sizes=(17, 12, 2),
+        spiking=SpikingConfig(neuron="if", timesteps=3, threshold=1.0,
+                              leak=0.0625, w_bits=6, v_bits=11),
+        timesteps=3)
+    params = snn.init_fc_snn(jax.random.PRNGKey(0), cfg)
+    bad = dataclasses.replace(cfg, timesteps=2 ** 40)
+    with pytest.raises(RangeError):
+        pipeline.compile_network(bad, params, domain="int")
+    program = pipeline.compile_network(bad, params, domain="int",
+                                       validate=False)
+    assert program.timesteps == 2 ** 40                  # opt-out compiles
+
+
+def test_saturate_overflow_fanin_rejected_wrap_composes():
+    """A fan-in so large the unclamped accumulator can pass int32 is
+    rejected in saturate mode (clamping an overflowed value clips the
+    wrong number) but accepted in wrap mode (2^11 divides 2^32: silicon
+    wrap composes through the rollover)."""
+    layers = (
+        LayerSpec(kind="fc", n_in=10 ** 8, n_out=4, w=None,
+                  threshold=100, leak=0),
+        LayerSpec(kind="readout", n_in=4, n_out=2, w=None),
+    )
+
+    def prog(mode):
+        return SNNProgram(cfg=None, domain="int", neuron="if", timesteps=2,
+                          layers=layers, clamp_mode=mode)
+
+    with pytest.raises(RangeError) as ei:
+        check_program(prog("saturate"))
+    assert "fc[0]" in str(ei.value) and "saturate" in str(ei.value)
+    report = check_program(prog("wrap"))                 # wrap: proven safe
+    assert not report.layers[0].wrap_exact
+    assert V_DOMAIN.contains(report.layers[0].v_post)
+
+
+def test_oversized_constant_rejected():
+    layers = (
+        LayerSpec(kind="fc", n_in=8, n_out=4, w=None,
+                  threshold=V_MAX + 1, leak=0),
+        LayerSpec(kind="readout", n_in=4, n_out=2, w=None),
+    )
+    program = SNNProgram(cfg=None, domain="int", neuron="if", timesteps=2,
+                         layers=layers)
+    with pytest.raises(RangeError) as ei:
+        check_program(program)
+    assert "threshold" in str(ei.value)
+    assert "quantize_neuron_const" in str(ei.value)
+
+
+def test_skip_layout_overflow_rejected():
+    """A stack whose gate-site column map exceeds MAX_SKIP_COLS at fine
+    granularity is refused for the gated backend before dispatch — and
+    only for it (129 layers x 128/16 sites = 1032 > 1024)."""
+    _, program = _program((128,) * 129 + (4,), "if", "saturate", seed=0)
+    check_kernel_contracts(program, "pallas")            # dense: fine
+    check_kernel_contracts(program, "pallas_sparse",     # coarse: fits
+                           gate_granularity=1)
+    with pytest.raises(ContractError) as ei:
+        check_kernel_contracts(program, "pallas_sparse",
+                               gate_granularity=8)
+    assert "skip_layout" in str(ei.value)
+    assert "MAX_SKIP_COLS" in str(ei.value)
+
+
+def test_event_crossover_out_of_range_rejected():
+    _, program = _program((17, 12, 2), "if", "saturate", seed=0)
+    for bad in (-0.2, 1.5):
+        with pytest.raises(ContractError) as ei:
+            check_kernel_contracts(program, "pallas_events",
+                                   event_crossover=bad)
+        assert "event_crossover" in str(ei.value)
+    # the dispatch wrapper itself refuses too (defense in depth at ops)
+    x = jnp.zeros((1, 1, 17), jnp.float32)
+    xs = pipeline.present_words(x, 3)
+    with pytest.raises(ValueError, match="event_crossover"):
+        pipeline.run_network(program, xs, "pallas_events", interpret=True,
+                             block_b=2, event_crossover=1.5)
+
+
+def test_vmem_exceeding_dispatch_rejected():
+    """A (frames, block_b) pair whose resident working set cannot fit the
+    per-core VMEM budget is refused before any kernel is built."""
+    _, program = _program((128, 128, 2), "if", "saturate", seed=0)
+    check_kernel_contracts(program, "pallas", frames=4, block_b=8)
+    with pytest.raises(ContractError) as ei:
+        check_kernel_contracts(program, "pallas", frames=200_000,
+                               block_b=64)
+    assert "vmem_budget" in str(ei.value)
+
+
+def test_backend_and_mode_contracts():
+    _, program = _program((17, 12, 2), "if", "saturate", seed=0)
+    with pytest.raises(ContractError):
+        check_kernel_contracts(program, "no_such_backend")
+    with pytest.raises(ContractError) as ei:
+        check_kernel_contracts(program, "bitmacro")      # needs wrap
+    assert "wrap" in str(ei.value)
+    with pytest.raises(ContractError) as ei:
+        check_kernel_contracts(program, "pallas", gate_granularity=2)
+    assert "gate_granularity" in str(ei.value)
+    with pytest.raises(ContractError):
+        check_kernel_contracts(program, "pallas", block_b=0)
+
+
+def test_validate_program_bundles_both_passes():
+    _, program = _program((17, 12, 2), "if", "saturate", seed=0)
+    ranges, contracts = validate_program(program)
+    assert ranges.max_safe_frames is not None
+    assert set(contracts) == {"pallas"}
+    assert contracts["pallas"].vmem_bytes > 0
+
+
+# ---------------------------------------------------------------------------
+# serving: admission control against the proven horizon
+# ---------------------------------------------------------------------------
+
+def test_engine_validates_and_caps_admission():
+    from repro.serve.snn_engine import SNNRequest, SNNServeEngine
+    _, program = _program((17, 12, 5, 2), "rmp", "saturate", seed=0)
+    eng = SNNServeEngine(program, backend="int_ref", batch_slots=2)
+    assert eng.max_safe_ticks == check_program(program).max_safe_frames
+    frames = np.zeros((3, 17), dtype=np.int8)
+    eng.submit(SNNRequest(rid="ok", frames=frames))      # within budget
+    eng.max_safe_ticks = 2                               # force a tiny cap
+    with pytest.raises(RangeError, match="proven safe"):
+        eng.submit(SNNRequest(rid="too-long", frames=frames))
+
+
+def test_engine_rejects_contract_violation_at_build():
+    from repro.serve.snn_engine import SNNServeEngine
+    _, program = _program((17, 12, 2), "if", "saturate", seed=0)
+    with pytest.raises(ContractError, match="event_crossover"):
+        SNNServeEngine(program, backend="pallas_events",
+                       step_kw={"interpret": True, "block_b": 2,
+                                "event_crossover": 7.0})
+    eng = SNNServeEngine(program, backend="pallas_events",
+                         step_kw={"interpret": True, "block_b": 2,
+                                  "event_crossover": 7.0}, validate=False)
+    assert eng.max_safe_ticks is None                    # opt-out builds
+
+
+# ---------------------------------------------------------------------------
+# repo lint
+# ---------------------------------------------------------------------------
+
+def _rules(src, path="src/repro/models/x.py"):
+    return [v.rule for v in lint_source(src, path)]
+
+
+def test_lint_bare_assert():
+    assert _rules("def f(x):\n    assert x > 0\n") == ["ANA001"]
+    assert _rules("def f(x):\n    assert x > 0  # noqa: ANA001\n") == []
+
+
+def test_lint_adhoc_clamp():
+    assert _rules("import numpy as np\nv = np.clip(v, V_MIN, V_MAX)\n") == \
+        ["ANA002"]
+    assert _rules("v = jnp.clip(v, -1024, 1023)\n") == ["ANA002"]
+    assert _rules("w = (v - V_MIN) % V_SPAN\n") == ["ANA002"]
+    # the quant module is the one home allowed to clamp to the V word
+    assert _rules("import numpy as np\nv = np.clip(v, V_MIN, V_MAX)\n",
+                  path="src/repro/core/quant.py") == []
+    # clipping to other bounds is not a V-word clamp
+    assert _rules("v = np.clip(v, 0.0, 1.0)\n") == []
+
+
+def test_lint_unseeded_randomness():
+    assert _rules("import numpy as np\nx = np.random.rand(3)\n") == \
+        ["ANA003"]
+    assert _rules("r = np.random.default_rng()\n") == ["ANA003"]
+    assert _rules("r = np.random.default_rng(0)\n") == []
+    assert _rules("r = np.random.default_rng(seed)\n") == []
+
+
+def test_library_tree_is_lint_clean():
+    from repro.analysis import lint_paths
+    root = pathlib.Path(__file__).parent.parent / "src" / "repro"
+    assert lint_paths([root]) == []
+
+
+# ---------------------------------------------------------------------------
+# the CI gate itself
+# ---------------------------------------------------------------------------
+
+def _load_check_invariants():
+    path = (pathlib.Path(__file__).parent.parent / "tools" /
+            "check_invariants.py")
+    spec = importlib.util.spec_from_file_location("check_invariants", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_check_invariants_gate(tmp_path, capsys):
+    """The CLI passes on a clean tree and fails (exit 1, violation named)
+    on a deliberately broken one."""
+    mod = _load_check_invariants()
+    clean, broken = tmp_path / "clean", tmp_path / "broken"
+    clean.mkdir()
+    broken.mkdir()
+    (clean / "ok.py").write_text("def f(x):\n    return x\n")
+    (broken / "bad.py").write_text(
+        "def f(x):\n    assert x > 0\n    return x % 2048\n")
+
+    mod.LINT_ROOT = clean
+    mod.main(["--lint-only"])                            # no SystemExit
+    mod.LINT_ROOT = broken
+    with pytest.raises(SystemExit) as ei:
+        mod.main(["--lint-only"])
+    assert ei.value.code == 1
+    assert "ANA001" in capsys.readouterr().out

@@ -1,0 +1,139 @@
+#!/usr/bin/env python
+"""Repo invariant gate: AST lint of the library + static analysis of every
+committed config (DESIGN.md §"Static verification").
+
+    python tools/check_invariants.py               # the full CI gate
+    python tools/check_invariants.py --lint-only   # AST lint, no jax import
+    python tools/check_invariants.py --analyze-only
+
+Two halves, both blocking in CI:
+
+  * lint — `repro.analysis.lint` over src/repro: no bare `assert` in
+    library code (ANA001: `-O` strips them), no ad-hoc clamping to the
+    11-bit V word outside core/quant.py (ANA002), no unseeded randomness
+    in library paths (ANA003). Pure stdlib; runs without jax.
+  * analyze — compile every committed config (the two paper configs plus
+    the benchmark/example geometries) and run the range pass + the
+    kernel-contract pass for the backends each config is dispatched on.
+    A config that cannot be *proven* overflow-free and contract-clean
+    does not merge.
+
+Exit status 0 iff every check passes; violations/errors are printed one
+per line.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+LINT_ROOT = REPO / "src" / "repro"
+
+
+def run_lint() -> int:
+    from repro.analysis import lint_paths
+    violations = lint_paths([LINT_ROOT])
+    for v in violations:
+        print(v)
+    print(f"lint: {len(violations)} violation(s) in {LINT_ROOT}")
+    return len(violations)
+
+
+def _committed_programs():
+    """(name, program, {backend: contract_kw}) for every config this repo
+    commits to executing — the paper configs plus the geometries the
+    benchmarks and the quickstart build. Each backend carries the dispatch
+    knobs it is actually run with (gating is a pallas_sparse knob, the
+    dense-fallback crossover a pallas_events one)."""
+    import jax
+
+    from repro.configs.base import SpikingConfig
+    from repro.configs.impulse_snn import IMDB, MNIST, SNNModelConfig
+    from repro.core import pipeline, snn
+
+    key = jax.random.PRNGKey(0)
+
+    def _compile(cfg, init, **kw):
+        # validate=False: this tool IS the validator; let it report the
+        # failure with the config's name instead of dying inside compile
+        return pipeline.compile_network(cfg, init(key, cfg), domain="int",
+                                        validate=False, **kw)
+
+    every_pallas = {"pallas": {}, "pallas_sparse": {}, "pallas_events": {}}
+    yield ("imdb", _compile(IMDB, snn.init_fc_snn), every_pallas)
+    yield ("mnist", _compile(MNIST, snn.init_lenet_snn), every_pallas)
+
+    # benchmarks/sparsity_gating.py _conv_rows: event-gated LeNet slice
+    gate = SNNModelConfig(
+        arch_id="lenet-gate", conv_spec=((6, 3, 1), (8, 3, 2), (8, 3, 1)),
+        in_shape=(10, 10, 1), layer_sizes=(5 * 5 * 8, 32, 4),
+        spiking=SpikingConfig(neuron="if", timesteps=4, threshold=1.0,
+                              leak=0.0625, w_bits=6, v_bits=11),
+        timesteps=4, task="multiclass")
+    yield ("lenet-gate", _compile(gate, snn.init_lenet_snn),
+           {"pallas_sparse": {"gate_granularity": 2},
+            "pallas_events": {"event_crossover": 0.25}})
+
+    # benchmarks/fig9_efficiency.py: the LeNet5-mod energy-model program
+    bench = SNNModelConfig(
+        arch_id="lenet-bench", conv_spec=((8, 3, 1), (12, 3, 2)),
+        in_shape=(12, 12, 1), layer_sizes=(6 * 6 * 12, 64, 10),
+        spiking=SpikingConfig(neuron="rmp", timesteps=4, threshold=1.0,
+                              leak=0.0625, w_bits=6, v_bits=11),
+        timesteps=4, task="multiclass")
+    yield ("lenet-bench", _compile(bench, snn.init_lenet_snn),
+           {"pallas": {}})
+
+    # examples/quickstart.py: the wrap-mode (raw silicon) program
+    quick = SNNModelConfig(
+        arch_id="quickstart", layer_sizes=(24, 24, 12, 1),
+        spiking=SpikingConfig(neuron="rmp", timesteps=4, threshold=1.0,
+                              leak=0.0625, w_bits=6, v_bits=11),
+        timesteps=4)
+    yield ("quickstart",
+           _compile(quick, snn.init_fc_snn, clamp_mode="wrap"),
+           {"pallas": {}, "bitmacro": {}})
+
+
+def run_analysis() -> int:
+    from repro.analysis import (AnalysisError, check_kernel_contracts,
+                                check_program)
+    failures = 0
+    for name, program, backends in _committed_programs():
+        try:
+            ranges = check_program(program)
+            contracts = {b: check_kernel_contracts(program, b, **kw)
+                         for b, kw in backends.items()}
+        except AnalysisError as e:
+            failures += 1
+            print(f"analyze {name}: FAIL {type(e).__name__}: {e}")
+            continue
+        safe = ranges.max_safe_frames
+        vmem = max(r.vmem_bytes for r in contracts.values())
+        print(f"analyze {name}: ok — {len(ranges.layers)} layers in range "
+              f"({program.clamp_mode}), max_safe_frames="
+              f"{'unbounded' if safe is None else safe}, "
+              f"vmem<={vmem}B across {sorted(contracts)}")
+    return failures
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--lint-only", action="store_true")
+    ap.add_argument("--analyze-only", action="store_true")
+    args = ap.parse_args(argv)
+    n = 0
+    if not args.analyze_only:
+        n += run_lint()
+    if not args.lint_only:
+        n += run_analysis()
+    if n:
+        sys.exit(1)
+    print("check_invariants: all clear")
+
+
+if __name__ == "__main__":
+    main()
