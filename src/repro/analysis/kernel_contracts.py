@@ -32,6 +32,11 @@ the offending call, before any kernel is built:
                       | across the whole T loop + all weight tiles + all V
                       | scratch/out tiles + rasters + counters — fits the
                       | per-core budget
+  megastep            | streaming dispatches advance K >= 1 frames per
+                      | call (`pipeline.stream_megastep`); the VMEM
+                      | estimate scales its spike/raster blocks with K
+                      | (``frames=K``), so a K that overflows the budget
+                      | is rejected here, before the engine's first tick
 
 Each on-macro conv layer dispatches its own fused call over its im2col
 patch raster (T stays, batch becomes B*P, per-grid-cell residency is
@@ -193,6 +198,15 @@ def check_kernel_contracts(program, backend: str = "pallas", *,
     if frames is None:
         frames = int(program.timesteps)
     checks: list = []
+    if streaming:
+        if not isinstance(frames, int) or frames < 1:
+            raise ContractError(
+                f"megastep: a streaming dispatch advances K >= 1 frames "
+                f"per call, got K={frames!r}", where="stream")
+        checks.append(ContractCheck(
+            "megastep", "stream",
+            f"K={frames} frame(s) per dispatch; spike/raster VMEM blocks "
+            "scale linearly with K"))
     if backend not in KNOWN_BACKENDS:
         raise ContractError(
             f"unknown execution backend {backend!r}; have "

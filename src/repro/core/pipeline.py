@@ -133,6 +133,13 @@ class SNNProgram:
         """Advance every stream one tick on a (B, ...) current frame."""
         return stream_step(self, state, frame, backend, **kw)
 
+    def megastep(self, state: "StreamState", frames: jax.Array,
+                 backend: str = "float", **kw
+                 ) -> "tuple[StreamState, MegastepOut]":
+        """Advance every stream K ticks on a (K, B, ...) frame block in
+        one device dispatch."""
+        return stream_megastep(self, state, frames, backend, **kw)
+
 
 @dataclass
 class NetResult:
@@ -924,6 +931,147 @@ def stream_step(program: SNNProgram, state: StreamState, frame: jax.Array,
             StreamOut(v_out=v_out, logits=program.logits(v_out),
                       rasters=rasters, skips=skips,
                       conv_skips=conv_skips if conv_skips else None))
+
+
+@dataclass
+class MegastepOut:
+    """What one K-frame `stream_megastep` block produces — `StreamOut`'s
+    block-granular sibling. ``rasters[i]`` keeps its K axis ((K, B, n) flat
+    / (K, B, H, W, C) maps): concatenating blocks over a stream rebuilds
+    `NetResult.rasters` exactly. ``v_out_traj``/``logits_traj`` are the
+    per-tick readout trajectory *within* the block — what lets a server
+    finalize a request that finishes mid-block (tick budget exhausted or
+    confidence early-exit) with the exact values a tick-by-tick drain
+    would have produced. ``frames_consumed`` is the per-lane count of real
+    (non-masked) frames integrated, for exact accounting."""
+    v_out: Any                    # (B, n_out) readout V after the block
+    logits: Any                   # (B, n_out)
+    v_out_traj: Any               # (K, B, n_out) per-tick readout V
+    logits_traj: Any              # (K, B, n_out)
+    frames_consumed: Any          # (B,) int32
+    rasters: Optional[list] = None
+    skips: Any = None
+    conv_skips: Any = None
+
+
+def stream_megastep(program: SNNProgram, state: StreamState,
+                    frames: jax.Array, backend: str = "float", *,
+                    active=None, emit_rasters: bool = True,
+                    use_sparse: bool = False, block_b: int = 8,
+                    interpret: bool = False, gate_granularity: int = 1,
+                    event_crossover: float = 1.0
+                    ) -> tuple[StreamState, MegastepOut]:
+    """Advance every stream K ticks in ONE device dispatch: (state,
+    (K, B, ...) pre-staged current block) -> (new state, MegastepOut).
+
+    This is the serving-scale entry: where `stream_step` pays one host
+    round-trip per frame, a megastep hands the fused kernels a K-frame
+    raster and the per-layer V tiles stay VMEM-resident across the whole
+    K loop (the `v_init` chunk-composition property: integer arithmetic
+    is exact, so a K-frame call equals K chained one-frame calls bit for
+    bit — the fused-V_MEM payoff the paper's streaming mode is built on).
+
+    ``active`` (optional, (B,) ints) is the per-lane active-tick count:
+    frames at tick t >= active[lane] are zeroed before integration, so
+    evicted/short streams integrate zero current — exactly what a K=1
+    engine presents to an idle lane — and ``frames_consumed`` reports
+    min(active, K) per lane. The lane still *advances* K ticks (leak and
+    reset run on zero current); a server that retires a lane mid-block
+    discards the ghost ticks by re-seeding the lane from fresh state.
+
+    ``v_out_traj``/``logits_traj`` expose the readout's per-tick values
+    inside the block. On the integer backends the readout accumulator is
+    unclamped int32, so the trajectory is recovered exactly as
+    ``v_init + cumsum(raster @ w_readout)`` — int addition is associative,
+    hence bit-identical to K single ticks (this forces the fc stack to
+    emit rasters internally even when ``emit_rasters=False``)."""
+    _check_stream_backend(program, backend)
+    frames = jnp.asarray(frames)
+    if frames.ndim < 3:
+        raise ValueError(
+            f"stream_megastep takes a (K, B, *in_shape) frame block, got "
+            f"shape {frames.shape}")
+    k, b = int(frames.shape[0]), int(frames.shape[1])
+    if k < 1:
+        raise ValueError("stream_megastep needs K >= 1 frames per block")
+    if active is not None:
+        act = jnp.asarray(active, jnp.int32)
+        live = jnp.arange(k, dtype=jnp.int32)[:, None] < act[None, :]
+        frames = jnp.where(
+            live.reshape(k, b, *([1] * (frames.ndim - 2))), frames,
+            jnp.zeros((), frames.dtype))
+        consumed = jnp.minimum(act, k)
+    else:
+        consumed = jnp.full((b,), k, jnp.int32)
+    if backend == "float":
+        # eager K-loop, NOT lax.scan: the float (QAT) readout matmul can
+        # drift a last ulp when XLA refuses the eager ops under scan, and
+        # the contract here is bit-identity with K stream_step ticks
+        vs, v_traj, spk = list(state.vs), [], []
+        for t in range(k):
+            vs, spikes = _float_step(program, vs, frames[t])
+            v_traj.append(vs[-1])
+            if emit_rasters:
+                spk.append(spikes)
+        v_traj = jnp.stack(v_traj)
+        rasters = ([jnp.stack([s[i] for s in spk])
+                    for i in range(len(spk[0]))] if emit_rasters else None)
+        return (StreamState(vs=tuple(vs), t=state.t + k),
+                MegastepOut(v_out=vs[-1], logits=program.logits(vs[-1]),
+                            v_out_traj=v_traj,
+                            logits_traj=program.logits(v_traj),
+                            frames_consumed=consumed, rasters=rasters))
+    use_pallas = backend in ("pallas", "pallas_sparse", "pallas_events")
+    use_events = backend in ("ref_events", "pallas_events")
+    if backend == "pallas_sparse":
+        use_sparse = True
+    # eager K-loop, not lax.scan: an un-jitted scan retraces per call,
+    # which would put a compile on every serving dispatch; the eager ops
+    # are exactly what `stream_step`/`encode` execute (bit-identical — the
+    # encoder comparison in tests/test_stream.py pins eager == scanned)
+    v_enc, spk_enc = state.vs[0], []
+    for t in range(k):
+        v_enc, s = encoder_step(program, v_enc, frames[t])
+        spk_enc.append(s)
+    spikes_enc = jnp.stack(spk_enc)
+    n_convs = len(program.int_conv_stack)
+    conv_maps, v_convs, conv_skips = _conv_front_end(
+        program, spikes_enc, use_pallas=use_pallas, use_sparse=use_sparse,
+        gate_granularity=gate_granularity, use_events=use_events,
+        block_b=block_b, interpret=interpret,
+        event_crossover=event_crossover,
+        v_init=list(state.vs[1:1 + n_convs]) if n_convs else None)
+    last = conv_maps[-1] if conv_maps else spikes_enc
+    flat = last.reshape(*last.shape[:2], -1) if last.ndim > 3 else last
+    rasters_fc, v_stack, skips = _run_fc_stack(
+        program, flat, use_pallas=use_pallas, use_sparse=use_sparse,
+        gate_granularity=gate_granularity, use_events=use_events,
+        block_b=block_b, interpret=interpret, emit_rasters=True,
+        event_crossover=event_crossover,
+        v_init=list(state.vs[1 + n_convs:]))
+    new_vs = ((v_enc,) + tuple(v_convs)
+              + tuple(jnp.asarray(v) for v in v_stack))
+    # exact per-tick readout trajectory (see docstring): the readout input
+    # raster is the last spiking layer's output, or the stack input when
+    # the stack is readout-only
+    ro_in = (jnp.asarray(rasters_fc[-1]) if len(rasters_fc)
+             else flat).astype(jnp.int32)
+    w_ro = jnp.asarray(program.fc_stack[-1].w).astype(jnp.int32)
+    v_traj = (jnp.asarray(state.vs[-1])[None]
+              + jnp.cumsum(ro_in @ w_ro, axis=0))
+    rasters = None
+    if emit_rasters:
+        rasters = ([spikes_enc] + list(conv_maps)
+                   + [jnp.asarray(r) for r in rasters_fc])
+    v_out = jnp.asarray(v_stack[-1])
+    return (StreamState(vs=new_vs, t=state.t + k),
+            MegastepOut(v_out=v_out, logits=program.logits(v_out),
+                        v_out_traj=v_traj,
+                        logits_traj=program.logits(v_traj),
+                        frames_consumed=consumed, rasters=rasters,
+                        skips=skips,
+                        conv_skips=conv_skips if conv_skips else None))
+
 
 def _bitmacro_layer(inp: np.ndarray, wq: np.ndarray, threshold: int,
                     leak: int, neuron: str):

@@ -14,7 +14,12 @@ throughput (frames/s and words/s), the skipped-work fraction from the
 pooled per-slot event accounting, and the measured-EDP figure it implies.
 
 ``--stop-threshold`` enables the readout-confidence early exit;
-``--quick`` shrinks everything for the CI serving smoke step.
+``--megastep K`` advances every lane K frames per device dispatch,
+``--pages N`` grows the V-slot pool to N pages of ``--slots`` lanes,
+``--double-buffer`` stages the next frame block while one computes, and
+``--poisson-gap G`` draws seeded Poisson arrivals (mean gap G frame
+ticks) for the admission-control path; ``--quick`` shrinks everything
+for the CI serving smoke step.
 """
 from __future__ import annotations
 
@@ -39,17 +44,27 @@ def encoder_exact_frames(program, raster: np.ndarray) -> np.ndarray:
 
 
 def make_requests(program, n_requests: int, n_words: int, timesteps: int,
-                  sparsity: float, seed: int,
-                  stop_threshold=None) -> list:
+                  sparsity: float, seed: int, stop_threshold=None,
+                  poisson_gap=None) -> list:
+    """Seeded synthetic word-stream requests. ``poisson_gap`` (mean
+    inter-arrival gap in frame ticks) stamps each request with a Poisson
+    ``arrival_tick`` — seeded exponential gaps, sorted by construction —
+    so the engine's admission control sees an offered-load process instead
+    of a batch arrival."""
     rng = np.random.default_rng(seed)
     d = program.layers[0].n_in
     reqs = []
+    arrival = 0.0
     for rid in range(n_requests):
         t_total = n_words * timesteps
         raster = (rng.random((t_total, d)) > sparsity).astype(np.int8)
-        reqs.append(SNNRequest(
+        req = SNNRequest(
             rid=rid, frames=encoder_exact_frames(program, raster),
-            stop_threshold=stop_threshold))
+            stop_threshold=stop_threshold)
+        if poisson_gap:
+            arrival += rng.exponential(poisson_gap)
+            req.arrival_tick = int(arrival)
+        reqs.append(req)
     return reqs
 
 
@@ -64,6 +79,15 @@ def main(argv=None):
                     choices=list(pipeline.STREAM_BACKENDS))
     ap.add_argument("--stop-threshold", type=float, default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--megastep", type=int, default=1,
+                    help="frames advanced per device dispatch (K)")
+    ap.add_argument("--pages", type=int, default=1,
+                    help="V-slot pool pages of --slots lanes each")
+    ap.add_argument("--double-buffer", action="store_true",
+                    help="stage the next frame block while this one computes")
+    ap.add_argument("--poisson-gap", type=float, default=None,
+                    help="mean inter-arrival gap in frame ticks (Poisson "
+                         "admission; default: all requests arrive at once)")
     ap.add_argument("--quick", action="store_true",
                     help="reduced sizes (CI serving smoke)")
     args = ap.parse_args(argv)
@@ -77,10 +101,13 @@ def main(argv=None):
                          backend=args.backend,
                          step_kw=({"interpret": True}
                                   if args.backend.startswith("pallas")
-                                  else {}))
+                                  else {}),
+                         pages=args.pages, megastep=args.megastep,
+                         double_buffer=args.double_buffer)
     for req in make_requests(program, args.requests, args.words,
                              cfg.timesteps, args.sparsity, args.seed,
-                             args.stop_threshold):
+                             args.stop_threshold,
+                             poisson_gap=args.poisson_gap):
         eng.submit(req)
     t0 = time.perf_counter()
     done = eng.run_until_drained()
@@ -89,7 +116,14 @@ def main(argv=None):
     rep = eng.aggregate_report()
     print(f"served {len(done)} requests, {frames} frames in {dt:.2f}s "
           f"({frames / dt:.1f} frames/s, "
-          f"{frames / cfg.timesteps / dt:.1f} words/s on CPU)")
+          f"{frames / cfg.timesteps / dt:.1f} words/s on CPU; "
+          f"K={args.megastep}, {args.pages} page(s) x {args.slots} lanes)")
+    lats = [r.latency_ticks for r in done if r.latency_ticks is not None]
+    if lats:
+        print(f"latency (frame ticks, arrival->finish): "
+              f"p50={np.percentile(lats, 50):.0f} "
+              f"p99={np.percentile(lats, 99):.0f} "
+              f"over clock {eng.clock}")
     print(f"offered sparsity {args.sparsity:.2f} -> skipped-row fraction "
           f"{rep.skipped_row_fraction:.3f}, instr={rep.instruction_counts().total}, "
           f"measured EDP {energy.measured_edp(rep.instruction_counts()):.3e} J*s")

@@ -1,5 +1,6 @@
 from repro.serve.engine import EngineUndrained, Request, ServeEngine
-from repro.serve.snn_engine import SNNRequest, SNNServeEngine
+from repro.serve.snn_engine import (ReportUnavailable, SNNRequest,
+                                    SNNServeEngine)
 
-__all__ = ["EngineUndrained", "Request", "ServeEngine", "SNNRequest",
-           "SNNServeEngine"]
+__all__ = ["EngineUndrained", "ReportUnavailable", "Request", "ServeEngine",
+           "SNNRequest", "SNNServeEngine"]

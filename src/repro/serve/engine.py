@@ -92,9 +92,27 @@ def lane_scatter(lane_tree, full_tree, axes, i: int):
 
 class SlotEngine:
     """Shared continuous-batching mechanics: the drain loop and its
-    undrained contract. Subclasses provide ``step() -> int`` (active slots
-    after the tick), ``queue``, ``slots`` (entries with a ``req`` field),
-    and ``finished``."""
+    undrained contract, plus the paged-slot-pool addressing subclasses
+    with more lanes than one dispatch batch share. Subclasses provide
+    ``step() -> int`` (active slots after the tick), ``queue``, ``slots``
+    (entries with a ``req`` field), ``finished``, and ``B`` (lanes per
+    page); a paged engine additionally sets ``pages`` (slot i lives on
+    page i // B, lane i % B) — the default single-page engine keeps 1."""
+
+    pages: int = 1
+
+    def page_lanes(self, page: int) -> range:
+        """Slot indices of one page (B contiguous lanes per page)."""
+        return range(page * self.B, (page + 1) * self.B)
+
+    def active_by_page(self) -> dict:
+        """Occupied slot indices grouped by page — the dispatch work-list
+        (pages with no active lane are not dispatched at all)."""
+        out: dict = {}
+        for i, s in enumerate(self.slots):
+            if s.req is not None:
+                out.setdefault(i // self.B, []).append(i)
+        return out
 
     def run_until_drained(self, max_ticks: int = 10_000) -> list:
         """Tick until queue and slots are empty. Raises `EngineUndrained`

@@ -251,3 +251,38 @@ def test_engine_device_ledger_closes_when_fully_occupied():
     eng2 = SNNServeEngine(program, batch_slots=1, backend="int_ref")
     with pytest.raises(ValueError, match="device ledger"):
         eng2.device_event_stats()
+
+
+@pytest.mark.parametrize("megastep,words", [(1, [3, 1]), (4, [4, 8])])
+def test_engine_device_ledger_closes_partially_occupied(megastep, words):
+    """Serving closure at *any* occupancy: unequal-length requests on a
+    pool with spare lanes leave lanes idle for most ticks — the idle-lane
+    fix scatters fresh zero state into vacated lanes at evict, so idle
+    lanes contribute zero events and the pooled device ledger's
+    row_events still equal the merged per-slot raster reports exactly.
+    (Ledger *frames* count every dispatched lane by definition, so only
+    the event columns are compared.) Before the fix, a vacated lane
+    replayed its stale V_MEM and leaked phantom events into the ledger.
+    The K=4 budgets are K-aligned: a request finishing *mid-block* fires
+    ghost events on the block's remaining zero-input ticks (subtract-
+    reset can leave residual V >= threshold) until the post-dispatch
+    evict resets the lane — exact closure is guaranteed at block
+    boundaries (DESIGN.md documents the caveat)."""
+    cfg, program, _ = _program(seed=9)
+    eng = SNNServeEngine(program, batch_slots=3, backend="pallas_events",
+                         step_kw={"interpret": True, "block_b": 3},
+                         megastep=megastep)
+    rng = np.random.default_rng(11)
+    for rid, n_words in enumerate(words):       # 2 requests on 3 lanes
+        x = rng.standard_normal((1, n_words, 37)).astype(np.float32)
+        frames = np.asarray(pipeline.present_words(
+            jnp.asarray(x), cfg.timesteps))[:, 0]
+        eng.submit(SNNRequest(rid=rid, frames=frames))
+    done = eng.run_until_drained()
+    assert len(done) == 2
+    ledger = eng.device_event_stats()
+    merged = merge_reports([r.report for r in done])
+    assert ledger.frames > merged.frames        # idle lanes tick too
+    for a, b in zip(ledger.row_events, merged.row_events):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert ledger.dense_fallbacks == (0,) * len(program.macro_stack)
