@@ -37,6 +37,16 @@ the offending call, before any kernel is built:
                       | estimate scales its spike/raster blocks with K
                       | (``frames=K``), so a K that overflows the budget
                       | is rejected here, before the engine's first tick
+  mesh_axes           | a mesh-sharded dispatch names "data"/"model"
+                      | extents; float/bitmacro have no mesh execution
+  mesh_split          | per fused call under model-parallel row tiling:
+                      | the padded fan-in divides evenly into per-shard
+                      | row tiles (chain alignment is preserved because
+                      | every shard slices rows of the same padded
+                      | fan-in and the integer psum reassembles the full
+                      | width), and the per-shard residency — weight
+                      | tiles shrink 1/n_model, spike/V blocks stay full
+                      | width — fits the VMEM budget
 
 Each on-macro conv layer dispatches its own fused call over its im2col
 patch raster (T stays, batch becomes B*P, per-grid-cell residency is
@@ -103,6 +113,16 @@ class ContractReport:
 
 def _pad_lane(n: int) -> int:
     return max(LANE, -(-n // LANE) * LANE)
+
+
+def _mesh_extents(mesh) -> dict:
+    """Mesh axis extents from a `jax.sharding.Mesh` or a plain
+    ``{axis_name: extent}`` dict (the device-free form `tools/
+    check_invariants.py --mesh` validates geometries with)."""
+    if isinstance(mesh, dict):
+        return {str(k): int(v) for k, v in mesh.items()}
+    return {str(n): int(s)
+            for n, s in zip(mesh.axis_names, mesh.devices.shape)}
 
 
 def _flat_width(spec) -> int:
@@ -183,8 +203,8 @@ def check_kernel_contracts(program, backend: str = "pallas", *,
                            use_sparse: bool = False,
                            emit_rasters: bool = True,
                            streaming: bool = False,
-                           vmem_budget_bytes: int = VMEM_BUDGET_BYTES
-                           ) -> ContractReport:
+                           vmem_budget_bytes: int = VMEM_BUDGET_BYTES,
+                           mesh=None) -> ContractReport:
     """Verify every kernel contract of dispatching ``program`` on
     ``backend`` with these parameters; raise `ContractError` naming the
     violated contract and call otherwise.
@@ -194,6 +214,13 @@ def check_kernel_contracts(program, backend: str = "pallas", *,
     backends (float / int_ref / ref_events) have no kernel contracts
     beyond chain alignment and return an empty-call report; ``bitmacro``
     additionally demands wrap arithmetic.
+
+    ``mesh`` — a `jax.sharding.Mesh` or a plain ``{axis: extent}`` dict
+    (no devices needed) — additionally verifies the mesh-execution
+    contracts: float/bitmacro reject a mesh, the model-parallel row split
+    of every fused call keeps chain alignment (per-shard row tiles of the
+    same padded fan-in, reassembled by the integer psum), and the
+    per-shard VMEM residency fits the budget.
     """
     if frames is None:
         frames = int(program.timesteps)
@@ -220,6 +247,24 @@ def check_kernel_contracts(program, backend: str = "pallas", *,
         raise ContractError(
             "bitmacro executes silicon wrap arithmetic; compile the "
             "program with clamp_mode='wrap'", where="backend")
+    n_data = n_model = 1
+    if mesh is not None:
+        if backend in ("float", "bitmacro"):
+            raise ContractError(
+                f"mesh_axes: backend {backend!r} has no mesh execution "
+                "(float reductions are not order-exact; bitmacro state "
+                "lives in host BitMacro objects)", where="mesh")
+        sizes = _mesh_extents(mesh)
+        n_data = sizes.get("data", 1)
+        n_model = sizes.get("model", 1)
+        if n_data < 1 or n_model < 1:
+            raise ContractError(
+                f"mesh_axes: axis extents must be >= 1, got data={n_data} "
+                f"model={n_model}", where="mesh")
+        checks.append(ContractCheck(
+            "mesh_axes", "mesh",
+            f"data={n_data} (lanes/banks partition) x model={n_model} "
+            f"(row-tiled fan-in partition); axes {sorted(sizes)}"))
     _check_chain(program, checks)
 
     if gate_granularity not in GATE_GRANULARITIES:
@@ -290,6 +335,35 @@ def check_kernel_contracts(program, backend: str = "pallas", *,
         checks.append(ContractCheck(
             "vmem_budget", name,
             f"{vmem} bytes resident <= {vmem_budget_bytes}"))
+        if mesh is not None:
+            from repro.kernels.fused_snn_net.ops import mesh_padded_widths
+            mw = mesh_padded_widths(widths, n_model)
+            rows = tuple(w // n_model for w in mw[:-1])
+            if any(w % n_model for w in mw):
+                raise ContractError(       # unreachable by construction
+                    f"mesh_split: padded widths {mw} do not divide "
+                    f"n_model={n_model}", where=name)
+            # per-shard residency: weight tiles shrink 1/n_model (each
+            # shard holds its row tile), spike/V blocks stay full width
+            # (cur is replicated, the partial V is full width pre-psum)
+            ins_p = [_pad_lane(widths[0])] + [_pad_lane(w)
+                                              for w in widths[1:-1]]
+            w_bytes = sum(i * _pad_lane(o)
+                          for i, o in zip(ins_p, widths[1:]))
+            vmem_shard = vmem - w_bytes + -(-w_bytes // n_model)
+            if vmem_shard > vmem_budget_bytes:
+                raise ContractError(
+                    f"mesh_split: one model shard holds {vmem_shard} "
+                    f"bytes resident (weights/{n_model} + full-width "
+                    f"spike/V blocks) > budget {vmem_budget_bytes}",
+                    where=name)
+            checks.append(ContractCheck(
+                "mesh_split", name,
+                f"fan-in rows {mw[:-1]} split {n_model}-way into "
+                f"{rows}-row shard tiles (chain alignment preserved: "
+                f"every shard slices the same padded fan-in; psum "
+                f"reassembles the full width); per-shard residency "
+                f"{vmem_shard} bytes <= {vmem_budget_bytes}"))
         calls.append(KernelCall(
             name=name, layer_names=layer_names,
             logical_widths=tuple(int(w) for w in widths),

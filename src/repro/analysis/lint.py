@@ -16,6 +16,12 @@ rewrites their asserts and they may exercise raw randomness on purpose).
           ``RandomState()`` constructed without a seed. Reproducibility
           (bit-identical rasters, deterministic benchmarks, the CI gate)
           requires every stream of randomness to be explicitly keyed.
+  ANA004  the user-facing API surface (`core/pipeline.py`, `serve/`,
+          `dist/`) documents itself: every public function or public-class
+          method there needs a docstring, and when it takes parameters the
+          docstring must mention at least one by name (a docstring that
+          names no parameter documents the *idea* but not the *call* —
+          the repo's entry points are exactly where call contracts live).
 
 Suppress a finding with ``# noqa: ANA00x`` on the offending line.
 
@@ -25,6 +31,7 @@ in environments without jax installed.
 from __future__ import annotations
 
 import ast
+import re
 from dataclasses import dataclass
 from pathlib import Path
 from typing import Iterable, Optional
@@ -36,7 +43,14 @@ RULES = {
               "quant.clamp_v_np / quant.spike_compare",
     "ANA003": "unseeded randomness in library code; pass an explicit "
               "seed/key",
+    "ANA004": "public API function without a parameter-documenting "
+              "docstring (core/pipeline.py, serve/, dist/)",
 }
+
+#: files whose public surface ANA004 holds to documented-call standard:
+#: exact path suffixes and directory fragments under src/repro
+_DOC_SCOPE_SUFFIXES = ("core/pipeline.py",)
+_DOC_SCOPE_DIRS = ("/serve/", "/dist/")
 
 #: the one module allowed to implement clamping
 _CLAMP_HOME = ("core", "quant.py")
@@ -90,9 +104,13 @@ def _mentions_v_const(node: ast.AST) -> bool:
 
 
 class _Visitor(ast.NodeVisitor):
-    def __init__(self, path: str, clamp_home: bool) -> None:
+    def __init__(self, path: str, clamp_home: bool,
+                 doc_scope: bool = False) -> None:
         self.path = path
         self.clamp_home = clamp_home
+        self.doc_scope = doc_scope
+        self._class_public: list[bool] = []   # enclosing-class publicness
+        self._fn_depth = 0
         self.found: list[LintViolation] = []
 
     def _add(self, node: ast.AST, rule: str, message: str) -> None:
@@ -104,6 +122,47 @@ class _Visitor(ast.NodeVisitor):
     def visit_Assert(self, node: ast.Assert) -> None:
         self._add(node, "ANA001", RULES["ANA001"])
         self.generic_visit(node)
+
+    # ANA004 ---------------------------------------------------------------
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self._class_public.append(not node.name.startswith("_"))
+        self.generic_visit(node)
+        self._class_public.pop()
+
+    def _check_doc(self, node) -> None:
+        """ANA004: public functions of the API surface carry docstrings
+        that name at least one of their parameters."""
+        public = (not node.name.startswith("_")
+                  and self._fn_depth == 0
+                  and all(self._class_public))
+        if not (self.doc_scope and public):
+            return
+        doc = ast.get_docstring(node)
+        if not doc:
+            self._add(node, "ANA004",
+                      f"'{node.name}' has no docstring; " + RULES["ANA004"])
+            return
+        a = node.args
+        params = [p.arg for p in (a.posonlyargs + a.args + a.kwonlyargs)]
+        params += [p.arg for p in (a.vararg, a.kwarg) if p is not None]
+        params = [p for p in params if p not in ("self", "cls")]
+        if params and not any(
+                re.search(rf"\b{re.escape(p)}\b", doc) for p in params):
+            self._add(node, "ANA004",
+                      f"'{node.name}' docstring names none of its "
+                      f"parameters {params}; " + RULES["ANA004"])
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._check_doc(node)
+        self._fn_depth += 1
+        self.generic_visit(node)
+        self._fn_depth -= 1
+
+    def visit_AsyncFunctionDef(self, node: ast.AsyncFunctionDef) -> None:
+        self._check_doc(node)
+        self._fn_depth += 1
+        self.generic_visit(node)
+        self._fn_depth -= 1
 
     # ANA002 ---------------------------------------------------------------
     def visit_BinOp(self, node: ast.BinOp) -> None:
@@ -149,10 +208,14 @@ def _noqa_lines(source: str) -> dict:
 
 
 def lint_source(source: str, path: str = "<string>") -> list:
-    """Lint one module's source; returns the surviving violations."""
-    clamp_home = path.replace("\\", "/").endswith("/".join(_CLAMP_HOME))
+    """Lint one module's ``source``; returns the surviving violations
+    (``path`` scopes the path-dependent rules and labels findings)."""
+    norm = path.replace("\\", "/")
+    clamp_home = norm.endswith("/".join(_CLAMP_HOME))
+    doc_scope = (norm.endswith(_DOC_SCOPE_SUFFIXES)
+                 or any(d in norm for d in _DOC_SCOPE_DIRS))
     tree = ast.parse(source, filename=path)
-    visitor = _Visitor(path, clamp_home)
+    visitor = _Visitor(path, clamp_home, doc_scope)
     visitor.visit(tree)
     noqa = _noqa_lines(source)
     return [v for v in visitor.found

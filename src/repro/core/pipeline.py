@@ -78,6 +78,8 @@ class LayerSpec:
 
     @property
     def tiling(self) -> mapping.FCTiling:
+        """This layer's macro-grid tiling (row/col tile counts for the
+        n_in x n_out weight block — `mapping.fc_tiling`)."""
         return mapping.fc_tiling(self.n_in, self.n_out)
 
 
@@ -117,7 +119,8 @@ class SNNProgram:
         return tuple(ly for ly in self.layers if ly.kind != "readout")
 
     def logits(self, v_out: jax.Array) -> jax.Array:
-        """Readout V -> float logits (undo the last layer's weight scale)."""
+        """Readout V ``v_out`` (..., n_out) -> float logits of the same
+        shape (undo the last layer's weight scale)."""
         if self.domain == "int":
             return v_out.astype(jnp.float32) * self.layers[-1].scale
         return v_out
@@ -136,8 +139,10 @@ class SNNProgram:
     def megastep(self, state: "StreamState", frames: jax.Array,
                  backend: str = "float", **kw
                  ) -> "tuple[StreamState, MegastepOut]":
-        """Advance every stream K ticks on a (K, B, ...) frame block in
-        one device dispatch."""
+        """Advance every stream of ``state`` K ticks on a (K, B, ...)
+        ``frames`` block in one ``backend`` dispatch; ``kw`` passes
+        through to `stream_megastep` (active / emit_rasters / mesh /
+        kernel knobs)."""
         return stream_megastep(self, state, frames, backend, **kw)
 
 
@@ -160,6 +165,8 @@ class NetResult:
 # ---------------------------------------------------------------------------
 
 def conv2d(x: jax.Array, w: jax.Array, stride: int) -> jax.Array:
+    """SAME-padded 2-D convolution of NHWC ``x`` with HWIO kernel ``w``
+    at ``stride`` — the one conv primitive every domain lowers through."""
     return jax.lax.conv_general_dilated(
         x, w, (stride, stride), "SAME",
         dimension_numbers=("NHWC", "HWIO", "NHWC"))
@@ -275,8 +282,9 @@ def compile_network(cfg: SNNModelConfig, params: dict, *, domain: str = "float",
 
 def rate_coded_program(spiking_cfg, state_shape: tuple) -> SNNProgram:
     """Single-population program (used by models/spiking_ffn): one encoder
-    layer integrating a constant current, thresholds/leaks taken verbatim
-    (no softplus re-parameterization)."""
+    layer of per-example V shape ``state_shape`` integrating a constant
+    current, thresholds/leaks taken verbatim from ``spiking_cfg`` (no
+    softplus re-parameterization)."""
     layer = LayerSpec(kind="encoder", n_in=state_shape[-1],
                       n_out=state_shape[-1], threshold=spiking_cfg.threshold,
                       leak=spiking_cfg.leak, state_shape=state_shape)
@@ -290,14 +298,16 @@ def rate_coded_program(spiking_cfg, state_shape: tuple) -> SNNProgram:
 # ---------------------------------------------------------------------------
 
 def present_words(x_words: jax.Array, timesteps: int) -> jax.Array:
-    """(B, n_words, d) -> (n_words * T, B, d): each word held T steps
-    (membrane state persists across words — the sequential-memory claim)."""
+    """``x_words`` (B, n_words, d) -> (n_words * timesteps, B, d): each
+    word held ``timesteps`` steps (membrane state persists across words —
+    the sequential-memory claim)."""
     xs = jnp.repeat(x_words, timesteps, axis=1)
     return jnp.moveaxis(xs, 1, 0)
 
 
 def present_static(x: jax.Array, timesteps: int) -> jax.Array:
-    """(B, ...) -> (T, B, ...): direct encoding, same frame every step."""
+    """``x`` (B, ...) -> (timesteps, B, ...): direct encoding, the same
+    frame presented every step."""
     return jnp.broadcast_to(x[None], (timesteps, *x.shape))
 
 
@@ -309,6 +319,8 @@ BACKENDS: dict[str, Callable] = {}
 
 
 def register_backend(name: str) -> Callable:
+    """Decorator registering an execution backend under ``name`` in
+    `BACKENDS` (the `run_network` dispatch table)."""
     def deco(fn: Callable) -> Callable:
         BACKENDS[name] = fn
         return fn
@@ -322,12 +334,27 @@ def run_network(program: SNNProgram, xs: jax.Array, backend: str = "float",
     The float backend consumes xs directly. Integer backends share one float
     encoder pass (`encode`) — the off-macro input layer — then execute the
     on-macro fc stack in their own substrate.
+
+    ``mesh`` (int backends only): a `jax.sharding.Mesh` with "data" and/or
+    "model" axes — lanes partition over data, row-tiled fan-in over model
+    with an exact integer-psum AccV2V reduction. Results are bit-identical
+    to the single-device path (see DESIGN.md "Mesh execution"). The float
+    backend's f32 reductions are not order-exact and the bitmacro oracle
+    is host-side state; both reject a mesh with ValueError.
     """
     if backend not in BACKENDS:
         raise KeyError(f"unknown backend {backend!r}; have {sorted(BACKENDS)}")
     if backend != "float" and program.domain != "int":
         raise ValueError(f"backend {backend!r} needs an int-domain program "
                          "(compile_network(..., domain='int'))")
+    if backend in ("float", "bitmacro"):
+        if kw.pop("mesh", None) is not None:
+            raise ValueError(
+                f"backend {backend!r} has no mesh execution: float "
+                "reductions are not bitwise order-exact across shards and "
+                "bitmacro state lives in host BitMacro objects; use an int "
+                "device backend (int_ref/pallas/pallas_sparse/ref_events/"
+                "pallas_events)")
     return BACKENDS[backend](program, xs, **kw)
 
 
@@ -469,7 +496,8 @@ def encoder_step(program: SNNProgram, v_enc: jax.Array, frame: jax.Array
 
 
 def encode(program: SNNProgram, xs: jax.Array) -> tuple[jax.Array, jax.Array]:
-    """Run the off-macro encoder layer alone: (T_total, B, ...) currents ->
+    """Run ``program``'s off-macro encoder layer alone on ``xs``:
+    (T_total, B, ...) currents ->
     ((T_total, B, ...) int8 spikes, final encoder V). Bitwise identical to
     the float backend's encoder layer (same ops on the same values). For
     conv stacks the encoder is the first conv (float weights, spike maps
@@ -507,12 +535,63 @@ def _stack_kernel_args(program: SNNProgram) -> dict:
         neuron=program.neuron, clamp_mode=program.clamp_mode)
 
 
+def _host_events_sharded(spikes, ws, *, mesh, v_init=None, **kw):
+    """`ref_events` under a mesh: the host spike-list executor has no
+    device placement, so lane (data-axis) partitioning is simulated —
+    the batch splits into contiguous per-shard slices executed
+    sequentially, rasters/V reassemble by concatenation, and the
+    per-slice `EventStats` merge exactly (row events and frame counts
+    are sums; lanes never interact). The model axis is a no-op for a
+    host oracle — row-tile partials are a device concept — so this path
+    validates lane partitioning only."""
+    from repro.kernels.fused_snn_net.events import (EventStats,
+                                                    fused_snn_net_events)
+    from repro.kernels.fused_snn_net.ops import mesh_axis_extents
+    n_data, _ = mesh_axis_extents(mesh)
+    B = int(spikes.shape[1])
+    bounds = [B * k // n_data for k in range(n_data + 1)]
+    rs, vs, sts = [], [], []
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        if hi == lo:
+            continue
+        vi = ([np.asarray(v)[lo:hi] for v in v_init]
+              if v_init is not None else None)
+        r, v, st = fused_snn_net_events(spikes[:, lo:hi], ws, v_init=vi,
+                                        **kw)
+        rs.append(r)
+        vs.append(v)
+        sts.append(st)
+    rasters = [jnp.concatenate([np.asarray(r[i]) for r in rs], axis=1)
+               for i in range(len(rs[0]))]
+    v_finals = [jnp.concatenate([np.asarray(v[i]) for v in vs], axis=0)
+                for i in range(len(ws))]
+    stats = EventStats(
+        row_events=tuple(
+            sum(np.asarray(st.row_events[i], np.int64) for st in sts)
+            for i in range(len(ws))),
+        frames=sum(st.frames for st in sts),
+        dense_fallbacks=())
+    return rasters, v_finals, stats
+
+
 def _run_fc_stack(program: SNNProgram, spikes: jax.Array, *, use_pallas: bool,
                   use_sparse: bool, block_b: int, interpret: bool,
                   emit_rasters: bool, gate_granularity: int = 1,
                   use_events: bool = False, v_init: Optional[list] = None,
-                  event_crossover: float = 1.0):
+                  event_crossover: float = 1.0, mesh=None):
     kw = _stack_kernel_args(program)
+    if mesh is not None:
+        if use_events and not use_pallas:    # host spike-list executor
+            return _host_events_sharded(
+                spikes, kw.pop("ws"), mesh=mesh,
+                emit_rasters=emit_rasters, v_init=v_init, **kw)
+        from repro.kernels.fused_snn_net.ops import fused_snn_net_mesh
+        return fused_snn_net_mesh(
+            spikes, kw.pop("ws"), mesh=mesh, use_pallas=use_pallas,
+            use_sparse=use_sparse, gate_granularity=gate_granularity,
+            block_b=block_b, interpret=interpret,
+            emit_rasters=emit_rasters, v_init=v_init,
+            use_events=use_events, event_crossover=event_crossover, **kw)
     if use_events and use_pallas:        # device event-list kernel
         from repro.kernels.fused_snn_net.ops import fused_snn_net_device_events
         return fused_snn_net_device_events(
@@ -537,10 +616,13 @@ def run_stack_from_raster(program: SNNProgram, spikes_enc: jax.Array, *,
                           block_b: int = 8, interpret: bool = False,
                           emit_rasters: bool = True,
                           gate_granularity: int = 1):
-    """Execute only the on-macro fc stack on a supplied encoder spike raster
-    (T_total, B, d) int8 — the public raster-in entry point that
-    raster-driven benchmarks (synthetic sparsity sweeps) share with the
-    int_ref/pallas backends. Returns (rasters, v_stack, skips) with
+    """Execute only ``program``'s on-macro fc stack on a supplied encoder
+    spike raster ``spikes_enc`` (T_total, B, d) int8 — the public
+    raster-in entry point that raster-driven benchmarks (synthetic
+    sparsity sweeps) share with the int_ref/pallas backends
+    (``use_pallas`` / ``use_sparse`` / ``block_b`` / ``interpret`` /
+    ``gate_granularity`` mirror `run_network`'s backend kwargs).
+    Returns (rasters, v_stack, skips) with
     ``rasters[0]`` the input raster itself, aligned with
     `count_network_instructions` / `sparsity_report` expectations. Conv
     programs carry an on-macro conv front-end and route through
@@ -561,7 +643,7 @@ def _conv_front_end(program: SNNProgram, spikes_enc: jax.Array, *,
                     use_pallas: bool, use_sparse: bool, block_b: int,
                     interpret: bool, gate_granularity: int = 1,
                     use_events: bool = False, v_init: Optional[list] = None,
-                    event_crossover: float = 1.0):
+                    event_crossover: float = 1.0, mesh=None):
     """Run the on-macro int conv layers on encoder spike maps. Each conv
     layer lowers onto the macro grid via im2col (mapping.py): its
     (T, B, H, W, C) input maps become a (T, B*P, k*k*C) patch raster —
@@ -591,7 +673,25 @@ def _conv_front_end(program: SNNProgram, spikes_enc: jax.Array, *,
             # conv V state is a (B, H_out, W_out, C) map; the macro executes
             # one frame per (example, output position) — flatten to match
             vi = [jnp.asarray(v_init[ci]).reshape(-1, spec.n_out)]
-        if use_events and use_pallas:    # device event-list kernel
+        if mesh is not None and use_events and not use_pallas:
+            # host spike-list executor under a mesh: the patch raster's
+            # frame axis is (example, output position) — contiguous
+            # per-shard slices are whole frames, so the lane-partition
+            # argument applies unchanged
+            rasters, v, skips = _host_events_sharded(
+                patches.astype(jnp.int8),
+                [np.asarray(mapping.pack_conv_weights(spec.w))],
+                mesh=mesh, v_init=vi, **kw)
+        elif mesh is not None:
+            from repro.kernels.fused_snn_net.ops import fused_snn_net_mesh
+            rasters, v, skips = fused_snn_net_mesh(
+                patches.astype(jnp.int8),
+                [jnp.asarray(mapping.pack_conv_weights(spec.w))],
+                mesh=mesh, use_pallas=use_pallas, use_sparse=use_sparse,
+                gate_granularity=gate_granularity, block_b=block_b,
+                interpret=interpret, use_events=use_events,
+                event_crossover=event_crossover, v_init=vi, **kw)
+        elif use_events and use_pallas:  # device event-list kernel
             rasters, v, skips = fused_snn_net_device_events(
                 patches.astype(jnp.int8),
                 [jnp.asarray(mapping.pack_conv_weights(spec.w))],
@@ -621,24 +721,27 @@ def _run_macro_stack(program: SNNProgram, xs: jax.Array, *, use_pallas: bool,
                      use_sparse: bool, block_b: int = 8,
                      interpret: bool = False, emit_rasters: bool = True,
                      gate_granularity: int = 1, use_events: bool = False,
-                     event_crossover: float = 1.0
+                     event_crossover: float = 1.0, mesh=None
                      ) -> NetResult:
     """Shared int_ref/pallas/ref_events/pallas_events executor: float
     encoder pass, then the on-macro conv front-end (when present), then the
-    fused fc stack."""
+    fused fc stack. With ``mesh``, the conv and fc dispatches execute under
+    shard_map (`kernels.fused_snn_net.ops.fused_snn_net_mesh`); the float
+    encoder stays a single global pass (off-macro, elementwise per lane —
+    there is nothing to reduce across shards)."""
     spikes_enc, v_enc = encode(program, xs)
     conv_maps, v_convs, conv_skips = _conv_front_end(
         program, spikes_enc, use_pallas=use_pallas, use_sparse=use_sparse,
         gate_granularity=gate_granularity, use_events=use_events,
         block_b=block_b, interpret=interpret,
-        event_crossover=event_crossover)
+        event_crossover=event_crossover, mesh=mesh)
     last = conv_maps[-1] if conv_maps else spikes_enc
     flat = last.reshape(*last.shape[:2], -1) if last.ndim > 3 else last
     rasters_fc, v_stack, skips = _run_fc_stack(
         program, flat, use_pallas=use_pallas, use_sparse=use_sparse,
         gate_granularity=gate_granularity, use_events=use_events,
         block_b=block_b, interpret=interpret, emit_rasters=emit_rasters,
-        event_crossover=event_crossover)
+        event_crossover=event_crossover, mesh=mesh)
     # rasters[i] = the input raster of macro-stack layer i: spike maps for
     # the conv part (the last conv's map doubles, flattened, as fc input)
     full = ([spikes_enc] + conv_maps + list(rasters_fc)
@@ -712,16 +815,18 @@ def _attach_event_stats(res: NetResult, conv_stats: list, fc_stats
 
 @register_backend("int_ref")
 def run_int_ref(program: SNNProgram, xs: jax.Array, *,
-                use_sparse: bool = False) -> NetResult:
+                use_sparse: bool = False, mesh=None) -> NetResult:
     """Word-level ISA semantics: the pure-jnp network reference (a scan of
     isa.layer_timestep_int over the fc stack, preceded by the im2col conv
     front-end — `_conv_front_end` -> fused_snn_net(readout=False), whose
     patch-raster execution is tested equal to isa.conv_layer_timestep_int)
     that is also the pallas kernel's non-TPU fallback — one implementation
     of the contract, two entry points. ``use_sparse`` runs the lax.cond
-    event-gated variant (bit-identical)."""
+    event-gated variant (bit-identical). ``mesh`` executes the macro stack
+    under shard_map, bit-identical to the single-device run (`run_network`
+    docs)."""
     return _run_macro_stack(program, xs, use_pallas=False,
-                            use_sparse=use_sparse)
+                            use_sparse=use_sparse, mesh=mesh)
 
 
 # ---------------------------------------------------------------------------
@@ -730,24 +835,33 @@ def run_int_ref(program: SNNProgram, xs: jax.Array, *,
 
 def _run_pallas(program: SNNProgram, xs: jax.Array, *, block_b: int,
                 interpret: bool, emit_rasters: bool, use_sparse: bool,
-                gate_granularity: int = 1) -> NetResult:
+                gate_granularity: int = 1, mesh=None) -> NetResult:
     return _run_macro_stack(program, xs, use_pallas=True,
                             use_sparse=use_sparse, block_b=block_b,
                             gate_granularity=gate_granularity,
-                            interpret=interpret, emit_rasters=emit_rasters)
+                            interpret=interpret, emit_rasters=emit_rasters,
+                            mesh=mesh)
 
 
 @register_backend("pallas")
 def run_pallas(program: SNNProgram, xs: jax.Array, *, block_b: int = 8,
-               interpret: bool = False, emit_rasters: bool = True) -> NetResult:
+               interpret: bool = False, emit_rasters: bool = True,
+               mesh=None) -> NetResult:
+    """The fused multi-layer Pallas kernel (dense): all V tiles stay
+    VMEM-resident across the timestep loop. ``block_b`` is the batch tile
+    per grid step, ``interpret`` runs the kernel in interpret mode (CPU
+    CI), ``mesh`` executes under shard_map — per-shard kernels on the
+    data axis, the row-partial psum body on the model axis — bit-identical
+    either way."""
     return _run_pallas(program, xs, block_b=block_b, interpret=interpret,
-                       emit_rasters=emit_rasters, use_sparse=False)
+                       emit_rasters=emit_rasters, use_sparse=False,
+                       mesh=mesh)
 
 
 @register_backend("pallas_sparse")
 def run_pallas_sparse(program: SNNProgram, xs: jax.Array, *, block_b: int = 8,
                       interpret: bool = False, emit_rasters: bool = True,
-                      gate_granularity: int = 1) -> NetResult:
+                      gate_granularity: int = 1, mesh=None) -> NetResult:
     """Event-gated fused kernel: per (timestep, layer, batch-tile) the MXU
     matmul is predicated on tile occupancy (`@pl.when`), realizing the
     paper's event-driven AccW2V; the neuron update is unconditional, so
@@ -761,12 +875,14 @@ def run_pallas_sparse(program: SNNProgram, xs: jax.Array, *, block_b: int = 8,
     ``skipped_block_fraction``)."""
     return _run_pallas(program, xs, block_b=block_b, interpret=interpret,
                        emit_rasters=emit_rasters, use_sparse=True,
-                       gate_granularity=gate_granularity)
+                       gate_granularity=gate_granularity, mesh=mesh)
 
 
 @register_backend("ref_events")
-def run_ref_events(program: SNNProgram, xs: jax.Array) -> NetResult:
-    """Spike-list compaction reference (`kernels/fused_snn_net/events`):
+def run_ref_events(program: SNNProgram, xs: jax.Array, *,
+                   mesh=None) -> NetResult:
+    """Spike-list compaction reference (`kernels/fused_snn_net/events`)
+    executing ``program`` on ``xs`` (T_total, B, ...) currents:
     every (timestep, example) frame is compacted to (indices, count) and
     AccW2V becomes a gather-matvec over active rows only — work exactly
     proportional to events, the honest upper bound on skippable work (iid
@@ -774,15 +890,18 @@ def run_ref_events(program: SNNProgram, xs: jax.Array) -> NetResult:
     word-level contract for per-row skip accounting. Bit-identical to all
     other backends; aux carries ``row_events`` (per-layer per-input-row
     event counts), ``row_skip_counts`` (silent (frame, row) pairs), and
-    ``skipped_row_fraction``."""
+    ``skipped_row_fraction``. ``mesh`` simulates lane partitioning on the
+    host (contiguous per-data-shard slices run sequentially; counters
+    merge by summation — the model axis is a documented no-op for this
+    host executor)."""
     return _run_macro_stack(program, xs, use_pallas=False, use_sparse=False,
-                            use_events=True)
+                            use_events=True, mesh=mesh)
 
 
 @register_backend("pallas_events")
 def run_pallas_events(program: SNNProgram, xs: jax.Array, *, block_b: int = 8,
                       interpret: bool = False, emit_rasters: bool = True,
-                      event_crossover: float = 1.0) -> NetResult:
+                      event_crossover: float = 1.0, mesh=None) -> NetResult:
     """Device-side event-list execution (kernels/fused_snn_net kernel.py,
     ``events=True``): every (timestep, layer, example) frame is compacted
     *in VMEM* (cumsum position map = the fixed-capacity active-row index
@@ -800,7 +919,7 @@ def run_pallas_events(program: SNNProgram, xs: jax.Array, *, block_b: int = 8,
     return _run_macro_stack(program, xs, use_pallas=True, use_sparse=False,
                             use_events=True, block_b=block_b,
                             interpret=interpret, emit_rasters=emit_rasters,
-                            event_crossover=event_crossover)
+                            event_crossover=event_crossover, mesh=mesh)
 
 
 # ---------------------------------------------------------------------------
@@ -879,7 +998,7 @@ def stream_step(program: SNNProgram, state: StreamState, frame: jax.Array,
                 backend: str = "float", *, emit_rasters: bool = True,
                 use_sparse: bool = False, block_b: int = 8,
                 interpret: bool = False, gate_granularity: int = 1,
-                event_crossover: float = 1.0
+                event_crossover: float = 1.0, mesh=None
                 ) -> tuple[StreamState, StreamOut]:
     """Advance every stream one tick: (state, (B, ...) input currents) ->
     (new state, StreamOut). Batch lanes never interact — every op is
@@ -891,8 +1010,17 @@ def stream_step(program: SNNProgram, state: StreamState, frame: jax.Array,
     ``gate_granularity`` refines the pallas_sparse gate. The integer
     backends reuse the fused kernels' one-timestep entry (``v_init``), so
     per-layer V tiles stay VMEM-resident within the tick and only cross
-    the call boundary between ticks."""
+    the call boundary between ticks.
+
+    ``mesh`` (a `jax.sharding.Mesh` with "data"/"model" axes) executes the
+    macro-stack dispatches under shard_map, bit-identical to the
+    single-device tick (see `run_network`); the float backend rejects a
+    mesh (ValueError) because its reductions are not order-exact."""
     _check_stream_backend(program, backend)
+    if backend == "float" and mesh is not None:
+        raise ValueError(
+            "backend 'float' has no mesh execution: float reductions are "
+            "not order-exact, so a sharded run could not stay bit-identical")
     if backend == "float":
         vs, spikes = _float_step(program, list(state.vs), frame)
         v_out = vs[-1]
@@ -911,7 +1039,8 @@ def stream_step(program: SNNProgram, state: StreamState, frame: jax.Array,
         gate_granularity=gate_granularity, use_events=use_events,
         block_b=block_b, interpret=interpret,
         event_crossover=event_crossover,
-        v_init=list(state.vs[1:1 + n_convs]) if n_convs else None)
+        v_init=list(state.vs[1:1 + n_convs]) if n_convs else None,
+        mesh=mesh)
     last = conv_maps[-1] if conv_maps else cur
     flat = last.reshape(*last.shape[:2], -1) if last.ndim > 3 else last
     rasters_fc, v_stack, skips = _run_fc_stack(
@@ -919,7 +1048,7 @@ def stream_step(program: SNNProgram, state: StreamState, frame: jax.Array,
         gate_granularity=gate_granularity, use_events=use_events,
         block_b=block_b, interpret=interpret, emit_rasters=emit_rasters,
         event_crossover=event_crossover,
-        v_init=list(state.vs[1 + n_convs:]))
+        v_init=list(state.vs[1 + n_convs:]), mesh=mesh)
     new_vs = ((v_enc,) + tuple(v_convs)
               + tuple(jnp.asarray(v) for v in v_stack))
     rasters = None
@@ -959,7 +1088,7 @@ def stream_megastep(program: SNNProgram, state: StreamState,
                     active=None, emit_rasters: bool = True,
                     use_sparse: bool = False, block_b: int = 8,
                     interpret: bool = False, gate_granularity: int = 1,
-                    event_crossover: float = 1.0
+                    event_crossover: float = 1.0, mesh=None
                     ) -> tuple[StreamState, MegastepOut]:
     """Advance every stream K ticks in ONE device dispatch: (state,
     (K, B, ...) pre-staged current block) -> (new state, MegastepOut).
@@ -984,8 +1113,18 @@ def stream_megastep(program: SNNProgram, state: StreamState,
     unclamped int32, so the trajectory is recovered exactly as
     ``v_init + cumsum(raster @ w_readout)`` — int addition is associative,
     hence bit-identical to K single ticks (this forces the fc stack to
-    emit rasters internally even when ``emit_rasters=False``)."""
+    emit rasters internally even when ``emit_rasters=False``).
+
+    ``mesh`` (a `jax.sharding.Mesh` with "data"/"model" axes) executes the
+    macro-stack dispatches under shard_map — serving lanes partition over
+    the data axis, row-tiled fan-in over the model axis — bit-identical to
+    the single-device block; the float backend rejects a mesh
+    (ValueError)."""
     _check_stream_backend(program, backend)
+    if backend == "float" and mesh is not None:
+        raise ValueError(
+            "backend 'float' has no mesh execution: float reductions are "
+            "not order-exact, so a sharded run could not stay bit-identical")
     frames = jnp.asarray(frames)
     if frames.ndim < 3:
         raise ValueError(
@@ -1040,7 +1179,8 @@ def stream_megastep(program: SNNProgram, state: StreamState,
         gate_granularity=gate_granularity, use_events=use_events,
         block_b=block_b, interpret=interpret,
         event_crossover=event_crossover,
-        v_init=list(state.vs[1:1 + n_convs]) if n_convs else None)
+        v_init=list(state.vs[1:1 + n_convs]) if n_convs else None,
+        mesh=mesh)
     last = conv_maps[-1] if conv_maps else spikes_enc
     flat = last.reshape(*last.shape[:2], -1) if last.ndim > 3 else last
     rasters_fc, v_stack, skips = _run_fc_stack(
@@ -1048,7 +1188,7 @@ def stream_megastep(program: SNNProgram, state: StreamState,
         gate_granularity=gate_granularity, use_events=use_events,
         block_b=block_b, interpret=interpret, emit_rasters=True,
         event_crossover=event_crossover,
-        v_init=list(state.vs[1 + n_convs:]))
+        v_init=list(state.vs[1 + n_convs:]), mesh=mesh)
     new_vs = ((v_enc,) + tuple(v_convs)
               + tuple(jnp.asarray(v) for v in v_stack))
     # exact per-tick readout trajectory (see docstring): the readout input
@@ -1137,8 +1277,9 @@ def _bitmacro_layer(inp: np.ndarray, wq: np.ndarray, threshold: int,
 
 @register_backend("bitmacro")
 def run_bitmacro(program: SNNProgram, xs: jax.Array) -> NetResult:
-    """Execute the on-macro stack on the bit-accurate macro model (the
-    silicon oracle). Layers with fan-in > 128 split over row-tiled macros
+    """Execute ``program``'s on-macro stack on ``xs`` currents through the
+    bit-accurate macro model (the silicon oracle).
+    Layers with fan-in > 128 split over row-tiled macros
     whose partial sums reduce with word-level AccV2V cycles; conv layers
     lower via im2col onto the same grid (one neuron set per (example,
     output position)); frames beyond 13 neuron sets claim extra macro
@@ -1228,6 +1369,9 @@ class SparsityReport:
 
     @property
     def frames_by_layer(self) -> tuple:
+        """Per-layer frame counts: ``layer_frames`` when set (conv layers
+        run one frame per output position), else ``frames`` for every
+        layer."""
         return (self.layer_frames if self.layer_frames is not None
                 else tuple(self.frames for _ in self.n_in))
 

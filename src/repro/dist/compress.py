@@ -57,8 +57,9 @@ def compressed_psum_mean(grads: Any, residuals: Any, axis_name: str
 
 
 def fake_compress(grads: Any) -> Any:
-    """Quantize-dequantize each leaf through the int8 wire format (no
-    collective, no residual): isolates the per-step quantization noise."""
+    """Quantize-dequantize each leaf of the ``grads`` pytree through the
+    int8 wire format (no collective, no residual): isolates the per-step
+    quantization noise."""
     def leaf(g):
         q, scale = _quantize_int8(g.astype(jnp.float32))
         return _dequantize(q, scale).astype(g.dtype)

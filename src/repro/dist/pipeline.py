@@ -22,6 +22,10 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 def make_pipeline_fn(stage_fn: Callable, mesh: Mesh, axis_name: str,
                      n_micro: int) -> Callable:
+    """Build the GPipe executor (module docs): ``stage_fn(w, x)`` is one
+    pipeline stage, staged over ``mesh``'s ``axis_name`` extent; the
+    returned ``pipe(Ws, xs)`` runs ``n_micro`` microbatches through the
+    classic fill/steady/drain schedule."""
     n_stages = dict(zip(mesh.axis_names, mesh.devices.shape))[axis_name]
     ring = [(i, (i + 1) % n_stages) for i in range(n_stages)]
 

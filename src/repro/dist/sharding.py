@@ -19,6 +19,7 @@ The engine has three layers:
 from __future__ import annotations
 
 import contextlib
+import logging
 import threading
 from typing import Any, Optional
 
@@ -26,8 +27,16 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+logger = logging.getLogger("repro.dist.sharding")
+
 # Logical activation-axis name -> mesh axis. "batch" always maps to the data
-# axis; the model-parallel names collapse onto the model axis.
+# axis; the model-parallel names collapse onto the model axis. The SNN names
+# map the IMPULSE macro structure onto the mesh: "macro_row_tile" is the
+# row-tiled fan-in dimension (each model shard owns a tile's rows and
+# contributes an unclamped int32 partial V; the cross-shard psum is the
+# AccV2V reduction), "bank"/"lane" are the frame-bank and serving-lane
+# (batch) dimensions, which never interact across lanes and so partition
+# over the data axis.
 _LOGICAL_TO_MESH = {
     "batch": "data",
     "vocab": "model",
@@ -36,42 +45,81 @@ _LOGICAL_TO_MESH = {
     "heads": "model",
     "embed": "model",
     "seq": "model",          # only applied when parallel.seq_parallel
+    # --- SNN axes (core.pipeline / serve.snn_engine) ---
+    "macro_row_tile": "model",
+    "bank": "data",
+    "lane": "data",
 }
+
+
+class ShardingError(ValueError):
+    """A logical axis that was explicitly required could not be honoured —
+    its dimension does not divide the proposed mesh extent (or the mesh has
+    no such axis). Raised by `_fit`/`logical_spec` instead of silently
+    degrading to replication, so config-driven placements fail loudly."""
 
 
 def _axis_sizes(mesh: Mesh) -> dict[str, int]:
     return dict(zip(mesh.axis_names, mesh.devices.shape))
 
 
-def _fit(axes: tuple, shape: tuple, mesh: Mesh) -> P:
+def _fit(axes: tuple, shape: tuple, mesh: Mesh, *,
+         required: tuple = ()) -> P:
     """Fit a per-dimension mesh-axis proposal onto concrete dimension sizes.
 
     ``axes`` entries are a mesh axis name, a tuple of names (sharded over
     their product), or None. A proposal is dropped (-> None) when the
     dimension does not divide the proposed mesh extent, or when the axis was
-    already consumed by an earlier dimension.
+    already consumed by an earlier dimension. Every divisibility drop is
+    logged on the ``repro.dist.sharding`` logger with the axis and extents.
+
+    ``required``: mesh-axis names that must not degrade — dropping one
+    raises `ShardingError` instead of replicating (a size-1 mesh axis
+    counts as honoured: sharding over it IS replication).
     """
     sizes = _axis_sizes(mesh)
+    required = set(required)
     used: set[str] = set()
     out = []
-    for dim, prop in zip(shape, tuple(axes) + (None,) * (len(shape) - len(axes))):
+    for i, (dim, prop) in enumerate(
+            zip(shape, tuple(axes) + (None,) * (len(shape) - len(axes)))):
         if prop is None:
             out.append(None)
             continue
         names = prop if isinstance(prop, tuple) else (prop,)
         if any(n not in sizes or n in used for n in names):
+            if required.intersection(names):
+                raise ShardingError(
+                    f"required mesh axis {sorted(required & set(names))} "
+                    f"cannot shard dim {i} (size {dim}) of shape {shape}: "
+                    f"axis missing from mesh {sorted(sizes)} or already "
+                    f"consumed by an earlier dimension")
             out.append(None)
             continue
         extent = int(np.prod([sizes[n] for n in names]))
-        if extent > 1 and dim % extent == 0:
+        if extent == 1:
+            # size-1 mesh axis: sharding degenerates to replication; the
+            # proposal is honoured trivially, not dropped
+            out.append(None)
+        elif dim % extent == 0:
             out.append(prop)
             used.update(names)
         else:
+            logger.warning(
+                "sharding._fit: dropping axis %r on dim %d of shape %s — "
+                "size %d does not divide mesh extent %d; degrading to "
+                "replication", prop, i, shape, dim, extent)
+            if required.intersection(names):
+                raise ShardingError(
+                    f"required mesh axis {sorted(required & set(names))} "
+                    f"cannot shard dim {i} of shape {shape}: size {dim} "
+                    f"does not divide mesh extent {extent}")
             out.append(None)
     return P(*out)
 
 
 def replicated(mesh: Mesh) -> NamedSharding:
+    """Fully-replicated placement on ``mesh`` (the empty PartitionSpec)."""
     return NamedSharding(mesh, P())
 
 
@@ -104,7 +152,8 @@ def param_specs(params: Any, mesh: Mesh, parallel) -> Any:
 
 
 def batch_specs(batch: Any, mesh: Mesh, parallel) -> Any:
-    """Input batches shard their leading axis over data; with seq_parallel
+    """NamedSharding tree for an input ``batch`` pytree on ``mesh``: each
+    leaf's leading axis shards over data; with ``parallel.seq_parallel``
     the sequence axis additionally shards over model."""
     def spec(leaf):
         shape = tuple(leaf.shape)
@@ -118,8 +167,10 @@ def batch_specs(batch: Any, mesh: Mesh, parallel) -> Any:
 
 
 def cache_specs(cache: Any, mesh: Mesh, parallel, cfg=None) -> Any:
-    """KV / latent / state caches: batch over data, heads (axis 2 of
-    (B, S, H, D) layouts) over model when divisible."""
+    """NamedSharding tree for a KV / latent / state ``cache`` pytree on
+    ``mesh``: batch over data, heads (axis 2 of (B, S, H, D) layouts) over
+    model when divisible (``parallel``/``cfg`` reserved for rule
+    variants)."""
     def spec(leaf):
         shape = tuple(leaf.shape)
         prop: list = [None] * len(shape)
@@ -132,8 +183,74 @@ def cache_specs(cache: Any, mesh: Mesh, parallel, cfg=None) -> Any:
 
 
 def logits_spec(mesh: Mesh, shape: tuple) -> NamedSharding:
-    """(batch, vocab) logits: batch over data, vocab over model."""
+    """Placement on ``mesh`` for (batch, vocab) logits of ``shape``:
+    batch over data, vocab over model."""
     return NamedSharding(mesh, _fit(("data", "model"), tuple(shape), mesh))
+
+
+# ---------------------------------------------------------------------------
+# logical-axis placement (SNN pipeline entry point)
+# ---------------------------------------------------------------------------
+
+def logical_spec(mesh: Mesh, logical_axes: tuple, shape: tuple, *,
+                 required: tuple = ()) -> P:
+    """Resolve per-dimension *logical* axis names to a PartitionSpec.
+
+    ``logical_axes``: one entry per dimension of ``shape`` — a logical name
+    from `_LOGICAL_TO_MESH` ("lane", "macro_row_tile", "bank", "batch",
+    ...), a raw mesh-axis name, or None. Divisibility fitting and
+    degradation follow `_fit`.
+
+    ``required``: logical names that must be honoured; resolving one onto a
+    mesh axis that cannot shard its dimension raises `ShardingError`. An
+    unknown logical name in ``required`` also raises (a typo would
+    otherwise silently replicate).
+    """
+    sizes = _axis_sizes(mesh)
+
+    def to_mesh(name):
+        if name is None:
+            return None
+        if isinstance(name, tuple):
+            resolved = tuple(m for m in (to_mesh(n) for n in name)
+                             if m is not None)
+            return resolved or None
+        return _LOGICAL_TO_MESH.get(
+            name, name if name in sizes else None)
+
+    req_mesh = []
+    for name in required:
+        m = to_mesh(name)
+        if m is None:
+            raise ShardingError(
+                f"required logical axis {name!r} resolves to no mesh axis "
+                f"(known logical names: {sorted(_LOGICAL_TO_MESH)}; mesh "
+                f"axes: {sorted(sizes)})")
+        req_mesh.extend(m if isinstance(m, tuple) else (m,))
+    prop = tuple(to_mesh(n) for n in logical_axes)
+    return _fit(prop, tuple(shape), mesh, required=tuple(req_mesh))
+
+
+def logical_sharding(mesh: Mesh, logical_axes: tuple, shape: tuple, *,
+                     required: tuple = ()) -> NamedSharding:
+    """`logical_spec(mesh, logical_axes, shape, required=...)` wrapped
+    into a NamedSharding — the device_put / in_shardings form."""
+    return NamedSharding(
+        mesh, logical_spec(mesh, logical_axes, shape, required=required))
+
+
+def snn_state_specs(state: Any, mesh: Mesh) -> Any:
+    """Streaming-state pytree (`core.pipeline.StreamState`) -> NamedSharding
+    tree: every array leaf's leading axis is the serving-lane (batch) axis
+    and partitions over the data mesh axis when divisible; scalars (the
+    frame clock ``t``) replicate. Used by `serve.snn_engine.SNNServeEngine`
+    to place each page of the paged V-slot pool onto a mesh."""
+    def spec(leaf):
+        # the tick counter is a plain int leaf — shapeless, replicated
+        shape = tuple(getattr(leaf, "shape", ()))
+        prop = ("lane",) + (None,) * (len(shape) - 1) if shape else ()
+        return NamedSharding(mesh, logical_spec(mesh, prop, shape))
+    return jax.tree_util.tree_map(spec, state)
 
 
 # ---------------------------------------------------------------------------
@@ -150,8 +267,9 @@ _RULES = _Rules()
 
 @contextlib.contextmanager
 def activation_rules(mesh: Mesh, parallel):
-    """Activate logical-axis constraints for traces entered inside the
-    context. Traces outside it see `constrain` as the identity."""
+    """Activate logical-axis constraints (onto ``mesh``, interpreted under
+    the ``parallel`` flags) for traces entered inside the context. Traces
+    outside it see `constrain` as the identity."""
     prev = (_RULES.mesh, _RULES.parallel)
     _RULES.mesh, _RULES.parallel = mesh, parallel
     try:

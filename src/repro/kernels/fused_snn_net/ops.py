@@ -26,6 +26,12 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+try:                                     # moved out of experimental in 0.6
+    from jax.experimental.shard_map import shard_map
+except ImportError:                      # pragma: no cover - newer jax
+    from jax import shard_map
 
 from repro.kernels.fused_snn_net.kernel import (fused_snn_net_pallas,
                                                 skip_layout)
@@ -221,6 +227,250 @@ def fused_snn_net_device_events(spikes, ws, *, thresholds: tuple,
     stats = EventStats(row_events=row_events, frames=T * B,
                        dense_fallbacks=fallbacks)
     return rasters, v_finals, stats
+
+
+# ---------------------------------------------------------------------------
+# mesh execution — the multi-device entry (`repro.dist` wiring)
+# ---------------------------------------------------------------------------
+
+def mesh_axis_extents(mesh) -> tuple:
+    """``(n_data, n_model)`` extents of the SNN mesh axes — "data" carries
+    serving lanes / macro banks (batch), "model" carries macro row tiles
+    (fan-in) — with 1 for an axis the mesh does not name."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return int(sizes.get("data", 1)), int(sizes.get("model", 1))
+
+
+def mesh_padded_widths(widths: tuple, n_model: int) -> tuple:
+    """Layer widths padded up to multiples of the model-axis extent so
+    every layer's fan-in rows split evenly over the shards. Shared with
+    `analysis.kernel_contracts` — the ``mesh_split`` contract row
+    re-derives exactly these numbers."""
+    return tuple(-(-int(w) // n_model) * n_model for w in widths)
+
+
+@partial(jax.jit, static_argnames=("mesh", "thresholds", "leaks", "neuron",
+                                   "clamp_mode", "block_b", "use_pallas",
+                                   "interpret", "emit_rasters", "use_sparse",
+                                   "gate_granularity", "readout",
+                                   "use_events", "event_crossover"))
+def _fused_snn_net_mesh_core(spikes, ws, v_init, *, mesh, thresholds, leaks,
+                             neuron, clamp_mode, block_b, use_pallas,
+                             interpret, emit_rasters, use_sparse,
+                             gate_granularity, readout, use_events,
+                             event_crossover):
+    """The traced mesh body (see `fused_snn_net_mesh` for the contract).
+    ``mesh`` is hashable, hence a static argname: the shard_map in/out
+    specs are built per (mesh, shapes, flags) trace. ``v_init`` is always
+    a concrete per-layer list here (zeros for a from-scratch run) so the
+    shard_map operand tree is structurally fixed."""
+    from repro.dist.sharding import logical_spec
+    n_data, n_model = mesh_axis_extents(mesh)
+    T, B, N0 = spikes.shape
+    widths = (N0,) + tuple(w.shape[1] for w in ws)
+    n_spiking = len(ws) - 1 if readout else len(ws)
+    s = _pad_axis(spikes.astype(jnp.int8), 1, n_data)
+    vi = [_pad_axis(v.astype(jnp.int32), 0, n_data) for v in v_init]
+
+    if n_model == 1:
+        # pure lane (data) parallelism: every shard runs the REAL
+        # single-device executor — fused pallas kernel, gated kernel, or
+        # jnp reference — on its contiguous lane slice. Lanes never
+        # interact, so per-shard results equal the single-device values
+        # bit for bit and reassemble by concatenation.
+        def body(s_l, ws_l, vi_l):
+            r, v, sk = fused_snn_net(
+                s_l, list(ws_l), thresholds=thresholds, leaks=leaks,
+                neuron=neuron, clamp_mode=clamp_mode, block_b=block_b,
+                use_pallas=use_pallas, interpret=interpret,
+                emit_rasters=emit_rasters, use_sparse=use_sparse,
+                gate_granularity=gate_granularity, readout=readout,
+                v_init=list(vi_l), use_events=use_events,
+                event_crossover=event_crossover)
+            return list(r), list(v), sk
+
+        lane_spec = logical_spec(mesh, (None, "lane", None), s.shape,
+                                 required=("lane",))
+        in_specs = (lane_spec, [P()] * len(ws), [P("data")] * len(ws))
+        r_spec = [P(None, "data", None)] * (n_spiking if emit_rasters else 0)
+        v_spec = [P("data")] * len(ws)
+        if use_events:
+            # per-shard kernel counter blocks: one row per local batch
+            # tile — global assembly stacks the tile rows in lane order
+            sk_spec = {"row_events": [P("data")] * len(ws),
+                       "dense_fallbacks": P("data")}
+        elif use_sparse:
+            sk_spec = ([P("data")] * len(ws) if gate_granularity != 1
+                       else P("data"))
+        else:
+            sk_spec = None
+        rasters, v_finals, skips = shard_map(
+            body, mesh=mesh, in_specs=in_specs,
+            out_specs=(r_spec, v_spec, sk_spec),
+            check_rep=False)(s, list(ws), vi)
+        return ([r[:, :B] for r in rasters], [v[:B] for v in v_finals],
+                skips)
+
+    # model parallelism: the AccV2V reduction across devices. Each model
+    # shard owns a row tile of every layer's weights and computes that
+    # tile's UNCLAMPED int32 partial V; the cross-shard integer psum is
+    # the word-level AccV2V cycle (exact under mod-2^11 wrap: int32
+    # addition is associative and clamp_v composes after the full sum —
+    # the same single-clamp-after-partials trick sub-tile gating uses),
+    # and the one clamp runs after the reduction. Widths pad to n_model
+    # multiples; padded output lanes may fire junk spikes (their V only
+    # integrates leak) but feed zero weight rows downstream, exactly the
+    # LANE-padding argument of the single-device wrapper.
+    from repro.core.isa import neuron_dynamics_int
+    from repro.core.quant import clamp_v
+    pw = mesh_padded_widths(widths, n_model)
+    s = _pad_axis(s, 2, n_model)
+    ws_p = [_pad_axis(_pad_axis(w.astype(jnp.int8), 0, n_model), 1, n_model)
+            for w in ws]
+    vi = [_pad_axis(v, 1, n_model) for v in vi]
+
+    def body(s_l, ws_l, vi_l):
+        def tick(carry, frame):
+            vs, counts = list(carry[0]), list(carry[1])
+            cur = frame.astype(jnp.int32)            # (B_l, pw[0])
+            rasters_t = []
+            for i, w_l in enumerate(ws_l):
+                if use_events:
+                    # path-independent per-row event counters on the
+                    # LOGICAL input rows (the padded tail is junk)
+                    counts[i] = counts[i] + jnp.sum(cur[:, :widths[i]],
+                                                    axis=0)
+                rows = w_l.shape[0]                  # pw[i] // n_model
+                lo = jax.lax.axis_index("model") * rows
+                blk = jax.lax.dynamic_slice_in_dim(cur, lo, rows, axis=1)
+                total = jax.lax.psum(blk @ w_l.astype(jnp.int32), "model")
+                if i < n_spiking:
+                    v = clamp_v(vs[i] + total, clamp_mode)
+                    vs[i], spk = neuron_dynamics_int(
+                        v, neuron=neuron,
+                        threshold=jnp.int32(thresholds[i]),
+                        leak=jnp.int32(leaks[i]), reset=jnp.int32(0),
+                        clamp_mode=clamp_mode)
+                    cur = spk.astype(jnp.int32)
+                    rasters_t.append(spk.astype(jnp.int8))
+                else:                                # unclamped readout
+                    vs[i] = vs[i] + total
+            return ((tuple(vs), tuple(counts)),
+                    tuple(rasters_t) if emit_rasters else ())
+
+        counts0 = tuple(jnp.zeros((widths[i],), jnp.int32)
+                        for i in range(len(ws_l))) if use_events else ()
+        (vs, counts), rasters = jax.lax.scan(
+            tick, (tuple(vi_l), counts0), s_l)
+        rasters = [r[:, :, :w] for r, w in zip(rasters, widths[1:])]
+        vs = [v[:, :w] for v, w in zip(vs, widths[1:])]
+        # lane-partition counters pool over the data axis; every model
+        # shard then holds the identical global counts
+        counts = [jax.lax.psum(c, "data") for c in counts]
+        return list(rasters), list(vs), list(counts)
+
+    lane_spec = logical_spec(mesh, (None, "lane", None), s.shape,
+                             required=("lane",))
+    w_specs = [logical_spec(mesh, ("macro_row_tile", None), w.shape,
+                            required=("macro_row_tile",)) for w in ws_p]
+    in_specs = (lane_spec, w_specs, [P("data")] * len(ws))
+    r_spec = [P(None, "data", None)] * (n_spiking if emit_rasters else 0)
+    v_spec = [P("data")] * len(ws)
+    c_spec = [P(None)] * len(ws) if use_events else []
+    rasters, v_finals, counts = shard_map(
+        body, mesh=mesh, in_specs=in_specs,
+        out_specs=(r_spec, v_spec, c_spec),
+        check_rep=False)(s, ws_p, vi)
+    return ([r[:, :B] for r in rasters], [v[:B] for v in v_finals],
+            counts if use_events else None)
+
+
+def fused_snn_net_mesh(spikes: jax.Array, ws: list, *, mesh,
+                       thresholds: tuple, leaks: tuple, neuron: str = "rmp",
+                       clamp_mode: str = "saturate", block_b: int = 8,
+                       use_pallas: bool = True, interpret: bool = False,
+                       emit_rasters: bool = True, use_sparse: bool = False,
+                       gate_granularity: int = 1, readout: bool = True,
+                       v_init: list = None, use_events: bool = False,
+                       event_crossover: float = 1.0):
+    """`fused_snn_net` on a `jax.sharding.Mesh` — same stack, same
+    results, executed under shard_map. Placement is config-driven through
+    `repro.dist.sharding`'s logical axes: "lane" (batch) partitions over
+    the data axis, "macro_row_tile" (fan-in rows) over the model axis.
+
+    Execution splits on the model extent:
+
+      * model extent 1 — pure lane parallelism: each shard runs the real
+        single-device executor (fused pallas kernel included) on its lane
+        slice; lanes never interact, so results are bit-identical and
+        concatenate. Skip/event counters are the per-shard kernels' own
+        blocks stacked in lane order — identical to the single-device
+        counters whenever ``block_b`` divides the per-shard batch.
+      * model extent > 1 — the AccV2V all-reduce: each shard computes its
+        row tile's unclamped int32 partial V, an integer ``psum`` reduces
+        across shards (exact — int32 addition is associative and mod-2^11
+        wrap composes), and the single clamp runs after the reduction.
+        The body is the XLA row-partial scan (a pallas kernel cannot span
+        the cross-device reduction); ``use_pallas`` then only selects
+        counter conventions. Row-block gate counters are a per-device
+        kernel feature and come back as None on this path.
+
+    Args/shapes match `fused_snn_net` (spikes (T, B, N0) int8, per-layer
+    ws (n_in, n_out) int8, optional per-layer ``v_init`` (B, n_out)
+    int32). Batch pads to the data extent and widths to the model extent
+    with zeros — padded lanes integrate nothing and are sliced off.
+
+    Returns (rasters, v_finals, skips); on the event path (``use_events``)
+    ``skips`` is an `events.EventStats` folded on the host — do not call
+    that combination under an outer jit.
+
+    Raises ValueError on a misaligned stack or invalid flag combination,
+    `repro.dist.sharding.ShardingError` if a required axis cannot be
+    honoured (cannot happen after padding; defensive).
+    """
+    thresholds, leaks = tuple(thresholds), tuple(leaks)
+    _check_stack(spikes, ws)
+    if v_init is not None and len(v_init) != len(ws):
+        raise ValueError(f"v_init needs one (B, n_out) state per layer "
+                         f"({len(ws)}), got {len(v_init)}")
+    if gate_granularity != 1 and not use_sparse:
+        raise ValueError("gate_granularity is an event-gating knob; pass "
+                         "use_sparse=True to gate at granularity "
+                         f"{gate_granularity}")
+    if use_events and use_sparse:
+        raise ValueError("use_events (event-list execution) and use_sparse "
+                         "(row-block gating) are mutually exclusive")
+    if use_events and not use_pallas:
+        raise ValueError("use_events is the device event-list path; the "
+                         "host executor shards at the pipeline level "
+                         "(core.pipeline._host_events_sharded)")
+    T, B = int(spikes.shape[0]), int(spikes.shape[1])
+    n_data, n_model = mesh_axis_extents(mesh)
+    if v_init is None:
+        v_init = [jnp.zeros((B, w.shape[1]), jnp.int32) for w in ws]
+    rasters, v_finals, skips = _fused_snn_net_mesh_core(
+        spikes, list(ws), list(v_init), mesh=mesh, thresholds=thresholds,
+        leaks=leaks, neuron=neuron, clamp_mode=clamp_mode, block_b=block_b,
+        use_pallas=use_pallas, interpret=interpret,
+        emit_rasters=emit_rasters, use_sparse=use_sparse,
+        gate_granularity=gate_granularity, readout=readout,
+        use_events=use_events, event_crossover=event_crossover)
+    if use_events:
+        import numpy as np
+
+        from repro.kernels.fused_snn_net.events import EventStats
+        if n_model == 1:
+            row_events = tuple(np.asarray(rc, np.int64).sum(axis=0)
+                               for rc in skips["row_events"])
+            fallbacks = tuple(int(c) for c in
+                              np.asarray(skips["dense_fallbacks"],
+                                         np.int64).sum(axis=0))
+        else:
+            row_events = tuple(np.asarray(c, np.int64) for c in skips)
+            fallbacks = ()       # no dense-fallback machinery on this path
+        skips = EventStats(row_events=row_events, frames=T * B,
+                           dense_fallbacks=fallbacks)
+    return rasters, v_finals, skips
 
 
 def _fused_snn_net_ref(spikes, ws, thresholds, leaks, neuron, clamp_mode,

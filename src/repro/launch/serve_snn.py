@@ -20,6 +20,12 @@ pooled per-slot event accounting, and the measured-EDP figure it implies.
 ``--poisson-gap G`` draws seeded Poisson arrivals (mean gap G frame
 ticks) for the admission-control path; ``--quick`` shrinks everything
 for the CI serving smoke step.
+
+``--mesh DATA,MODEL`` serves over a `jax.sharding.Mesh`: lanes partition
+over the data axis, row-tiled macro fan-in over the model axis, and the
+outputs stay bit-identical to the single-device drain (docs/serving.md
+§Mesh). The devices must exist before jax initialises — on CPU launch
+with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
 """
 from __future__ import annotations
 
@@ -88,9 +94,25 @@ def main(argv=None):
     ap.add_argument("--poisson-gap", type=float, default=None,
                     help="mean inter-arrival gap in frame ticks (Poisson "
                          "admission; default: all requests arrive at once)")
+    ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
+                    help="serve on a (data, model) device mesh, e.g. 2,2 "
+                         "(needs DATA*MODEL devices; on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count first)")
     ap.add_argument("--quick", action="store_true",
                     help="reduced sizes (CI serving smoke)")
     args = ap.parse_args(argv)
+
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_mesh
+        n_data, n_model = (int(v) for v in args.mesh.split(","))
+        need = n_data * n_model
+        if len(jax.devices()) < need:
+            raise SystemExit(
+                f"--mesh {args.mesh} needs {need} devices but jax sees "
+                f"{len(jax.devices())}; on CPU relaunch with XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={need}")
+        mesh = make_mesh((n_data, n_model), ("data", "model"))
 
     cfg = get_snn_config(args.arch)
     if args.quick:
@@ -103,7 +125,7 @@ def main(argv=None):
                                   if args.backend.startswith("pallas")
                                   else {}),
                          pages=args.pages, megastep=args.megastep,
-                         double_buffer=args.double_buffer)
+                         double_buffer=args.double_buffer, mesh=mesh)
     for req in make_requests(program, args.requests, args.words,
                              cfg.timesteps, args.sparsity, args.seed,
                              args.stop_threshold,
@@ -117,7 +139,9 @@ def main(argv=None):
     print(f"served {len(done)} requests, {frames} frames in {dt:.2f}s "
           f"({frames / dt:.1f} frames/s, "
           f"{frames / cfg.timesteps / dt:.1f} words/s on CPU; "
-          f"K={args.megastep}, {args.pages} page(s) x {args.slots} lanes)")
+          f"K={args.megastep}, {args.pages} page(s) x {args.slots} lanes"
+          + (f", mesh data={args.mesh.split(',')[0]} "
+             f"model={args.mesh.split(',')[1]}" if args.mesh else "") + ")")
     lats = [r.latency_ticks for r in done if r.latency_ticks is not None]
     if lats:
         print(f"latency (frame ticks, arrival->finish): "

@@ -115,8 +115,9 @@ class SlotEngine:
         return out
 
     def run_until_drained(self, max_ticks: int = 10_000) -> list:
-        """Tick until queue and slots are empty. Raises `EngineUndrained`
-        (carrying the partial ``finished`` list) when the tick cap is hit
+        """Tick until queue and slots are empty; returns the ``finished``
+        request list. Raises `EngineUndrained` (carrying the partial
+        ``finished`` list) when the ``max_ticks`` engine-tick cap is hit
         with work still pending — a truncated run never masquerades as a
         complete one."""
         for _ in range(max_ticks):
@@ -178,6 +179,7 @@ class ServeEngine(SlotEngine):
 
     # -- request intake ------------------------------------------------------
     def submit(self, req: Request) -> None:
+        """Enqueue ``req`` for FIFO admission into a free decode lane."""
         self.queue.put(req)
 
     def _prefill_bucket(self, plen: int) -> int:

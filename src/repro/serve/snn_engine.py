@@ -162,19 +162,20 @@ def merge_reports(reports: list) -> SparsityReport:
             for i in range(len(head.n_in))))
 
 
-_MEGASTEP_JIT = {}  # (id(program), backend, kw, rasters) -> (ref, jitted fn)
+_MEGASTEP_JIT = {}  # (id(program), backend, kw, rasters, mesh) -> (ref, fn)
 
 
-def _jit_megastep(program, backend, step_kw, emit_rasters):
+def _jit_megastep(program, backend, step_kw, emit_rasters, mesh=None):
     """Jitted megastep core shared across engines over the same program.
 
     SNNProgram is frozen and holds device arrays (unhashable), so the
-    cache is keyed by ``id`` with a weakref guard against id reuse. The
+    cache is keyed by ``id`` with a weakref guard against id reuse (a
+    `jax.sharding.Mesh` IS hashable, so ``mesh`` keys directly). The
     core returns ``MegastepOut``'s fields as a tuple (the dataclass is
     not a pytree); callers rebuild it.
     """
     key = (id(program), backend, tuple(sorted(step_kw.items())),
-           emit_rasters)
+           emit_rasters, mesh)
     hit = _MEGASTEP_JIT.get(key)
     if hit is not None and hit[0]() is program:
         return hit[1]
@@ -182,7 +183,7 @@ def _jit_megastep(program, backend, step_kw, emit_rasters):
     def _core(st, block, counts):
         st2, out = pipeline.stream_megastep(
             program, st, block, backend, active=counts,
-            emit_rasters=emit_rasters, **step_kw)
+            emit_rasters=emit_rasters, mesh=mesh, **step_kw)
         return st2, (out.v_out, out.logits, out.v_out_traj,
                      out.logits_traj, out.frames_consumed,
                      out.rasters, out.skips, out.conv_skips)
@@ -214,19 +215,33 @@ class SNNServeEngine(SlotEngine):
     execute, exceeds the readout's proven ``max_safe_frames`` (the horizon
     past which the unclamped int32 accumulator can overflow) is rejected
     at `submit` with a named `RangeError` instead of silently serving
-    garbage logits."""
+    garbage logits.
+
+    ``mesh`` (a `jax.sharding.Mesh` with "data"/"model" axes) partitions
+    the paged V-slot pool: each page's state tree is placed with its lane
+    axis sharded over the data mesh axis (`dist.sharding.snn_state_specs`)
+    and every megastep dispatch executes under shard_map — serving lanes
+    over data shards, row-tiled fan-in over model shards — bit-identical
+    to the single-device engine (every per-request output and both event
+    ledgers). The float backend rejects a mesh (ValueError)."""
 
     def __init__(self, program: SNNProgram, *, batch_slots: int = 4,
                  backend: str = "int_ref", track_events: bool = True,
                  step_kw: Optional[dict] = None, validate: bool = True,
                  pages: int = 1, megastep: int = 1,
-                 double_buffer: bool = False):
+                 double_buffer: bool = False, mesh=None):
         if pages < 1:
             raise ValueError(f"pages must be >= 1, got {pages}")
         if megastep < 1:
             raise ValueError(f"megastep must be >= 1, got {megastep}")
+        if mesh is not None and backend == "float":
+            raise ValueError(
+                "backend 'float' has no mesh execution: float reductions "
+                "are not order-exact, so a sharded engine could not stay "
+                "bit-identical to the single-device path")
         self.program = program
         self.backend = backend
+        self.mesh = mesh
         self.B = batch_slots                  # lanes per page
         self.pages = pages
         self.K = megastep
@@ -242,12 +257,21 @@ class SNNServeEngine(SlotEngine):
                 block_b=self.step_kw.get("block_b", 8),
                 gate_granularity=self.step_kw.get("gate_granularity", 1),
                 event_crossover=self.step_kw.get("event_crossover", 1.0),
-                use_sparse=self.step_kw.get("use_sparse", False))
+                use_sparse=self.step_kw.get("use_sparse", False),
+                mesh=mesh)
             self.max_safe_ticks = check_program(
                 program, frames=1).max_safe_frames
         self.states = [pipeline.init_stream_state(program, batch_slots,
                                                   backend)
                        for _ in range(pages)]
+        if mesh is not None:
+            # place each page's pool on the mesh: lane axis over the data
+            # shards (snn_state_specs degrades to replication when the
+            # lane count does not divide), scalars replicated
+            from repro.dist import sharding as dist_sharding
+            self.states = [
+                jax.device_put(st, dist_sharding.snn_state_specs(st, mesh))
+                for st in self.states]
         self._fresh = pipeline.init_stream_state(program, 1, backend)
         # structurally-determined batch axis per state leaf (same B-vs-B+1
         # probe ServeEngine runs on its cache tree, shapes only — no
@@ -287,7 +311,7 @@ class SNNServeEngine(SlotEngine):
         self._dispatch = None
         if backend not in ("float", "ref_events", "pallas_events"):
             self._dispatch = _jit_megastep(program, backend, self.step_kw,
-                                           track_events)
+                                           track_events, mesh)
         self._admit_seq = 0
         self._staged: dict = {}           # page -> (meta, device block, counts)
         # pooled device-side event ledger (event backends only): per-layer
@@ -305,6 +329,14 @@ class SNNServeEngine(SlotEngine):
 
     # -- request intake ------------------------------------------------------
     def submit(self, req: SNNRequest) -> None:
+        """Enqueue ``req`` (an `SNNRequest` whose ``frames`` is a
+        (T, *in_shape) current block) for arrival-gated FIFO admission.
+
+        Raises ``ValueError`` when the request's frame shape does not
+        match the program input, and `analysis.RangeError` when its tick
+        budget — rounded up to the K-block horizon the lane will actually
+        execute — exceeds the readout accumulator's proven
+        ``max_safe_frames`` (validate=True engines only)."""
         if req.frames.shape[1:] != tuple(self._frame_shape):
             raise ValueError(
                 f"request {req.rid}: frame shape {req.frames.shape[1:]} "
@@ -549,7 +581,7 @@ class SNNServeEngine(SlotEngine):
                 self.states[page], outs[page] = pipeline.stream_megastep(
                     self.program, self.states[page], block, self.backend,
                     active=counts, emit_rasters=self.track_events,
-                    **self.step_kw)
+                    mesh=self.mesh, **self.step_kw)
         if self.double_buffer:
             self._stage_next(sorted(by_page))
         self.ticks += 1

@@ -5,6 +5,7 @@ committed config (DESIGN.md §"Static verification").
     python tools/check_invariants.py               # the full CI gate
     python tools/check_invariants.py --lint-only   # AST lint, no jax import
     python tools/check_invariants.py --analyze-only
+    python tools/check_invariants.py --mesh        # + mesh-contract rows
 
 Two halves, both blocking in CI:
 
@@ -16,7 +17,11 @@ Two halves, both blocking in CI:
     the benchmark/example geometries) and run the range pass + the
     kernel-contract pass for the backends each config is dispatched on.
     A config that cannot be *proven* overflow-free and contract-clean
-    does not merge.
+    does not merge. ``--mesh`` additionally validates the mesh-execution
+    contract rows (chain-preserving row split, per-shard VMEM) of the
+    IMDB and LeNet5-mod geometries on the committed mesh shapes —
+    statically, via dict-form meshes, so no forced host devices are
+    needed.
 
 Exit status 0 iff every check passes; violations/errors are printed one
 per line.
@@ -98,7 +103,18 @@ def _committed_programs():
            {"pallas": {}, "bitmacro": {}})
 
 
-def run_analysis() -> int:
+#: mesh shapes the mesh suite / serving benchmark exercise on forced-host
+#: devices — validated statically here as {axis: extent} dicts
+MESH_SHAPES = ({"data": 4, "model": 1}, {"data": 1, "model": 4},
+               {"data": 2, "model": 2})
+#: geometries the mesh-execution contract rows are committed for: the IMDB
+#: paper config and the LeNet5-mod benchmark program
+MESH_PROGRAMS = ("imdb", "lenet-bench")
+
+
+def run_analysis(mesh: bool = False) -> int:
+    """Static analysis of every committed config; with ``mesh`` also the
+    mesh-contract rows of `MESH_PROGRAMS` on each `MESH_SHAPES` entry."""
     from repro.analysis import (AnalysisError, check_kernel_contracts,
                                 check_program)
     failures = 0
@@ -117,6 +133,26 @@ def run_analysis() -> int:
               f"({program.clamp_mode}), max_safe_frames="
               f"{'unbounded' if safe is None else safe}, "
               f"vmem<={vmem}B across {sorted(contracts)}")
+        if mesh and name in MESH_PROGRAMS:
+            for shape in MESH_SHAPES:
+                try:
+                    rep = check_kernel_contracts(program, "pallas",
+                                                 mesh=shape)
+                except AnalysisError as e:
+                    failures += 1
+                    print(f"analyze {name} mesh {shape}: FAIL "
+                          f"{type(e).__name__}: {e}")
+                    continue
+                rows = [c for c in rep.checks
+                        if c.contract in ("mesh_axes", "mesh_split")]
+                want = 1 + len(rep.calls)     # one axes row + one per call
+                if len(rows) != want:
+                    failures += 1
+                    print(f"analyze {name} mesh {shape}: FAIL expected "
+                          f"{want} mesh rows, got {len(rows)}")
+                    continue
+                print(f"analyze {name} mesh {shape}: ok — "
+                      f"{len(rows)} mesh-contract row(s)")
     return failures
 
 
@@ -124,12 +160,15 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--lint-only", action="store_true")
     ap.add_argument("--analyze-only", action="store_true")
+    ap.add_argument("--mesh", action="store_true",
+                    help="also validate mesh-execution contract rows for "
+                         "the IMDB and LeNet5-mod geometries")
     args = ap.parse_args(argv)
     n = 0
     if not args.analyze_only:
         n += run_lint()
     if not args.lint_only:
-        n += run_analysis()
+        n += run_analysis(mesh=args.mesh)
     if n:
         sys.exit(1)
     print("check_invariants: all clear")
