@@ -1,10 +1,13 @@
 """Static-analyzer verdicts for the committed configs, as benchmark rows.
 
-Runs the range pass + kernel-contract pass (repro.analysis) over the two
-paper configs and emits one row per (config, backend): the proven
-``max_safe_frames`` horizon and the per-call VMEM residency land in the
-bench artifact next to the timing rows, so the perf trajectory and the
-safety envelope travel together. A config the analyzer rejects emits a
+Runs the range pass + kernel-contract pass + trace cost model
+(repro.analysis) over the two paper configs and emits one row per
+(config, backend): the proven ``max_safe_frames`` horizon, the per-call
+VMEM residency, and the traced ``macs``/``hbm_bytes`` of the real batch
+dispatch land in the bench artifact next to the timing rows, so the perf
+trajectory and the safety envelope travel together. The cost tokens are
+exact functions of the compiled jaxpr — `tools/bench_gate.py` gates them
+at zero tolerance. A config the analyzer rejects emits a
 ``*_FAILED``-style verdict row (and `run` raises, which benchmarks/run.py
 records as a failure)."""
 from __future__ import annotations
@@ -17,7 +20,7 @@ from benchmarks.common import emit
 def run(quick: bool = False) -> list[str]:
     del quick  # analysis is static — the full check IS the quick check
     from repro.analysis import PALLAS_BACKENDS, check_kernel_contracts, \
-        check_program
+        check_program, check_trace
     from repro.configs.impulse_snn import IMDB, MNIST
     from repro.core import pipeline, snn
 
@@ -34,7 +37,9 @@ def run(quick: bool = False) -> list[str]:
             f"max_safe_frames={safe}"))
         for backend in PALLAS_BACKENDS:
             rep = check_kernel_contracts(program, backend)
+            cost = check_trace(program, backend, surfaces=("batch",)).cost
             rows.append(emit(
                 f"analysis_{cfg.arch_id}_{backend}", 0,
-                f"checks={len(rep.checks)} vmem_bytes={rep.vmem_bytes}"))
+                f"checks={len(rep.checks)} vmem_bytes={rep.vmem_bytes} "
+                f"macs={cost.macs} hbm_bytes={cost.hbm_bytes}"))
     return rows

@@ -1,7 +1,7 @@
 """Static verification of compiled SNN programs (DESIGN.md §"Static
 verification").
 
-Three passes, composable and individually importable:
+Four passes, composable and individually importable:
 
   * `check_program` — interval/bit-width abstract interpretation over the
     word-level ISA semantics: proves weights on the 6-bit grid, constants
@@ -11,11 +11,20 @@ Three passes, composable and individually importable:
     Pallas kernels assume from config alone: VMEM residency, skip_layout
     caps, event crossover, grid/gather bounds (`ContractReport`, or
     `ContractError` naming the contract and call).
+  * `check_trace` — jaxpr-level verification of the *compiled artifact*:
+    every int backend's real dispatch (batch, step, megastep, and the
+    mesh row-partial tick under an abstract mesh) is traced and checked
+    for dtype discipline, clamp placement/dominance, provable index
+    bounds, and determinism, plus a static MAC/byte cost model that
+    closes against the ISA instruction counts (`TraceReport`, or
+    `TraceError` naming primitive + eqn + backend; DESIGN.md §7.5).
   * `lint_paths` — AST repo lint (ANA001 bare asserts, ANA002 ad-hoc
-    clamps, ANA003 unseeded randomness); pure stdlib.
+    clamps, ANA003 unseeded randomness, ANA005 float casts in int-domain
+    modules); pure stdlib.
 
-`compile_network(..., validate=True)` (the default) runs the first two via
-`validate_program`; `tools/check_invariants.py` runs all three in CI.
+`compile_network(..., validate=True)` (the default) runs the first three
+via `validate_program`; `tools/check_invariants.py` runs all four in CI
+(`--trace` adds the full backend x surface trace matrix).
 """
 from __future__ import annotations
 
@@ -32,30 +41,49 @@ from repro.analysis.lint import (RULES, LintViolation, lint_file,
                                  lint_paths, lint_source)
 from repro.analysis.program_check import (LayerRange, RangeError,
                                           RangeReport, check_program)
+from repro.analysis.trace_check import (HOST_BACKENDS, SURFACES,
+                                        TRACE_BACKENDS, TraceCheck,
+                                        TraceError, TraceExpectation,
+                                        TraceReport, check_closed_jaxpr,
+                                        check_trace)
+from repro.analysis.trace_cost import (CallCost, TraceCostReport,
+                                       check_cost_closure, dense_instr)
 
 __all__ = [
-    "AnalysisError", "ContractCheck", "ContractError", "ContractReport",
-    "INT32", "Interval", "KernelCall", "LayerRange", "LintViolation",
-    "PALLAS_BACKENDS", "RULES", "RangeError", "RangeReport", "V_DOMAIN",
-    "VMEM_BUDGET_BYTES", "check_kernel_contracts", "check_program",
-    "clamp_interval", "lint_file", "lint_paths", "lint_source",
-    "validate_program", "wrap_is_exact",
+    "AnalysisError", "CallCost", "ContractCheck", "ContractError",
+    "ContractReport", "HOST_BACKENDS", "INT32", "Interval", "KernelCall",
+    "LayerRange", "LintViolation", "PALLAS_BACKENDS", "RULES",
+    "RangeError", "RangeReport", "SURFACES", "TRACE_BACKENDS",
+    "TraceCheck", "TraceCostReport", "TraceError", "TraceExpectation",
+    "TraceReport", "V_DOMAIN", "VMEM_BUDGET_BYTES", "check_closed_jaxpr",
+    "check_cost_closure", "check_kernel_contracts", "check_program",
+    "check_trace", "clamp_interval", "dense_instr", "lint_file",
+    "lint_paths", "lint_source", "validate_program", "wrap_is_exact",
 ]
 
 
 def validate_program(program, *, frames: Optional[int] = None,
-                     backends: Optional[tuple] = None, **contract_kw
+                     backends: Optional[tuple] = None,
+                     trace: Optional[bool] = None,
+                     trace_backends: Optional[tuple] = None, **contract_kw
                      ) -> tuple:
-    """Run the range pass plus the kernel-contract pass and return
-    ``(RangeReport, {backend: ContractReport})``; raise the first
-    `AnalysisError` found. This is what
-    `compile_network(..., validate=True)` executes at compile time.
+    """Run the range pass, the kernel-contract pass, and the trace pass;
+    return ``(RangeReport, {backend: ContractReport}, {backend:
+    TraceReport})`` and raise the first `AnalysisError` found. This is
+    what `compile_network(..., validate=True)` executes at compile time.
 
     ``backends`` defaults to the dense Pallas contract for int-domain
     programs (the dispatch every integer backend shares its geometry
     with) and the trivial float contract otherwise; pass an explicit
     tuple to verify gated/event dispatches with their own knobs
     (``gate_granularity``, ``event_crossover``, ... via ``contract_kw``).
+
+    ``trace`` defaults on for int-domain programs; ``trace_backends``
+    defaults to every registered int backend — the XLA-dispatched ones
+    (`TRACE_BACKENDS`) get the full batch/step/megastep/mesh surface
+    matrix, the host executors (`HOST_BACKENDS`) a named skip row. Trace
+    results are memoized by geometry, so re-validating an unchanged
+    program is free.
     """
     if backends is None:
         backends = ("pallas",) if program.domain == "int" else ("float",)
@@ -63,4 +91,32 @@ def validate_program(program, *, frames: Optional[int] = None,
     contracts = {b: check_kernel_contracts(program, b, frames=frames,
                                            **contract_kw)
                  for b in backends}
-    return ranges, contracts
+    if trace is None:
+        trace = program.domain == "int"
+    traces = {}
+    if trace:
+        if trace_backends is None:
+            trace_backends = TRACE_BACKENDS + HOST_BACKENDS
+        trace_kw = {k: contract_kw[k] for k in
+                    ("gate_granularity", "event_crossover", "mesh",
+                     "block_b") if k in contract_kw}
+        for b in trace_backends:
+            # a backend whose own kernel contract refuses this program
+            # (layer-count caps, clamp-mode requirements, ...) has no
+            # dispatch to trace — record the refusal, don't fail compile;
+            # requesting that backend explicitly raises the ContractError
+            try:
+                bkw = dict(trace_kw)
+                bkw.pop("mesh", None)
+                if b != "pallas_sparse":
+                    bkw.pop("gate_granularity", None)
+                if b != "pallas_events":
+                    bkw.pop("event_crossover", None)
+                check_kernel_contracts(program, b, frames=frames, **bkw)
+            except ContractError as e:
+                traces[b] = TraceReport(
+                    backend=b, surfaces=(), cost=None,
+                    checks=(TraceCheck("contract_skip", b, str(e)),))
+                continue
+            traces[b] = check_trace(program, b, **trace_kw)
+    return ranges, contracts, traces

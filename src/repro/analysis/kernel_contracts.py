@@ -160,8 +160,17 @@ def _check_chain(program, checks: list) -> None:
 
 def _call_vmem_bytes(widths: tuple, *, n_spiking: int, frames: int,
                      block_b: int, backend: str, gate_granularity: int,
-                     emit_rasters: bool, streaming: bool) -> int:
-    """VMEM bytes resident in one grid step of one fused call."""
+                     emit_rasters: bool, streaming: bool,
+                     staged_in_elems: int = 0) -> int:
+    """VMEM bytes resident in one grid step of one fused call.
+
+    ``staged_in_elems`` — raw input elements per frame of the streamed
+    presentation (prod of ``cfg.in_shape`` for conv-led programs, the
+    input-layer width otherwise). A K-frame megastep pre-stages the next
+    K frames of every lane as one ``(K, B, *in_shape)`` float32 block
+    alongside the kernel's own operands, so its residency scales with K
+    too; pass it for the call that consumes the staged block (the first).
+    """
     inp = _pad_lane(widths[0])
     outs = [_pad_lane(w) for w in widths[1:]]
     ins_p = [inp] + outs[:-1]
@@ -171,6 +180,7 @@ def _call_vmem_bytes(widths: tuple, *, n_spiking: int, frames: int,
     n += 2 * sum(block_b * o * 4 for o in outs)      # V scratch + V out
     if streaming:
         n += sum(block_b * o * 4 for o in outs)      # v_init blocks
+        n += frames * block_b * staged_in_elems * 4  # staged frame block
     if emit_rasters:
         n += frames * block_b * sum(outs[:n_spiking])
     if backend == "pallas_sparse":
@@ -296,8 +306,17 @@ def check_kernel_contracts(program, backend: str = "pallas", *,
         f"block_b={block_b}; B pads to the next multiple, grid=ceil(B/"
         f"{block_b})"))
 
+    # the K-frame megastep stages a (K, B, *in_shape) float32 frame block
+    # for the call that consumes the raw presentation (the first)
+    staged_in_elems = 0
+    if streaming:
+        staged_in_elems = int(np.prod(
+            program.cfg.in_shape if program.layers[0].kind == "conv"
+            else program.layers[0].state_shape))
+
     calls = []
-    for name, layer_names, widths, n_spiking in _program_calls(program):
+    for ci, (name, layer_names, widths, n_spiking) in enumerate(
+            _program_calls(program)):
         if backend == "pallas_sparse":
             try:
                 n_cols, _, _ = skip_layout(tuple(widths[:-1]),
@@ -323,12 +342,13 @@ def check_kernel_contracts(program, backend: str = "pallas", *,
         vmem = _call_vmem_bytes(
             widths, n_spiking=n_spiking, frames=frames, block_b=block_b,
             backend=backend, gate_granularity=gate_granularity,
-            emit_rasters=emit_rasters, streaming=streaming)
+            emit_rasters=emit_rasters, streaming=streaming,
+            staged_in_elems=staged_in_elems if ci == 0 else 0)
         if vmem > vmem_budget_bytes:
             raise ContractError(
                 f"vmem_budget: one grid step holds {vmem} bytes resident "
-                f"(T={frames} spike block + weight tiles + V tiles + "
-                f"counters) > budget {vmem_budget_bytes} "
+                f"(T={frames} spike block + staged frames + weight tiles "
+                f"+ V tiles + counters) > budget {vmem_budget_bytes} "
                 f"({VMEM_BYTES} per core with compiler margin); shrink "
                 "block_b, chunk the presentation, or split the stack",
                 where=name)

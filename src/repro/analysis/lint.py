@@ -22,6 +22,14 @@ rewrites their asserts and they may exercise raw randomness on purpose).
           docstring must mention at least one by name (a docstring that
           names no parameter documents the *idea* but not the *call* —
           the repo's entry points are exactly where call contracts live).
+  ANA005  no float casts in int-domain modules (`kernels/fused_snn_net/`,
+          `core/isa.py`, `core/macro.py`): any ``.astype(<float dtype>)``
+          or ``jnp.float*`` / ``np.float*`` dtype reference. The word-level
+          semantics are exact-integer end to end; one stray f32 round-trip
+          breaks bit-identity silently on values past 2**24. Float lives
+          in `core/quant.py` (the QAT boundary) and the float backend only.
+          The trace pass (`check_trace`) proves the same property on the
+          compiled jaxpr; ANA005 catches it at the source level, pre-jax.
 
 Suppress a finding with ``# noqa: ANA00x`` on the offending line.
 
@@ -45,12 +53,25 @@ RULES = {
               "seed/key",
     "ANA004": "public API function without a parameter-documenting "
               "docstring (core/pipeline.py, serve/, dist/)",
+    "ANA005": "float cast in int-domain module; integer kernels are exact "
+              "end to end — float belongs in core/quant.py or the float "
+              "backend",
 }
 
 #: files whose public surface ANA004 holds to documented-call standard:
 #: exact path suffixes and directory fragments under src/repro
 _DOC_SCOPE_SUFFIXES = ("core/pipeline.py",)
 _DOC_SCOPE_DIRS = ("/serve/", "/dist/")
+
+#: modules whose arithmetic must stay exact-integer (ANA005): the fused
+#: kernels and the word-level macro/ISA models
+_INT_DOMAIN_DIRS = ("/kernels/fused_snn_net/",)
+_INT_DOMAIN_SUFFIXES = ("core/isa.py", "core/macro.py")
+#: floating dtype attribute names on jnp/np (jnp.float32, np.bfloat16, ...)
+_FLOAT_DTYPE_ATTRS = {"float16", "float32", "float64", "float128",
+                      "bfloat16", "float_", "half", "single", "double"}
+#: module roots those attributes are flagged under
+_ARRAY_ROOTS = {"jnp", "np", "numpy", "jax", "jax_numpy"}
 
 #: the one module allowed to implement clamping
 _CLAMP_HOME = ("core", "quant.py")
@@ -105,10 +126,11 @@ def _mentions_v_const(node: ast.AST) -> bool:
 
 class _Visitor(ast.NodeVisitor):
     def __init__(self, path: str, clamp_home: bool,
-                 doc_scope: bool = False) -> None:
+                 doc_scope: bool = False, int_scope: bool = False) -> None:
         self.path = path
         self.clamp_home = clamp_home
         self.doc_scope = doc_scope
+        self.int_scope = int_scope
         self._class_public: list[bool] = []   # enclosing-class publicness
         self._fn_depth = 0
         self.found: list[LintViolation] = []
@@ -190,6 +212,32 @@ class _Visitor(ast.NodeVisitor):
                     and not node.keywords:
                 self._add(node, "ANA003", f"np.random.{fn}() without a "
                           "seed; " + RULES["ANA003"])
+        if (self.int_scope and chain and chain[-1] == "astype"
+                and node.args and self._float_dtype_arg(node.args[0])):
+            self._add(node, "ANA005",
+                      "astype to a float dtype; " + RULES["ANA005"])
+        self.generic_visit(node)
+
+    # ANA005 ---------------------------------------------------------------
+    @staticmethod
+    def _float_dtype_arg(node: ast.AST) -> bool:
+        """True for the astype args visit_Attribute can't see: the builtin
+        ``float`` and dtype strings ("float32", "bfloat16", ...).
+        jnp.float* / np.float* attribute args are caught by
+        visit_Attribute directly."""
+        if isinstance(node, ast.Name) and node.id == "float":
+            return True
+        return (isinstance(node, ast.Constant)
+                and isinstance(node.value, str)
+                and node.value.lstrip("b").startswith("float"))
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        if self.int_scope and node.attr in _FLOAT_DTYPE_ATTRS:
+            chain = _attr_chain(node)
+            if chain and chain[0] in _ARRAY_ROOTS:
+                self._add(node, "ANA005",
+                          f"{'.'.join(chain)} in an int-domain module; "
+                          + RULES["ANA005"])
         self.generic_visit(node)
 
 
@@ -214,8 +262,10 @@ def lint_source(source: str, path: str = "<string>") -> list:
     clamp_home = norm.endswith("/".join(_CLAMP_HOME))
     doc_scope = (norm.endswith(_DOC_SCOPE_SUFFIXES)
                  or any(d in norm for d in _DOC_SCOPE_DIRS))
+    int_scope = (norm.endswith(_INT_DOMAIN_SUFFIXES)
+                 or any(d in norm for d in _INT_DOMAIN_DIRS))
     tree = ast.parse(source, filename=path)
-    visitor = _Visitor(path, clamp_home, doc_scope)
+    visitor = _Visitor(path, clamp_home, doc_scope, int_scope)
     visitor.visit(tree)
     noqa = _noqa_lines(source)
     return [v for v in visitor.found

@@ -249,6 +249,51 @@ def mesh_padded_widths(widths: tuple, n_model: int) -> tuple:
     return tuple(-(-int(w) // n_model) * n_model for w in widths)
 
 
+def mesh_rowpartial_tick(vs, counts, frame, ws_l, *, widths: tuple,
+                         n_spiking: int, thresholds: tuple, leaks: tuple,
+                         neuron: str, clamp_mode: str, use_events: bool):
+    """One model-parallel frame tick — the AccV2V reduction across devices,
+    exposed at module level so `analysis.trace_check` can trace exactly the
+    dispatched body under an abstract mesh (`jax.make_jaxpr(...,
+    axis_env=...)`), no devices needed.
+
+    Each model shard owns a row tile of every layer's weights (``ws_l``,
+    already sliced by shard_map) and computes that tile's UNCLAMPED int32
+    partial V; the cross-shard integer psum is the word-level AccV2V cycle
+    (exact under mod-2^11 wrap: int32 addition is associative and clamp_v
+    composes after the full sum — the same single-clamp-after-partials
+    trick sub-tile gating uses), and the one clamp runs after the
+    reduction. ``vs``/``counts`` are the per-layer carry (``counts`` empty
+    unless ``use_events``); ``frame`` is the (B_local, pw[0]) int spike
+    frame. Returns ``(vs, counts, rasters_t)``.
+    """
+    from repro.core.isa import neuron_dynamics_int
+    from repro.core.quant import clamp_v
+    vs, counts = list(vs), list(counts)
+    cur = frame.astype(jnp.int32)                # (B_l, pw[0])
+    rasters_t = []
+    for i, w_l in enumerate(ws_l):
+        if use_events:
+            # path-independent per-row event counters on the LOGICAL
+            # input rows (the padded tail is junk)
+            counts[i] = counts[i] + jnp.sum(cur[:, :widths[i]], axis=0)
+        rows = w_l.shape[0]                      # pw[i] // n_model
+        lo = jax.lax.axis_index("model") * rows
+        blk = jax.lax.dynamic_slice_in_dim(cur, lo, rows, axis=1)
+        total = jax.lax.psum(blk @ w_l.astype(jnp.int32), "model")
+        if i < n_spiking:
+            v = clamp_v(vs[i] + total, clamp_mode)
+            vs[i], spk = neuron_dynamics_int(
+                v, neuron=neuron, threshold=jnp.int32(thresholds[i]),
+                leak=jnp.int32(leaks[i]), reset=jnp.int32(0),
+                clamp_mode=clamp_mode)
+            cur = spk.astype(jnp.int32)
+            rasters_t.append(spk.astype(jnp.int8))
+        else:                                    # unclamped readout
+            vs[i] = vs[i] + total
+    return tuple(vs), tuple(counts), tuple(rasters_t)
+
+
 @partial(jax.jit, static_argnames=("mesh", "thresholds", "leaks", "neuron",
                                    "clamp_mode", "block_b", "use_pallas",
                                    "interpret", "emit_rasters", "use_sparse",
@@ -311,18 +356,11 @@ def _fused_snn_net_mesh_core(spikes, ws, v_init, *, mesh, thresholds, leaks,
         return ([r[:, :B] for r in rasters], [v[:B] for v in v_finals],
                 skips)
 
-    # model parallelism: the AccV2V reduction across devices. Each model
-    # shard owns a row tile of every layer's weights and computes that
-    # tile's UNCLAMPED int32 partial V; the cross-shard integer psum is
-    # the word-level AccV2V cycle (exact under mod-2^11 wrap: int32
-    # addition is associative and clamp_v composes after the full sum —
-    # the same single-clamp-after-partials trick sub-tile gating uses),
-    # and the one clamp runs after the reduction. Widths pad to n_model
-    # multiples; padded output lanes may fire junk spikes (their V only
-    # integrates leak) but feed zero weight rows downstream, exactly the
-    # LANE-padding argument of the single-device wrapper.
-    from repro.core.isa import neuron_dynamics_int
-    from repro.core.quant import clamp_v
+    # model parallelism: the AccV2V reduction across devices — see
+    # `mesh_rowpartial_tick` (the traceable per-frame body). Widths pad to
+    # n_model multiples; padded output lanes may fire junk spikes (their V
+    # only integrates leak) but feed zero weight rows downstream, exactly
+    # the LANE-padding argument of the single-device wrapper.
     pw = mesh_padded_widths(widths, n_model)
     s = _pad_axis(s, 2, n_model)
     ws_p = [_pad_axis(_pad_axis(w.astype(jnp.int8), 0, n_model), 1, n_model)
@@ -331,32 +369,11 @@ def _fused_snn_net_mesh_core(spikes, ws, v_init, *, mesh, thresholds, leaks,
 
     def body(s_l, ws_l, vi_l):
         def tick(carry, frame):
-            vs, counts = list(carry[0]), list(carry[1])
-            cur = frame.astype(jnp.int32)            # (B_l, pw[0])
-            rasters_t = []
-            for i, w_l in enumerate(ws_l):
-                if use_events:
-                    # path-independent per-row event counters on the
-                    # LOGICAL input rows (the padded tail is junk)
-                    counts[i] = counts[i] + jnp.sum(cur[:, :widths[i]],
-                                                    axis=0)
-                rows = w_l.shape[0]                  # pw[i] // n_model
-                lo = jax.lax.axis_index("model") * rows
-                blk = jax.lax.dynamic_slice_in_dim(cur, lo, rows, axis=1)
-                total = jax.lax.psum(blk @ w_l.astype(jnp.int32), "model")
-                if i < n_spiking:
-                    v = clamp_v(vs[i] + total, clamp_mode)
-                    vs[i], spk = neuron_dynamics_int(
-                        v, neuron=neuron,
-                        threshold=jnp.int32(thresholds[i]),
-                        leak=jnp.int32(leaks[i]), reset=jnp.int32(0),
-                        clamp_mode=clamp_mode)
-                    cur = spk.astype(jnp.int32)
-                    rasters_t.append(spk.astype(jnp.int8))
-                else:                                # unclamped readout
-                    vs[i] = vs[i] + total
-            return ((tuple(vs), tuple(counts)),
-                    tuple(rasters_t) if emit_rasters else ())
+            vs, counts, rasters_t = mesh_rowpartial_tick(
+                carry[0], carry[1], frame, ws_l, widths=widths,
+                n_spiking=n_spiking, thresholds=thresholds, leaks=leaks,
+                neuron=neuron, clamp_mode=clamp_mode, use_events=use_events)
+            return ((vs, counts), rasters_t if emit_rasters else ())
 
         counts0 = tuple(jnp.zeros((widths[i],), jnp.int32)
                         for i in range(len(ws_l))) if use_events else ()

@@ -182,6 +182,25 @@ def test_compile_time_validation_default_on():
     assert program.timesteps == 2 ** 40                  # opt-out compiles
 
 
+def test_megastep_staged_frame_block_counted_and_bounded():
+    """A K-frame megastep pre-stages a (K, B, *in_shape) float32 frame
+    block next to the kernel operands: the per-K VMEM slope must include
+    it exactly, and a huge K is refused by name."""
+    from repro.analysis.kernel_contracts import _pad_lane
+    _, program = _program((17, 12, 5, 2), "if", "saturate", seed=0)
+    in_elems = int(np.prod(program.layers[0].state_shape))
+    r1 = check_kernel_contracts(program, "pallas", frames=1, streaming=True,
+                                emit_rasters=False)
+    r2 = check_kernel_contracts(program, "pallas", frames=2, streaming=True,
+                                emit_rasters=False)
+    per_k = r2.vmem_bytes - r1.vmem_bytes
+    # int8 spike block (padded fan-in) + staged float32 frames, per lane
+    assert per_k == r1.block_b * (_pad_lane(17) + in_elems * 4)
+    with pytest.raises(ContractError, match="vmem_budget"):
+        check_kernel_contracts(program, "pallas", frames=10 ** 6,
+                               streaming=True)
+
+
 def test_saturate_overflow_fanin_rejected_wrap_composes():
     """A fan-in so large the unclamped accumulator can pass int32 is
     rejected in saturate mode (clamping an overflowed value clips the
@@ -274,12 +293,28 @@ def test_backend_and_mode_contracts():
         check_kernel_contracts(program, "pallas", block_b=0)
 
 
-def test_validate_program_bundles_both_passes():
+def test_validate_program_bundles_all_passes():
+    from repro.analysis import HOST_BACKENDS, TRACE_BACKENDS
     _, program = _program((17, 12, 2), "if", "saturate", seed=0)
-    ranges, contracts = validate_program(program)
+    ranges, contracts, traces = validate_program(program)
     assert ranges.max_safe_frames is not None
     assert set(contracts) == {"pallas"}
     assert contracts["pallas"].vmem_bytes > 0
+    # trace pass default-on for int programs: every registered int backend
+    assert set(traces) == set(TRACE_BACKENDS) | set(HOST_BACKENDS)
+    for b in TRACE_BACKENDS:
+        assert traces[b].surfaces, b
+        assert {s.surface for s in traces[b].surfaces} == {
+            "batch", "step", "megastep", "mesh"}
+        assert traces[b].cost is not None and traces[b].cost.macs > 0
+    for b in HOST_BACKENDS:
+        # host executors have no jaxpr; bitmacro additionally requires
+        # wrap mode, so on this saturate program its contract refuses it
+        assert traces[b].checks[0].prop in ("host_backend",
+                                            "contract_skip")
+    # and off by request / for float programs
+    r2 = validate_program(program, trace=False)
+    assert r2[2] == {}
 
 
 # ---------------------------------------------------------------------------
@@ -342,6 +377,26 @@ def test_lint_unseeded_randomness():
     assert _rules("r = np.random.default_rng()\n") == ["ANA003"]
     assert _rules("r = np.random.default_rng(0)\n") == []
     assert _rules("r = np.random.default_rng(seed)\n") == []
+
+
+def test_lint_float_cast_in_int_domain():
+    kern = "src/repro/kernels/fused_snn_net/ops.py"
+    # every cast spelling is caught inside the int-domain scope
+    assert _rules("y = x.astype(jnp.float32)\n", path=kern) == ["ANA005"]
+    assert _rules('y = x.astype("float32")\n', path=kern) == ["ANA005"]
+    assert _rules("y = x.astype(float)\n", path=kern) == ["ANA005"]
+    assert _rules("y = jnp.zeros(4, dtype=np.bfloat16)\n", path=kern) == \
+        ["ANA005"]
+    assert _rules("y = x.astype(jnp.float32)\n",
+                  path="src/repro/core/isa.py") == ["ANA005"]
+    # int casts, float *annotations*, and out-of-scope modules are fine
+    assert _rules("y = x.astype(jnp.int32)\n", path=kern) == []
+    assert _rules("def f(x: float) -> float:\n    return x\n",
+                  path=kern) == []
+    assert _rules("y = x.astype(jnp.float32)\n",
+                  path="src/repro/core/quant.py") == []
+    assert _rules("y = x.astype(jnp.float32)  # noqa: ANA005\n",
+                  path=kern) == []
 
 
 def test_library_tree_is_lint_clean():

@@ -1,0 +1,154 @@
+"""The jaxpr trace-verification contract (repro.analysis.trace_check,
+DESIGN.md §7.5).
+
+Two claims under test:
+
+  * rejection — each of four deliberately broken kernels (a float
+    round-trip, a duplicated clamp, an out-of-bounds slice, a clamp
+    smuggled ahead of the cross-shard psum) is refused by a *named*
+    `TraceError` identifying the violated property and the offending
+    primitive, straight from its jaxpr;
+  * acceptance — every real backend x neuron x clamp-mode dispatch (and
+    the mesh tick under an abstract axis env) traces clean across all
+    surfaces, and the static cost model closes exactly against the ISA
+    instruction counts.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.analysis import (TRACE_BACKENDS, TraceError, TraceExpectation,
+                            check_closed_jaxpr, check_cost_closure,
+                            check_trace)
+from repro.configs.base import SpikingConfig
+from repro.configs.impulse_snn import SNNModelConfig
+from repro.core import pipeline, quant, snn
+
+
+def _program(layer_sizes, neuron, clamp_mode, timesteps=3, seed=0):
+    cfg = SNNModelConfig(
+        arch_id="trace-test", layer_sizes=layer_sizes,
+        spiking=SpikingConfig(neuron=neuron, timesteps=timesteps,
+                              threshold=1.0, leak=0.0625,
+                              w_bits=6, v_bits=11),
+        timesteps=timesteps)
+    params = snn.init_fc_snn(jax.random.PRNGKey(seed), cfg)
+    return pipeline.compile_network(cfg, params, domain="int",
+                                    clamp_mode=clamp_mode)
+
+
+# ---------------------------------------------------------------------------
+# rejection: injected defects, each refused by name
+# ---------------------------------------------------------------------------
+
+_X = jnp.zeros((4, 16), jnp.int32)
+_W = jnp.zeros((16, 8), jnp.int32)
+
+
+def test_float_roundtrip_rejected():
+    """An f32 cast inside an int dispatch silently loses bit-identity past
+    2**24 — the dtype pass names the float aval."""
+    def bad(x, w):
+        acc = (x.astype(jnp.float32) @ w.astype(jnp.float32))
+        return quant.clamp_v(acc.astype(jnp.int32), "saturate")
+
+    jx = jax.make_jaxpr(bad)(_X, _W)
+    with pytest.raises(TraceError, match="dtype: float"):
+        check_closed_jaxpr(jx, TraceExpectation(
+            where="bad:float", neuron="if", n_spiking=1))
+
+
+def test_duplicated_clamp_rejected():
+    """Two stacked V-word clamps change wrap semantics and hide range
+    bugs — the clamp pass counts heads against the ISA contract."""
+    def bad(x, w):
+        v = quant.clamp_v(jnp.dot(x, w, preferred_element_type=jnp.int32),
+                          "saturate")
+        return quant.clamp_v(v, "saturate")
+
+    jx = jax.make_jaxpr(bad)(_X, _W)
+    with pytest.raises(TraceError, match="clamp: 2 V-word clamp"):
+        check_closed_jaxpr(jx, TraceExpectation(
+            where="bad:double", neuron="if", n_spiking=1))
+
+
+def test_oob_slice_rejected():
+    """A gather/slice whose interval provably escapes its operand is a
+    silent wrong-weight read on hardware — the bounds pass names it."""
+    def bad(v):
+        seg = jax.lax.dynamic_slice(
+            v, (jnp.asarray(120, jnp.int32),), (16,))
+        return quant.clamp_v(seg, "saturate")
+
+    jx = jax.make_jaxpr(bad)(jnp.zeros((128,), jnp.int32))
+    with pytest.raises(TraceError, match="bounds"):
+        check_closed_jaxpr(jx, TraceExpectation(
+            where="bad:oob", neuron="if", n_spiking=1))
+
+
+def test_clamp_before_psum_rejected():
+    """Clamping the row-tile partial before the cross-shard psum breaks
+    the AccV2V exactness argument (clamp does not distribute over the
+    sum) — the dominance pass names the psum."""
+    def bad(x, w):
+        part = quant.clamp_v(
+            jnp.dot(x, w, preferred_element_type=jnp.int32), "saturate")
+        return jax.lax.psum(part, "model")
+
+    jx = jax.make_jaxpr(bad, axis_env=[("model", 2)])(_X, _W)
+    with pytest.raises(TraceError, match="upstream of the cross-shard psum"):
+        check_closed_jaxpr(jx, TraceExpectation(
+            where="bad:psum", neuron="if", n_spiking=1,
+            mesh_axes=(("model", 2),)))
+
+
+def test_unknown_backend_and_float_domain_rejected():
+    program = _program((9, 7, 2), "if", "saturate")
+    with pytest.raises(TraceError, match="no int-domain trace"):
+        check_trace(program, "no_such_backend")
+
+
+# ---------------------------------------------------------------------------
+# acceptance: real dispatches trace clean across the whole grid
+# ---------------------------------------------------------------------------
+
+@given(st.sampled_from([("if", "saturate"), ("lif", "wrap"),
+                        ("rmp", "saturate"), ("rmp", "wrap")]),
+       st.sampled_from(TRACE_BACKENDS))
+@settings(max_examples=8, deadline=None)
+def test_clean_dispatches_verify_on_every_surface(neuron_mode, backend):
+    neuron, clamp_mode = neuron_mode
+    """Property: every registered int backend's real dispatch verifies on
+    all four surfaces (batch/step/megastep/mesh) for every neuron x
+    clamp_mode, with a positive MAC count from the cost model."""
+    program = _program((9, 7, 5, 2), neuron, clamp_mode)
+    report = check_trace(program, backend, block_b=4,
+                         mesh={"data": 2, "model": 2})
+    assert {s.surface for s in report.surfaces} == \
+        {"batch", "step", "megastep", "mesh"}
+    assert all(s.clamps >= 0 for s in report.surfaces)
+    assert report.cost is not None and report.cost.macs > 0
+    props = {c.prop for c in report.checks}
+    assert {"dtype", "clamp_count", "clamp_dominance", "bounds"} <= props
+
+
+def test_cost_closure_exact_on_conv_program():
+    """The static dense-instruction count (trace geometry + SAME-padding
+    events) equals the executed pipeline count exactly, conv included."""
+    cfg = SNNModelConfig(
+        arch_id="trace-lenet", conv_spec=((4, 3, 1), (6, 3, 2)),
+        in_shape=(10, 10, 1), layer_sizes=(5 * 5 * 6, 16, 4),
+        spiking=SpikingConfig(neuron="if", timesteps=2, threshold=1.0,
+                              leak=0.0625, w_bits=6, v_bits=11),
+        timesteps=2, task="multiclass")
+    params = snn.init_lenet_snn(jax.random.PRNGKey(0), cfg)
+    program = pipeline.compile_network(cfg, params, domain="int",
+                                       clamp_mode="saturate")
+    check_cost_closure(program, batch=2)
+
+
+def test_cost_closure_exact_on_fc_program():
+    program = _program((17, 12, 5, 2), "rmp", "saturate")
+    check_cost_closure(program, batch=4)

@@ -26,6 +26,10 @@ Policy (what fails vs what only reports):
     ``GOPS/mm2``, ``ours/theirs``, ``err``) drifted more than
     ``--rel-tol``: both are exact functions of the executed program and
     the paper's calibration, not of machine load.
+  * FAIL — a traced cost-model number (``macs``, ``hbm_bytes``,
+    the benchmarks/analysis_check.py rows) changed AT ALL: these are
+    counted off the compiled jaxpr, so any drift is a real change to the
+    dispatched computation — zero tolerance, no knob.
   * REPORT-ONLY — wall-clock (``us_per_call``, ``dense_us``, ``speedup``):
     CI CPUs are noisy and interpret-mode timing is not the target signal.
     Workload statistics (sparsities, frequencies, frame counts) and rows
@@ -63,6 +67,10 @@ INSTR_KEYS = ("instr",)
 CALIBRATED_KEYS = ("energy", "E/op", "E/inference", "EDP", "measured_EDP",
                    "TOPS/W", "GOPS/mm2", "ours/theirs", "err", "reduction",
                    "measured_reduction", "reduction_vs_dense")
+# keys gated EXACTLY (zero tolerance): the trace cost model counts these
+# off the compiled jaxpr (analysis.check_trace), so any change is a real
+# change to the dispatched computation, never noise
+TRACE_KEYS = ("macs", "hbm_bytes")
 
 _NUM = re.compile(r"^[-+]?\d+(\.\d*)?([eE][-+]?\d+)?")
 
@@ -154,6 +162,12 @@ def compare(current: dict, baseline: dict, *, abs_tol: float = 0.05,
                     elif ci > bi + abs_tol:
                         notes.append(f"{name}: {key} improved "
                                      f"{bi:.3f} -> {ci:.3f}")
+                elif key in TRACE_KEYS:
+                    if ci != bi:
+                        failures.append(
+                            f"{name}: traced {key}={ci:g} != baseline "
+                            f"{bi:g} — the compiled dispatch changed "
+                            "(zero-tolerance key)")
                 elif key in INSTR_KEYS or key in CALIBRATED_KEYS:
                     tol = rel_tol_instr if key in INSTR_KEYS else rel_tol
                     # true relative drift — no absolute floor, EDP rows

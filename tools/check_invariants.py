@@ -6,13 +6,15 @@ committed config (DESIGN.md §"Static verification").
     python tools/check_invariants.py --lint-only   # AST lint, no jax import
     python tools/check_invariants.py --analyze-only
     python tools/check_invariants.py --mesh        # + mesh-contract rows
+    python tools/check_invariants.py --trace       # + jaxpr trace matrix
 
-Two halves, both blocking in CI:
+Three parts, all blocking in CI:
 
   * lint — `repro.analysis.lint` over src/repro: no bare `assert` in
     library code (ANA001: `-O` strips them), no ad-hoc clamping to the
     11-bit V word outside core/quant.py (ANA002), no unseeded randomness
-    in library paths (ANA003). Pure stdlib; runs without jax.
+    in library paths (ANA003), no float casts in int-domain modules
+    (ANA005). Pure stdlib; runs without jax.
   * analyze — compile every committed config (the two paper configs plus
     the benchmark/example geometries) and run the range pass + the
     kernel-contract pass for the backends each config is dispatched on.
@@ -22,6 +24,13 @@ Two halves, both blocking in CI:
     IMDB and LeNet5-mod geometries on the committed mesh shapes —
     statically, via dict-form meshes, so no forced host devices are
     needed.
+  * trace (``--trace``) — `analysis.check_trace` over every committed
+    config x every registered int backend: trace the real dispatch
+    (batch/step/megastep and the mesh tick under an abstract mesh) to a
+    jaxpr and prove dtype discipline, clamp count/placement/dominance,
+    index bounds, and determinism; then close the static cost model's
+    dense instruction counts exactly against the executed pipeline
+    counter for the IMDB and LeNet5-mod geometries.
 
 Exit status 0 iff every check passes; violations/errors are printed one
 per line.
@@ -156,6 +165,46 @@ def run_analysis(mesh: bool = False) -> int:
     return failures
 
 
+#: geometries whose static cost model must close exactly against the
+#: executed pipeline instruction counter
+CLOSURE_PROGRAMS = ("imdb", "lenet-bench")
+#: the abstract mesh the trace matrix verifies the mesh tick under
+TRACE_MESH = {"data": 2, "model": 2}
+
+
+def run_trace() -> int:
+    """Jaxpr trace matrix: every committed config x every registered int
+    backend, all four surfaces under `TRACE_MESH`; plus exact cost-model
+    closure for `CLOSURE_PROGRAMS`."""
+    from repro.analysis import (TRACE_BACKENDS, AnalysisError,
+                                check_cost_closure, check_trace)
+    failures = 0
+    for name, program, backends in _committed_programs():
+        for b in TRACE_BACKENDS:
+            try:
+                rep = check_trace(program, b, mesh=TRACE_MESH,
+                                  **backends.get(b, {}))
+            except AnalysisError as e:
+                failures += 1
+                print(f"trace {name} x {b}: FAIL {type(e).__name__}: {e}")
+                continue
+            surfs = ",".join(s.surface for s in rep.surfaces)
+            cost = rep.cost
+            print(f"trace {name} x {b}: ok — [{surfs}] "
+                  f"{len(rep.checks)} checks, macs={cost.macs}, "
+                  f"hbm_bytes={cost.hbm_bytes}")
+        if name in CLOSURE_PROGRAMS:
+            try:
+                check_cost_closure(program)
+            except AnalysisError as e:
+                failures += 1
+                print(f"trace {name} closure: FAIL {type(e).__name__}: {e}")
+                continue
+            print(f"trace {name} closure: ok — dense instruction counts "
+                  "close exactly against the executed pipeline")
+    return failures
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--lint-only", action="store_true")
@@ -163,12 +212,17 @@ def main(argv=None) -> None:
     ap.add_argument("--mesh", action="store_true",
                     help="also validate mesh-execution contract rows for "
                          "the IMDB and LeNet5-mod geometries")
+    ap.add_argument("--trace", action="store_true",
+                    help="also trace every committed config on every int "
+                         "backend and close the static cost model")
     args = ap.parse_args(argv)
     n = 0
     if not args.analyze_only:
         n += run_lint()
     if not args.lint_only:
         n += run_analysis(mesh=args.mesh)
+        if args.trace:
+            n += run_trace()
     if n:
         sys.exit(1)
     print("check_invariants: all clear")
